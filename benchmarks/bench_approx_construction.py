@@ -1,0 +1,37 @@
+"""Paper Figure 8 — approximate index construction time vs sample count.
+
+LSH pays off on the dense graph and not on the sparse one — the same
+qualitative shape as the paper's cochlea-vs-Orkut contrast.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import build_index
+from benchmarks.common import GRAPHS, load_graph, timeit, emit
+
+SAMPLES = (32, 64, 128, 256)
+
+
+def run():
+    lines = []
+    for gname in ("sparse-8k", "dense-2k"):
+        g = load_graph(gname)
+        t_exact = timeit(lambda: build_index(g, "cosine"), trials=2)
+        lines.append(emit(f"fig8/exact/{gname}", t_exact, f"m={g.m}"))
+        for k in SAMPLES:
+            t = timeit(lambda: build_index(
+                g, "cosine", approx="simhash", samples=k,
+                key=jax.random.PRNGKey(k)), trials=2)
+            lines.append(emit(
+                f"fig8/simhash/{gname}/k={k}", t,
+                f"speedup_vs_exact={t_exact / t:.2f}x"))
+        if not GRAPHS[gname]["weighted"]:
+            for k in SAMPLES:
+                t = timeit(lambda: build_index(
+                    g, "jaccard", approx="kpartition", samples=k,
+                    key=jax.random.PRNGKey(k)), trials=2)
+                lines.append(emit(
+                    f"fig8/kpartition/{gname}/k={k}", t,
+                    f"speedup_vs_exact={t_exact / t:.2f}x"))
+    return lines

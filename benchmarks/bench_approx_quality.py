@@ -1,0 +1,55 @@
+"""Paper Figures 9 & 10 — approximation quality vs construction cost.
+
+Figure 9: best modularity over a (μ, ε) grid for each sample count.
+Figure 10: ARI of the approximate clustering against the exact-σ clustering
+at the exact-σ modularity-maximizing parameters.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import build_index, query, modularity, adjusted_rand_index
+from benchmarks.common import load_graph, timeit, emit
+
+# miniature Σ grid (paper eq. 1 uses {2,4,…,2^18} × {.01,…,.99})
+MUS = (2, 4, 8, 16)
+EPSS = tuple(np.round(np.arange(0.15, 0.96, 0.1), 2))
+SAMPLES = (32, 64, 128, 256)
+
+
+def best_modularity(g, idx):
+    best = (-2.0, None)
+    for mu in MUS:
+        for eps in EPSS:
+            res = query(idx, g, mu, float(eps))
+            q = modularity(g, np.asarray(res.labels))
+            if q > best[0]:
+                best = (q, (mu, float(eps), np.asarray(res.labels)))
+    return best
+
+
+def run():
+    lines = []
+    for gname in ("planted-4k", "dense-2k"):
+        g = load_graph(gname)
+        idx_exact = build_index(g, "cosine")
+        t_exact = timeit(lambda: build_index(g, "cosine"), trials=1)
+        q_exact, (mu_star, eps_star, labels_exact) = best_modularity(g, idx_exact)
+        lines.append(emit(
+            f"fig9/exact/{gname}", t_exact,
+            f"best_modularity={q_exact:.4f};mu*={mu_star};eps*={eps_star}"))
+        for k in SAMPLES:
+            t = timeit(lambda: build_index(
+                g, "cosine", approx="simhash", samples=k,
+                key=jax.random.PRNGKey(k)), trials=1)
+            idx_a = build_index(g, "cosine", approx="simhash", samples=k,
+                                key=jax.random.PRNGKey(k))
+            q_a, _ = best_modularity(g, idx_a)
+            res_at_star = query(idx_a, g, mu_star, eps_star)
+            ari = adjusted_rand_index(labels_exact,
+                                      np.asarray(res_at_star.labels))
+            lines.append(emit(
+                f"fig9_10/simhash/{gname}/k={k}", t,
+                f"best_modularity={q_a:.4f};ari_vs_exact={ari:.4f}"))
+    return lines

@@ -1,0 +1,80 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/<mesh>/*.json and prints a markdown table with the
+three terms (compute / memory / collective, seconds), the dominant term,
+MODEL_FLOPS, the useful-compute ratio, and the roofline fraction.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(mesh_dir: str):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(mesh_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_ms(s):
+    return f"{s * 1e3:.2f}" if s is not None else "-"
+
+
+def table(recs, *, only_baseline=True):
+    rows = []
+    header = ("| arch | shape | status | compute ms | memory ms | coll ms | "
+              "dominant | MODEL_GF/dev | useful | roofline frac |")
+    sep = "|" + "---|" * 10
+    rows.append(header)
+    rows.append(sep)
+    for r in recs:
+        if r["status"] == "skip":
+            rows.append(f"| {r['arch']} | {r['shape']} | SKIP ({r['reason'][:40]}…) "
+                        "| - | - | - | - | - | - | - |")
+            continue
+        if r["status"] == "error":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | - | - | - | "
+                        "- | - | - | - |")
+            continue
+        t = r["roofline"]["terms_s"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok "
+            f"| {fmt_ms(t['compute_s'])} | {fmt_ms(t['memory_s'])} "
+            f"| {fmt_ms(t['collective_s'])} | {r['roofline']['dominant'].replace('_s','')} "
+            f"| {r['roofline']['model_flops_per_device'] / 1e9:.1f} "
+            f"| {r['roofline']['useful_ratio']:.3f} "
+            f"| {r['roofline']['roofline_fraction']:.4f} |")
+    return "\n".join(rows)
+
+
+def run(out_dir: str = "experiments/dryrun"):
+    lines = []
+    for mesh in ("pod16x16", "pod2x16x16"):
+        d = os.path.join(out_dir, mesh)
+        if not os.path.isdir(d):
+            continue
+        recs = [r for r in load(d)
+                if "__" in os.path.basename(r.get("arch", "") or "x")
+                or True]
+        # keep only untagged baseline artifacts
+        base = [r for r in recs if r.get("status")]
+        print(f"\n### mesh {mesh} ({len(base)} cells)\n")
+        print(table(base))
+        ok = [r for r in base if r["status"] == "ok"]
+        for r in ok:
+            lines.append(
+                f"roofline/{mesh}/{r['arch']}/{r['shape']},"
+                f"{max(r['roofline']['terms_s'].values()) * 1e6:.1f},"
+                f"dominant={r['roofline']['dominant']};"
+                f"frac={r['roofline']['roofline_fraction']:.4f}")
+    for l in lines:
+        print(l)
+    return lines
+
+
+if __name__ == "__main__":
+    run(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")

@@ -1,0 +1,33 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [section ...]
+Sections: fig5 fig6 fig8 fig9 roofline (default: all).
+Output: ``name,us_per_call,derived`` CSV lines.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    sections = sys.argv[1:] or ["fig5", "fig6", "fig8", "fig9", "roofline"]
+    print("name,us_per_call,derived")
+    if "fig5" in sections:
+        from benchmarks import bench_index_construction
+        bench_index_construction.run()
+    if "fig6" in sections or "fig7" in sections:
+        from benchmarks import bench_query
+        bench_query.run()
+    if "fig8" in sections:
+        from benchmarks import bench_approx_construction
+        bench_approx_construction.run()
+    if "fig9" in sections or "fig10" in sections:
+        from benchmarks import bench_approx_quality
+        bench_approx_quality.run()
+    if "roofline" in sections:
+        from benchmarks import roofline
+        roofline.run()
+
+
+if __name__ == "__main__":
+    main()

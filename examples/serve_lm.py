@@ -1,0 +1,72 @@
+"""Batched serving example: prefill a batch of prompts, stream greedy
+decode steps from the KV cache (the decode_32k cell's step, miniature).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch deepseek-v2-lite-16b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models import model as mdl
+from repro.train.serve_step import greedy_generate
+
+
+def reduced(arch: str):
+    cfg = get_config(arch)
+    over = dict(n_layers=4, d_model=128, d_ff=256, vocab=1024,
+                dtype="float32", q_chunk=64, attn_impl="auto")
+    if cfg.family == "moe":
+        over.update(n_heads=4, n_kv_heads=4, head_dim=32, n_experts=8,
+                    top_k=2, d_ff=96, d_ff_dense=256, capacity_factor=4.0)
+        if cfg.use_mla:
+            over.update(kv_lora_rank=64, qk_nope_dim=32, qk_rope_dim=16,
+                        v_head_dim=32)
+    elif cfg.family == "ssm":
+        over.update(ssm_state=16, ssm_head_dim=32, ssm_chunk=16)
+    elif cfg.family == "hybrid":
+        over.update(n_heads=4, n_kv_heads=2, head_dim=32, ssm_state=8,
+                    ssm_head_dim=32, ssm_chunk=16, global_layers=(0,),
+                    window=32, meta_tokens=8)
+    else:
+        over.update(n_heads=4, n_kv_heads=2, head_dim=32)
+    return cfg.scaled(**over)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-v2-lite-16b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = reduced(args.arch)
+    params = mdl.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0, cfg.vocab)
+    max_len = args.prompt_len + args.gen + 1
+
+    t0 = time.time()
+    out = greedy_generate(cfg, params, {"tokens": prompts}, steps=args.gen,
+                          max_len=max_len)
+    jax.block_until_ready(out)
+    dt = time.time() - t0
+    print(f"arch={args.arch} (reduced) batch={args.batch} "
+          f"prompt={args.prompt_len} generated={args.gen}")
+    print(f"wall {dt:.2f}s → {args.batch * args.gen / dt:.1f} tok/s")
+    print("sample generations:")
+    for row in np.asarray(out[:3]):
+        print("  ", row.tolist())
+    # sanity: deterministic across runs
+    out2 = greedy_generate(cfg, params, {"tokens": prompts}, steps=args.gen,
+                           max_len=max_len)
+    assert np.array_equal(np.asarray(out), np.asarray(out2))
+    print("deterministic: ok")
+
+
+if __name__ == "__main__":
+    main()

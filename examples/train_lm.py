@@ -1,0 +1,79 @@
+"""End-to-end training driver: a ~100M-param granite-family model for a few
+hundred steps under the fault-tolerant supervisor, with checkpointing and
+the stateless data pipeline.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--arch granite-8b]
+
+The model is the assigned granite-8b config scaled down to ~100M params
+(same family/shape rules); loss decreases visibly within a few hundred
+steps on the synthetic induction-mix data.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.data.pipeline import SyntheticLM
+from repro.dist.fault_tolerance import Supervisor, SupervisorConfig
+from repro.models import model as mdl
+from repro.optim import adamw
+from repro.train.train_step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # ~100M-param variant of the assigned arch family
+    cfg = get_config(args.arch).scaled(
+        n_layers=6, d_model=512, n_heads=8, n_kv_heads=4, head_dim=64,
+        d_ff=2048, vocab=8192, dtype="float32", q_chunk=128,
+        attn_impl="auto")
+    n = mdl.count_params(cfg)
+    print(f"arch={cfg.arch_id} (reduced) params={n/1e6:.1f}M")
+
+    params = mdl.init_params(cfg, jax.random.PRNGKey(0))
+    hp = adamw.AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)
+    opt = adamw.init(params)
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq,
+                       global_batch=args.batch, accum=1, seed=0)
+    step_fn = jax.jit(make_train_step(cfg, hp, accum=1))
+
+    losses = []
+
+    def on_step(step, metrics):
+        losses.append(float(metrics["ce"]))
+        if step % 20 == 0:
+            print(f"step {step:4d} ce={losses[-1]:.4f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"gnorm={float(metrics['grad_norm']):.3f}", flush=True)
+
+    sup = Supervisor(SupervisorConfig(ckpt_dir=args.ckpt_dir, ckpt_every=100))
+    sup.install_signal_handlers()
+
+    def get_batch(step):
+        return jax.tree.map(lambda x: jnp.asarray(x)[None],
+                            data.batch(step))
+
+    t0 = time.time()
+    state = sup.run({"params": params, "opt_state": opt, "step": 0},
+                    step_fn, get_batch, total_steps=args.steps,
+                    hooks={"on_step": on_step})
+    dt = time.time() - t0
+    print(f"\ndone: {int(state['step'])} steps in {dt:.1f}s "
+          f"({args.batch * args.seq * args.steps / dt:.0f} tok/s)")
+    print(f"loss: first10={np.mean(losses[:10]):.4f} "
+          f"last10={np.mean(losses[-10:]):.4f}")
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]), "loss did not drop"
+
+
+if __name__ == "__main__":
+    main()

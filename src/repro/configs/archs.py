@@ -1,0 +1,11 @@
+"""Import side-effect module: registers all 10 assigned architectures."""
+from repro.configs import whisper_small      # noqa: F401
+from repro.configs import pixtral_12b        # noqa: F401
+from repro.configs import granite_20b        # noqa: F401
+from repro.configs import yi_34b             # noqa: F401
+from repro.configs import granite_34b        # noqa: F401
+from repro.configs import granite_8b         # noqa: F401
+from repro.configs import mamba2_780m        # noqa: F401
+from repro.configs import deepseek_v2_lite_16b  # noqa: F401
+from repro.configs import moonshot_v1_16b_a3b   # noqa: F401
+from repro.configs import hymba_1_5b         # noqa: F401

@@ -1,0 +1,116 @@
+"""Model configuration dataclass + registry for the assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                   # dense | moe | ssm | hybrid | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+
+    head_dim: int = 0             # 0 → d_model // n_heads
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    first_dense_layers: int = 0   # leading layers with a dense FFN
+    d_ff_dense: int = 0           # dense-FFN width for those layers
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001
+    moe_impl: str = "pjit"        # pjit (auto-sharded dispatch) | ep (shard_map)
+    # --- MLA (deepseek-style) ---
+    use_mla: bool = False
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    mla_cache_mode: str = "full"  # full | latent (absorbed decode)
+    # --- SSM (mamba2 SSD) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    d_conv: int = 4
+    # --- hybrid (hymba) ---
+    global_layers: Tuple[int, ...] = ()
+    window: int = 0               # sliding-window size for non-global layers
+    meta_tokens: int = 0
+    # --- enc-dec (whisper) ---
+    n_enc_layers: int = 0
+    n_frames: int = 1500
+    frontend: str = "none"        # none | audio_stub | vision_stub
+    # --- numerics / execution ---
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    vocab_pad_to: int = 128
+    tie_embeddings: bool = True
+    act: str = "silu"             # silu | gelu
+    q_chunk: int = 2048           # chunked-attention q block
+    attn_impl: str = "auto"       # auto | dense | chunked
+    remat: bool = True
+    remat_policy: str = "full"    # full (save layer inputs) | dots (save dot outputs)
+    softmax_dtype: str = "f32"    # f32 | bf16 (reduced-precision score bufs)
+    ce_chunk: int = 0             # >0: chunked cross-entropy (no [B,S,V] logits)
+    unroll_layers: bool = True    # python-loop layers (exact FLOP accounting)
+
+    # ------------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def vocab_padded(self) -> int:
+        p = self.vocab_pad_to
+        return (self.vocab + p - 1) // p * p
+
+    @property
+    def d_inner(self) -> int:   # SSM inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def n_dec_layers(self) -> int:
+        return self.n_layers
+
+    @property
+    def compute_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def scaled(self, **overrides) -> "ModelConfig":
+        return dataclasses.replace(self, **overrides)
+
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.arch_id] = cfg
+    return cfg
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    import repro.configs.archs  # noqa: F401  (populate registry)
+
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]
+
+
+def all_arch_ids():
+    import repro.configs.archs  # noqa: F401
+
+    return sorted(_REGISTRY)

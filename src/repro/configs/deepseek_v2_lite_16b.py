@@ -1,0 +1,28 @@
+"""deepseek-v2-lite-16b [moe] — 27L, d=2048, 16H, MLA kv_lora=512
+(qk_nope=128, qk_rope=64, v=128), 64 routed experts top-6 + 2 shared,
+expert d_ff=1408, first layer dense (d_ff=10944), vocab=102400.
+[arXiv:2405.04434]  (assignment note: the '160 routed' aside matches
+DeepSeek-V2-236B; the Lite spec used here has 64 routed experts.)"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="deepseek-v2-lite-16b",
+    family="moe",
+    n_layers=27,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,              # per-expert width
+    vocab=102400,
+    n_experts=64,
+    n_shared_experts=2,
+    top_k=6,
+    first_dense_layers=1,
+    d_ff_dense=10944,
+    use_mla=True,
+    kv_lora_rank=512,
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    v_head_dim=128,
+    tie_embeddings=False,
+))

@@ -1,0 +1,14 @@
+"""granite-8b [dense code] — 36L, d=4096, 32H (GQA kv=8), d_ff=14336,
+vocab=49152. llama-arch. [arXiv:2405.04324]"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="granite-8b",
+    family="dense",
+    n_layers=36,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=49152,
+))

@@ -1,0 +1,25 @@
+"""hymba-1.5b [hybrid] — 32L, d=1600, 25H (GQA kv=5) parallel attn+mamba
+heads, d_ff=5504, ssm_state=16, vocab=32001. 3 global-attention layers
+(first/middle/last), sliding window 1024 elsewhere, 128 meta tokens.
+[arXiv:2411.13676]"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab=32001,
+    ssm_state=16,
+    ssm_expand=1,
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    d_conv=4,
+    global_layers=(0, 15, 31),
+    window=1024,
+    meta_tokens=128,
+))

@@ -1,0 +1,20 @@
+"""mamba2-780m [ssm] — 48L, d=1536, attn-free SSD (state-space duality),
+d_inner=3072, 48 ssm heads × 64, d_state=128, vocab=50280.
+[arXiv:2405.21060]"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="mamba2-780m",
+    family="ssm",
+    n_layers=48,
+    d_model=1536,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab=50280,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    d_conv=4,
+))

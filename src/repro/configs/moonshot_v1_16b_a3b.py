@@ -1,0 +1,22 @@
+"""moonshot-v1-16b-a3b (Moonlight-16B-A3B) [moe] — 48L(? per assignment),
+d=2048, 16H (GQA kv=16), 64 routed experts top-6 + 2 shared, expert
+d_ff=1408, vocab=163840. Standard GQA attention per the assigned spec.
+[hf:moonshotai/Moonlight-16B-A3B]"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="moonshot-v1-16b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab=163840,
+    n_experts=64,
+    n_shared_experts=2,
+    top_k=6,
+    first_dense_layers=1,
+    d_ff_dense=11264,
+    tie_embeddings=False,
+))

@@ -1,0 +1,19 @@
+"""pixtral-12b [vlm] backbone — 40L, d=5120, 32H (GQA kv=8), head_dim=128,
+d_ff=14336, vocab=131072. Vision encoder is a stub: input_specs() provides
+patch embeddings. [hf:mistralai/Pixtral-12B-2409]"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="pixtral-12b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab=131072,
+    rope_theta=1e9,
+    frontend="vision_stub",
+    tie_embeddings=False,
+))

@@ -1,0 +1,35 @@
+"""Assigned input-shape set (identical across the 10 LM archs).
+
+``long_500k`` requires sub-quadratic attention: it runs only for the
+SSM/hybrid archs (mamba2-780m, hymba-1.5b); the eight pure full-attention
+archs skip it — recorded per-cell by launch/dryrun.py and in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def cell_runs(family: str, shape_name: str) -> Tuple[bool, str]:
+    """(runs?, reason-if-skipped) for an (arch-family, shape) cell."""
+    if shape_name == "long_500k" and family not in SUBQUADRATIC_FAMILIES:
+        return False, "long_500k needs sub-quadratic attention (full-attention arch)"
+    return True, ""

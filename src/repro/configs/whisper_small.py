@@ -1,0 +1,20 @@
+"""whisper-small [audio] enc-dec — 12L enc + 12L dec, d=768, 12H MHA,
+d_ff=3072, vocab=51865. Conv/log-mel frontend is a stub: input_specs()
+provides precomputed 1500-frame embeddings. [arXiv:2212.04356]"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="whisper-small",
+    family="encdec",
+    n_layers=12,            # decoder layers
+    n_enc_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,          # MHA
+    d_ff=3072,
+    vocab=51865,
+    n_frames=1500,
+    frontend="audio_stub",
+    act="gelu",
+    tie_embeddings=True,
+))

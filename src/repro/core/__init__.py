@@ -1,0 +1,26 @@
+"""SCAN engine — the paper's contribution as a composable JAX module."""
+from repro.core.graph import (
+    CSRGraph,
+    from_edge_list,
+    graph_from_dense,
+    random_graph,
+    to_dense,
+)
+from repro.core.similarity import (
+    compute_similarities,
+    compute_similarities_dense,
+    edge_similarities_subset,
+)
+from repro.core.index import ScanIndex, build_index, get_cores
+from repro.core.query import ClusterResult, query, hubs_outliers
+from repro.core.lsh import (
+    approximate_similarities,
+    simhash_sketches,
+    simhash_edge_similarity,
+    minhash_sketches,
+    minhash_edge_similarity,
+    kpartition_sketches,
+    kpartition_edge_similarity,
+)
+from repro.core.quality import modularity, adjusted_rand_index
+from repro.core.connectivity import connected_components

@@ -1,0 +1,50 @@
+"""Parallel connectivity via min-label propagation + pointer jumping.
+
+The paper uses Gazit's O(log n)-span connectivity (theory) and concurrent
+union-find (implementation, §6.2). Neither CAS-loops nor work-stealing exist
+on TPU, so we use the standard vector-parallel equivalent: every vertex
+carries a label (initialized to its own id); each round scatter-mins
+neighbor labels across the active edge set, then pointer-jumps
+(``labels = labels[labels]``, twice) to compress chains. Each round is a
+constant number of gathers/scatters → O(log n) rounds w.h.p. on real graphs,
+matching the span target; a ``while_loop`` on the changed-flag guarantees
+exact convergence regardless.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def connected_components(
+    n: int,
+    eu: jax.Array,         # int32[E] edge endpoints (half-edges fine)
+    ev: jax.Array,         # int32[E]
+    edge_mask: jax.Array,  # bool[E] active edges
+    vertex_mask: jax.Array | None = None,  # bool[n] active vertices
+) -> jax.Array:
+    """Labels int32[n]: min vertex id of the component (only meaningful where
+    vertex_mask); inactive vertices keep label = own id."""
+    if vertex_mask is None:
+        vertex_mask = jnp.ones((n,), dtype=bool)
+
+    init = jnp.arange(n, dtype=jnp.int32)
+    big = jnp.int32(n)
+
+    def body(state):
+        labels, _ = state
+        lv = jnp.where(edge_mask, labels[ev], big)
+        # propagate min neighbor label into u
+        prop = jnp.full((n,), big, dtype=jnp.int32).at[eu].min(lv)
+        new = jnp.where(vertex_mask, jnp.minimum(labels, prop), labels)
+        # pointer jumping (path compression) — twice per round
+        new = new[new]
+        new = new[new]
+        changed = jnp.any(new != labels)
+        return new, changed
+
+    def cond(state):
+        return state[1]
+
+    labels, _ = jax.lax.while_loop(cond, body, (init, jnp.bool_(True)))
+    return labels

@@ -1,0 +1,177 @@
+"""SCAN index construction (paper §4.1, Algorithms 1–2).
+
+The index is the GS*-Index pair (neighbor order NO, core order CO), stored
+as flat segmented arrays (all O(m)):
+
+Neighbor order — the *closed* adjacency (each row = v plus its neighbors,
+σ(v,v)=1) sorted within each row by descending σ. Built with **one global
+sort** over all m2+n slots keyed by (row, -σ, ¬self, nbr) — exactly the
+paper's "prepend v to every entry and sort everything once" integer-sort
+trick (§4.1.2), mapped onto XLA's parallel sort.
+
+Core order — for every (v, μ) with 2 ≤ μ ≤ |N̄(v)| the core threshold
+θ(v, μ) is *already* the μ-th entry of NO[v], so CO is nothing more than a
+re-sort of the NO slots by (μ, -θ, v): one more global sort, Σ(|N̄(v)|−1) =
+2m entries, O(m) space — the same bound as GS*-Index.
+
+Construction is host-orchestrated (graph building, padding, chunk loops)
+around jit-compiled kernels; every array op is a bulk-parallel primitive
+(sort / gather / scatter / segment ops) with O(log) span.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import CSRGraph
+from repro.core import similarity as sim_mod
+from repro.core import lsh as lsh_mod
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ScanIndex:
+    """GS*-Index analogue. All arrays live on device; n/m2c/max_cdeg static."""
+
+    # --- closed CSR (rows include the self slot) ---
+    offsets_c: jax.Array    # int32[n+1]  row starts (offsets[v] + v)
+    # --- neighbor order (σ-descending within each row) ---
+    no_nbrs: jax.Array      # int32[m2c]
+    no_sims: jax.Array      # float32[m2c]
+    no_self: jax.Array      # bool[m2c]   marks the self slot
+    # --- core order (μ-major, θ-descending segments) ---
+    co_offsets: jax.Array   # int32[max_cdeg+2]  segment start per μ (CO[μ])
+    co_vertex: jax.Array    # int32[m2]
+    co_theta: jax.Array     # float32[m2]
+    # --- misc ---
+    cdeg: jax.Array         # int32[n] closed degrees
+    edge_sims: jax.Array    # float32[m2] σ per original half-edge (graph order)
+    n: int = dataclasses.field(metadata=dict(static=True))
+    m2c: int = dataclasses.field(metadata=dict(static=True))
+    max_cdeg: int = dataclasses.field(metadata=dict(static=True))
+
+    def core_threshold(self, mu: jax.Array) -> jax.Array:
+        """θ(v, μ) for all v, float32[n]; -inf where |N̄(v)| < μ."""
+        slot = self.offsets_c[:-1] + (mu - 1)
+        valid = self.cdeg >= mu
+        theta = self.no_sims[jnp.clip(slot, 0, self.m2c - 1)]
+        return jnp.where(valid, theta, -jnp.inf)
+
+
+@jax.jit
+def _build_orders(offsets, edge_u, nbrs, sims, n_arr):
+    """Global sorts for NO and CO. n_arr = jnp.arange(n)."""
+    n = n_arr.shape[0]
+    # ---- closed slot arrays: n self slots + m2 edge slots ----
+    rows = jnp.concatenate([n_arr, edge_u])
+    nbrs_c = jnp.concatenate([n_arr, nbrs])
+    sims_c = jnp.concatenate([jnp.ones((n,), jnp.float32), sims])
+    not_self = jnp.concatenate(
+        [jnp.zeros((n,), jnp.int32), jnp.ones((edge_u.shape[0],), jnp.int32)]
+    )
+    # one global sort: row asc, σ desc, self first, nbr asc
+    perm = jnp.lexsort((nbrs_c, not_self, -sims_c, rows))
+    no_nbrs = nbrs_c[perm]
+    no_sims = sims_c[perm]
+    no_self = not_self[perm] == 0
+    rows_sorted = rows[perm]
+
+    cdeg = jnp.diff(offsets) + 1
+    offsets_c = offsets + jnp.arange(n + 1, dtype=offsets.dtype)
+
+    # ---- core order: every slot with position μ ≥ 2 inside its row ----
+    m2c = no_nbrs.shape[0]
+    mu_of_slot = jnp.arange(m2c, dtype=jnp.int32) - offsets_c[rows_sorted] + 1
+    is_co = mu_of_slot >= 2
+    # key sort: μ asc, θ desc, v asc; inactive slots pushed to the end
+    mu_key = jnp.where(is_co, mu_of_slot, jnp.int32(2**30))
+    perm2 = jnp.lexsort((rows_sorted, -no_sims, mu_key))
+    co_vertex = rows_sorted[perm2][: m2c - n]
+    co_theta = no_sims[perm2][: m2c - n]
+    co_mu = mu_key[perm2][: m2c - n]
+    return (offsets_c, no_nbrs, no_sims, no_self, cdeg, co_vertex, co_theta, co_mu)
+
+
+def build_index(
+    g: CSRGraph,
+    measure: str = "cosine",
+    *,
+    approx: Optional[str] = None,     # None | "simhash" | "minhash" | "kpartition"
+    samples: int = 64,
+    key: Optional[jax.Array] = None,
+    degree_heuristic: bool = True,
+    sims: Optional[jax.Array] = None,  # precomputed σ override (testing)
+) -> ScanIndex:
+    """Construct the SCAN index (exact or LSH-approximate similarities)."""
+    if sims is None:
+        if approx is None:
+            sims = sim_mod.compute_similarities(g, measure)
+        else:
+            sims = lsh_mod.approximate_similarities(
+                g,
+                measure=measure,
+                method=approx,
+                samples=samples,
+                key=key if key is not None else jax.random.PRNGKey(0),
+                degree_heuristic=degree_heuristic,
+            )
+    sims = jnp.clip(sims.astype(jnp.float32), 0.0, 1.0)
+
+    n_arr = jnp.arange(g.n, dtype=jnp.int32)
+    (offsets_c, no_nbrs, no_sims, no_self, cdeg, co_vertex, co_theta, co_mu) = (
+        _build_orders(g.offsets, g.edge_u, g.nbrs, sims, n_arr)
+    )
+    max_cdeg = int(np.asarray(cdeg).max()) if g.n else 1
+    # segment starts per μ; CO[μ] = co_vertex[co_offsets[μ] : co_offsets[μ+1]]
+    counts = np.bincount(np.asarray(co_mu), minlength=max_cdeg + 1)
+    co_offsets = jnp.concatenate(
+        [
+            jnp.zeros((1,), jnp.int32),
+            jnp.asarray(np.cumsum(counts), dtype=jnp.int32),
+        ]
+    )
+    return ScanIndex(
+        offsets_c=offsets_c,
+        no_nbrs=no_nbrs,
+        no_sims=no_sims,
+        no_self=no_self,
+        co_offsets=co_offsets,
+        co_vertex=co_vertex,
+        co_theta=co_theta,
+        cdeg=cdeg,
+        edge_sims=sims,
+        n=g.n,
+        m2c=g.m2 + g.n,
+        max_cdeg=max_cdeg,
+    )
+
+
+def get_cores(index: ScanIndex, mu: int, eps: float) -> jax.Array:
+    """bool[n] core mask via the CO[μ] prefix (paper Algorithm 3).
+
+    CO[μ] is θ-descending, so cores are the prefix with θ ≥ ε — located with
+    binary search (the vectorized stand-in for the paper's doubling search).
+    """
+    mu = jnp.asarray(mu, jnp.int32)
+    eps = jnp.asarray(eps, jnp.float32)
+    lo = index.co_offsets[jnp.clip(mu, 0, index.max_cdeg)]
+    hi = index.co_offsets[jnp.clip(mu + 1, 0, index.max_cdeg + 1)]
+    # prefix end = first position in [lo, hi) with θ < ε (θ descending).
+    # Traced segment bounds preclude jnp.searchsorted on a slice; the masked
+    # argmax below is the same O(log)-span binary-search stand-in.
+    idx = jnp.arange(index.co_vertex.shape[0], dtype=jnp.int32)
+    in_seg = (idx >= lo) & (idx < hi)
+    below = in_seg & (index.co_theta < eps)
+    first_below = jnp.where(jnp.any(below), jnp.argmax(below), hi)
+    core_slots = in_seg & (idx < first_below)
+    mask = (
+        jnp.zeros((index.n,), jnp.int32)
+        .at[index.co_vertex]
+        .max(core_slots.astype(jnp.int32), mode="drop")
+    ) > 0
+    valid_mu = (mu >= 2) & (mu <= index.max_cdeg)
+    return mask & valid_mu

@@ -1,0 +1,206 @@
+"""LSH-approximate similarities (paper §5, §6.3).
+
+* SimHash (cosine, weighted or unweighted): sketch(v) = sign(N̄_w(v) · R),
+  R ∈ ℝ^{n×k} i.i.d. N(0,1). The kn dot products are one (sparse) matmul —
+  on TPU this is the Pallas ``simhash`` kernel's blocked MXU matmul; here the
+  sparse gather/segment-sum form is used. Bits are packed into uint32 lanes;
+  per-edge comparison is XOR + popcount (``lax.population_count``), the
+  Pallas ``hamming`` kernel's job on TPU.
+  Estimate: θ̂ = π·(#differing bits)/k, σ̂ = cos(θ̂)  — Theorem 5.2 applies.
+
+* MinHash (Jaccard, unweighted): k independent universal hashes
+  h_i(x) = (aᵢ·x + bᵢ) mod p; sketch(v)ᵢ = min_{x∈N̄(v)} hᵢ(x).
+  Estimate: fraction of matching coordinates — Theorem 5.3 applies.
+
+* k-partition MinHash / one-permutation hashing (fast path, §6.3): a single
+  permutation π, k buckets, per-bucket min of π over N̄(v); empty buckets
+  densified by circular borrowing (rotation). No tail bound (paper says the
+  same), lower variance in practice.
+
+Degree heuristic (§6.3): approximate only edges whose *both* endpoints have
+closed degree above a threshold (k for cosine, 3k/2 for Jaccard); all other
+edges get exact similarities, computed only on that compacted subset.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import CSRGraph
+from repro.core import similarity as sim_mod
+
+
+# --------------------------------------------------------------------------
+# SimHash
+# --------------------------------------------------------------------------
+def simhash_sketches(g: CSRGraph, samples: int, key: jax.Array) -> jax.Array:
+    """Packed sketches uint32[n, ceil(k/32)] of closed weighted neighborhoods."""
+    k_pad = (samples + 31) // 32 * 32
+    words = []
+    for w0 in range(0, k_pad, 512):  # chunk the sample axis to bound memory
+        kw = min(512, k_pad - w0)
+        sub = jax.random.fold_in(key, w0)
+        words.append(_simhash_chunk(g.edge_u, g.nbrs, g.wgts, sub, g.n, kw, samples - w0))
+    return jnp.concatenate(words, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "kw", "valid"))
+def _simhash_chunk(edge_u, nbrs, wgts, key, n, kw, valid):
+    r = jax.random.normal(key, (n, kw), dtype=jnp.float32)
+    if valid < kw:  # zero out padding samples → identical bits on both sides
+        r = r * (jnp.arange(kw) < valid)
+    s = r + jax.ops.segment_sum(wgts[:, None] * r[nbrs], edge_u, num_segments=n)
+    bits = (s >= 0.0) & (jnp.arange(kw) < max(valid, 0))
+    bits = bits.reshape(n, kw // 32, 32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))[None, None, :]
+    return jnp.sum(bits.astype(jnp.uint32) * weights, axis=-1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("samples",))
+def simhash_edge_similarity(
+    sketches: jax.Array, eu: jax.Array, ev: jax.Array, samples: int
+) -> jax.Array:
+    """cos(π·hamming/k) per edge from packed sketches."""
+    x = jnp.bitwise_xor(sketches[eu], sketches[ev])
+    diff = jnp.sum(jax.lax.population_count(x), axis=-1).astype(jnp.float32)
+    theta = jnp.pi * diff / samples
+    return jnp.cos(theta)
+
+
+# --------------------------------------------------------------------------
+# standard MinHash — k independent uniformly random permutations (§2.1.2)
+# --------------------------------------------------------------------------
+def minhash_sketches(g: CSRGraph, samples: int, key: jax.Array) -> jax.Array:
+    """Sketches int32[n, k]: sketch(v)ᵢ = min_{x∈N̄(v)} πᵢ(x)."""
+    out = []
+    for s0 in range(0, samples, 64):  # chunk the sample axis
+        kc = min(64, samples - s0)
+        keys = jax.random.split(jax.random.fold_in(key, s0), kc)
+        out.append(_minhash_chunk(g.edge_u, g.nbrs, keys, g.n))
+    return jnp.concatenate(out, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _minhash_chunk(edge_u, nbrs, keys, n):
+    perms = jax.vmap(lambda k: jax.random.permutation(k, n))(keys)  # [kc, n]
+    perms = perms.astype(jnp.int32).T                               # [n, kc]
+    big = jnp.int32(np.iinfo(np.int32).max)
+    mins = (
+        jnp.full((n, perms.shape[1]), big, dtype=jnp.int32)
+        .at[edge_u]
+        .min(perms[nbrs])
+    )
+    return jnp.minimum(mins, perms)
+
+
+@jax.jit
+def minhash_edge_similarity(sketches, eu, ev):
+    return jnp.mean(sketches[eu] == sketches[ev], axis=-1).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# k-partition MinHash (one-permutation hashing + rotation densification)
+# --------------------------------------------------------------------------
+def kpartition_sketches(g: CSRGraph, samples: int, key: jax.Array) -> jax.Array:
+    perm = jax.random.permutation(key, g.n).astype(jnp.int32)
+    return _kpartition_build(g.edge_u, g.nbrs, perm, g.n, samples)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "k"))
+def _kpartition_build(edge_u, nbrs, perm, n, k):
+    big = jnp.int32(np.iinfo(np.int32).max)
+
+    def bucket_val(x):
+        px = perm[x]
+        # (px * k) // n in int32 — requires n·k < 2^31 (documented constraint)
+        return (px * jnp.int32(k)) // jnp.int32(n), px
+
+    bk_n, val_n = bucket_val(nbrs)
+    bk_s, val_s = bucket_val(jnp.arange(n, dtype=jnp.int32))
+    flat = jnp.full((n * k,), big)
+    flat = flat.at[edge_u * k + bk_n].min(val_n)
+    flat = flat.at[jnp.arange(n, dtype=jnp.int32) * k + bk_s].min(val_s)
+    sk = flat.reshape(n, k)
+
+    # rotation densification: an empty bin borrows from a non-empty bin to
+    # its right (circular), offset by borrow distance so bins densified from
+    # different distances never spuriously match. Doubling ⇒ log2(k) rounds.
+    val = sk
+    dist = jnp.where(sk == big, big, 0)
+    t = 0
+    while (1 << t) < k:
+        s = 1 << t
+        cand_val = jnp.roll(val, -s, axis=1)
+        cand_dist = jnp.roll(dist, -s, axis=1)
+        take = (val == big) & (cand_val != big)
+        val = jnp.where(take, cand_val, val)
+        dist = jnp.where(take, cand_dist + s, dist)
+        t += 1
+    # encode (value, borrow distance) as one int32; requires (n+1)·k < 2^31
+    return val + jnp.int32(n + 1) * dist
+
+
+@jax.jit
+def kpartition_edge_similarity(sketches, eu, ev):
+    return jnp.mean(sketches[eu] == sketches[ev], axis=-1).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# combined approximate-σ entry point with the §6.3 degree heuristic
+# --------------------------------------------------------------------------
+def approximate_similarities(
+    g: CSRGraph,
+    *,
+    measure: str = "cosine",
+    method: str = "simhash",
+    samples: int = 64,
+    key: Optional[jax.Array] = None,
+    degree_heuristic: bool = True,
+) -> jax.Array:
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if method == "simhash":
+        if measure != "cosine":
+            raise ValueError("simhash approximates cosine similarity")
+        sk = simhash_sketches(g, samples, key)
+        approx = simhash_edge_similarity(sk, g.edge_u, g.nbrs, samples)
+        thr = samples
+    elif method in ("minhash", "kpartition"):
+        if measure != "jaccard":
+            raise ValueError("minhash approximates jaccard similarity")
+        if method == "minhash":
+            sk = minhash_sketches(g, samples, key)
+            approx = minhash_edge_similarity(sk, g.edge_u, g.nbrs)
+        else:
+            sk = kpartition_sketches(g, samples, key)
+            approx = kpartition_edge_similarity(sk, g.edge_u, g.nbrs)
+        thr = (3 * samples) // 2
+    else:
+        raise ValueError(f"unknown LSH method {method!r}")
+
+    if not degree_heuristic:
+        return jnp.clip(approx, 0.0, 1.0)
+
+    # §6.3: exact σ for edges where either endpoint is low-degree; the exact
+    # pass runs only on the compacted subset (real work saving, not a mask).
+    cdeg = np.asarray(g.closed_degrees())
+    eu_h, ev_h = np.asarray(g.edge_u), np.asarray(g.nbrs)
+    high = cdeg > thr
+    use_exact = ~(high[eu_h] & high[ev_h])
+    idx = np.nonzero(use_exact)[0]
+    if len(idx) == 0:
+        return jnp.clip(approx, 0.0, 1.0)
+    exact_subset = sim_mod.edge_similarities_subset(
+        g,
+        jnp.asarray(eu_h[idx]),
+        jnp.asarray(ev_h[idx]),
+        jnp.asarray(np.asarray(g.wgts)[idx]),
+        measure=measure,
+    )
+    out = np.asarray(approx, dtype=np.float32).copy()
+    out[idx] = np.asarray(exact_subset)
+    return jnp.clip(jnp.asarray(out), 0.0, 1.0)

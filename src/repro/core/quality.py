@@ -1,0 +1,65 @@
+"""Clustering quality measures (paper §7.2): modularity and adjusted Rand index.
+
+Host-side numpy — these are evaluation metrics, not training-path compute.
+Unclustered vertices (label < 0) are treated as singleton clusters, matching
+the paper's §7.3.4 convention.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import CSRGraph
+
+
+def _canonical_labels(labels: np.ndarray) -> np.ndarray:
+    """Map labels to [0, C); each unclustered vertex becomes its own cluster."""
+    labels = np.asarray(labels).copy()
+    n = len(labels)
+    un = labels < 0
+    labels[un] = n + np.arange(np.sum(un))
+    _, out = np.unique(labels, return_inverse=True)
+    return out
+
+
+def modularity(g: CSRGraph, labels: np.ndarray, weighted: bool = False) -> float:
+    """Newman modularity Q = Σ_c (e_c/m - (d_c/2m)²) (weighted form optional)."""
+    labels = _canonical_labels(labels)
+    eu = np.asarray(g.edge_u)
+    ev = np.asarray(g.nbrs)
+    w = np.asarray(g.wgts) if weighted else np.ones(g.m2, dtype=np.float64)
+    two_m = float(w.sum())  # both half-edge copies ⇒ = 2m (or Σ2w)
+    if two_m == 0:
+        return 0.0
+    c = int(labels.max()) + 1
+    within = np.zeros(c)
+    np.add.at(within, labels[eu], np.where(labels[eu] == labels[ev], w, 0.0))
+    deg = np.zeros(c)
+    np.add.at(deg, labels[eu], w)
+    return float(np.sum(within / two_m - (deg / two_m) ** 2))
+
+
+def adjusted_rand_index(labels_a: np.ndarray, labels_b: np.ndarray) -> float:
+    """ARI between two clusterings (paper §7.2 formula)."""
+    a = _canonical_labels(labels_a)
+    b = _canonical_labels(labels_b)
+    n = len(a)
+    assert len(b) == n
+    ca, cb = a.max() + 1, b.max() + 1
+    cont = np.zeros((ca, cb), dtype=np.int64)
+    np.add.at(cont, (a, b), 1)
+
+    def comb2(x):
+        x = np.asarray(x, dtype=np.float64)
+        return x * (x - 1) / 2.0
+
+    sum_ij = comb2(cont).sum()
+    sum_a = comb2(cont.sum(axis=1)).sum()
+    sum_b = comb2(cont.sum(axis=0)).sum()
+    total = comb2(np.array([n]))[0]
+    if total == 0:
+        return 1.0
+    expected = sum_a * sum_b / total
+    max_index = (sum_a + sum_b) / 2.0
+    if max_index == expected:
+        return 1.0
+    return float((sum_ij - expected) / (max_index - expected))

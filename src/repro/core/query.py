@@ -1,0 +1,105 @@
+"""Cluster queries against the SCAN index (paper §4.2, Algorithms 3–5).
+
+Given (μ, ε):
+  1. cores         — prefix of CO[μ] with θ ≥ ε              (Algorithm 3)
+  2. similar edges — per-row NO prefixes with σ ≥ ε on cores (Alg. 5 line 4)
+  3. clusters      — connectivity over core–core ε-similar edges (line 6)
+  4. borders       — non-core neighbors attach to an ε-similar core
+                     (Algorithm 4; deterministic variant of §7.3.4:
+                      most-similar core, ties to the lower core id)
+
+The whole query is a single jit with (μ, ε) as traced scalars — one compiled
+artifact answers every parameter setting, which is the point of the index.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.connectivity import connected_components
+from repro.core.graph import CSRGraph
+from repro.core.index import ScanIndex, get_cores
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ClusterResult:
+    labels: jax.Array      # int32[n]; component id (min core vertex id) or -1
+    is_core: jax.Array     # bool[n]
+    n_clusters: jax.Array  # int32 scalar
+
+
+@functools.partial(jax.jit, static_argnames=())
+def query(index: ScanIndex, g: CSRGraph, mu, eps) -> ClusterResult:
+    """SCAN clustering for parameters (μ, ε) from the index."""
+    mu = jnp.asarray(mu, jnp.int32)
+    eps = jnp.asarray(eps, jnp.float32)
+
+    is_core = get_cores(index, mu, eps)
+
+    # ε-similar half-edges incident on cores, in original graph order.
+    eu, ev, esim = g.edge_u, g.nbrs, index.edge_sims
+    sim_ok = esim >= eps
+    core_u = is_core[eu]
+    core_v = is_core[ev]
+    core_core = sim_ok & core_u & core_v
+
+    labels0 = connected_components(
+        index.n, eu, ev, edge_mask=core_core, vertex_mask=is_core
+    )
+    labels = jnp.where(is_core, labels0, jnp.int32(-1))
+
+    # ---- border assignment (Algorithm 4, deterministic scatter variant) ----
+    # candidate half-edges: u core, v non-core, σ ≥ ε ⇒ v joins cluster[u]
+    border_edge = sim_ok & core_u & ~core_v
+    neg = jnp.float32(-1.0)
+    # best similarity per border vertex
+    best_sim = (
+        jnp.full((index.n,), neg)
+        .at[ev]
+        .max(jnp.where(border_edge, esim, neg), mode="drop")
+    )
+    # among edges achieving best_sim: lowest core id wins (deterministic)
+    tie = border_edge & (esim >= best_sim[ev]) & (best_sim[ev] > neg)
+    big = jnp.int32(index.n)
+    best_core = (
+        jnp.full((index.n,), big)
+        .at[ev]
+        .min(jnp.where(tie, eu, big), mode="drop")
+    )
+    has_border = best_core < big
+    border_label = labels0[jnp.clip(best_core, 0, index.n - 1)]
+    labels = jnp.where(~is_core & has_border, border_label, labels)
+
+    # count distinct clusters = number of cores that are their own label
+    n_clusters = jnp.sum(is_core & (labels == jnp.arange(index.n)))
+    return ClusterResult(labels=labels, is_core=is_core, n_clusters=n_clusters)
+
+
+@jax.jit
+def hubs_outliers(g: CSRGraph, labels: jax.Array):
+    """Classify unclustered vertices (paper §4.3).
+
+    hub     — neighbors in ≥ 2 distinct clusters
+    outlier — unclustered, neighbors in ≤ 1 cluster
+    Returns (is_hub bool[n], is_outlier bool[n]).
+    """
+    n = labels.shape[0]
+    nbr_label = labels[g.nbrs]
+    valid = nbr_label >= 0
+    big = jnp.int32(n)
+    lo = (
+        jnp.full((n,), big).at[g.edge_u].min(jnp.where(valid, nbr_label, big))
+    )
+    hi = (
+        jnp.full((n,), jnp.int32(-1))
+        .at[g.edge_u]
+        .max(jnp.where(valid, nbr_label, jnp.int32(-1)))
+    )
+    unclustered = labels < 0
+    is_hub = unclustered & (hi > lo) & (hi >= 0)
+    is_outlier = unclustered & ~is_hub
+    return is_hub, is_outlier

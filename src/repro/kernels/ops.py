@@ -1,0 +1,115 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Each wrapper pads inputs to block multiples, dispatches to the kernel
+(interpret=True on CPU — the TPU target compiles the same kernel body), and
+slices the result back. These are the entry points the SCAN engine and the
+serving path call; `ref.py` holds the pure-jnp oracles used by tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import CSRGraph, to_dense
+from repro.kernels.triangle_count import masked_gram
+from repro.kernels.simhash import simhash_pack
+from repro.kernels.hamming import hamming_cosine
+from repro.kernels.flash_attention import flash_attention
+
+_ON_TPU = jax.default_backend() == "tpu"
+_INTERPRET = not _ON_TPU
+
+
+def _pad_to(x: jax.Array, mult: int, axes) -> jax.Array:
+    pads = [(0, 0)] * x.ndim
+    for ax in axes:
+        rem = (-x.shape[ax]) % mult
+        pads[ax] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def edge_similarities_gram(
+    g: CSRGraph, measure: str = "cosine", block: int = 128
+) -> jax.Array:
+    """Exact σ per half-edge via the Pallas masked-gram kernel.
+
+    Dense-adjacency path: the TPU-native analogue of Algorithm 1 for graphs
+    whose adjacency fits in memory (padded n ≤ a few 10⁴ per shard; larger
+    graphs use the CSR searchsorted path in core.similarity).
+    """
+    weighted = measure == "cosine"
+    w = to_dense(g, closed=True, weighted=weighted)
+    mask = (to_dense(g, closed=True, weighted=False) > 0).astype(jnp.float32)
+    n0 = w.shape[0]
+    w = _pad_to(w, block, (0, 1))
+    mask = _pad_to(mask, block, (0, 1))
+    prod = masked_gram(w, mask, bm=block, bn=block, bk=block,
+                       interpret=_INTERPRET)[:n0, :n0]
+    dots = prod[g.edge_u, g.nbrs]
+    if measure == "cosine":
+        norms = jnp.sqrt(prod[jnp.arange(n0), jnp.arange(n0)])
+        return dots / (norms[g.edge_u] * norms[g.nbrs])
+    cdeg = g.closed_degrees().astype(jnp.float32)
+    union = cdeg[g.edge_u] + cdeg[g.nbrs] - dots
+    return dots / union
+
+
+def simhash_sketches_kernel(
+    g: CSRGraph, samples: int, key: jax.Array, block: int = 128
+) -> jax.Array:
+    """Packed SimHash sketches uint32[n, ceil(k/32)] via the Pallas kernel."""
+    w = to_dense(g, closed=True, weighted=True)
+    n0 = w.shape[0]
+    k_pad = max((samples + 127) // 128 * 128, 128)
+    r = jax.random.normal(key, (n0, k_pad), dtype=jnp.float32)
+    # zero padding samples so both endpoints agree on padded bits
+    r = r * (jnp.arange(k_pad) < samples)
+    w = _pad_to(w, block, (0, 1))
+    r = _pad_to(r, block, (0,))
+    sk = simhash_pack(w, r, bm=block, bs=128, bk=block, interpret=_INTERPRET)
+    return sk[:n0, : (samples + 31) // 32]
+
+
+def simhash_edge_similarity_kernel(
+    sketches: jax.Array, eu: jax.Array, ev: jax.Array, samples: int,
+    block: int = 1024
+) -> jax.Array:
+    """σ̂ per edge from packed sketches via the Pallas hamming kernel."""
+    e0 = eu.shape[0]
+    su = _pad_to(sketches[eu], block, (0,))
+    sv = _pad_to(sketches[ev], block, (0,))
+    out = hamming_cosine(su, sv, samples=samples, be=block,
+                         interpret=_INTERPRET)
+    return out[:e0]
+
+
+def attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+    window: int = 0, bq: int = 128, bkv: int = 128
+) -> jax.Array:
+    """Flash attention over [bh, s, d] tensors (pads s and d to blocks)."""
+    bh, sq, d0 = q.shape
+    skv = k.shape[1]
+    d_pad = max((d0 + 127) // 128 * 128, 128)
+    qp = _pad_to(q, d_pad, (2,))
+    kp = _pad_to(k, d_pad, (2,))
+    vp = _pad_to(v, d_pad, (2,))
+    sq_p = (sq + bq - 1) // bq * bq
+    skv_p = (skv + bkv - 1) // bkv * bkv
+    # pad kv with zeros & mask via window/causal handled by padding at end:
+    # padded kv positions get score NEG_INF only under causal mask when
+    # k_pos > q_pos; for non-causal we must not attend padding — extend the
+    # causal guard by masking padded keys through an additive bias is not
+    # supported here, so we require exact multiples for non-causal use.
+    if not causal:
+        assert sq % bq == 0 and skv % bkv == 0, "pad seq for non-causal"
+    qp = _pad_to(qp, sq_p, (1,))[:, :sq_p]
+    kp = _pad_to(kp, skv_p, (1,))[:, :skv_p]
+    vp = _pad_to(vp, skv_p, (1,))[:, :skv_p]
+    # scale uses true d0, not padded width (padding contributes zero dot)
+    out = flash_attention(
+        qp * (d_pad ** 0.5) / (d0 ** 0.5), kp, vp,
+        causal=causal, window=window, bq=bq, bkv=bkv, interpret=_INTERPRET,
+    )
+    return out[:, :sq, :d0]

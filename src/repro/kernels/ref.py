@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel. Tests assert allclose."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_gram_ref(w: jax.Array, mask: jax.Array) -> jax.Array:
+    return (w @ w.T) * mask
+
+
+def simhash_pack_ref(w: jax.Array, r: jax.Array) -> jax.Array:
+    s = w @ r
+    bits = (s >= 0.0).astype(jnp.uint32)
+    n, k = bits.shape
+    lanes = bits.reshape(n, k // 32, 32)
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(lanes * weights[None, None, :], axis=-1, dtype=jnp.uint32)
+
+
+def hamming_cosine_ref(sk_u: jax.Array, sk_v: jax.Array, samples: int) -> jax.Array:
+    x = jnp.bitwise_xor(sk_u, sk_v)
+    diff = jnp.sum(jax.lax.population_count(x), axis=-1).astype(jnp.float32)
+    return jnp.cos(jnp.pi * diff / samples)
+
+
+def flash_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+    window: int = 0
+) -> jax.Array:
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) / (d ** 0.5)
+    sq, skv = s.shape[-2], s.shape[-1]
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v).astype(q.dtype)

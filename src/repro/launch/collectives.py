@@ -1,0 +1,112 @@
+"""Parse collective ops (+ their data volumes) out of optimized HLO text.
+
+``compiled.cost_analysis()`` does not expose collective bytes, so the
+roofline's collective term comes from here: every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op's result shape is read
+off the (post-SPMD, per-device) HLO and converted into per-device link bytes
+with a ring model:
+
+    all-reduce       2·b·(g−1)/g      (reduce-scatter + all-gather halves)
+    all-gather       b·(g−1)/g        (b = full gathered result bytes)
+    reduce-scatter   b·(g−1)          (b = scattered result bytes; input g·b)
+    all-to-all       b·(g−1)/g
+    collective-permute  b
+
+g = participating group size, parsed from replica_groups (explicit
+{{...},...} or iota [n,g]<=[...] form).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+          "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_EXPL_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    size = _DTYPE_BYTES.get(dtype)
+    if size is None:
+        return 0
+    total = size
+    if dims:
+        for d in dims.split(","):
+            total *= int(d)
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _EXPL_GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _volume(kind: str, result_bytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if kind == "all-gather":
+        return result_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return result_bytes * (g - 1)
+    if kind == "all-to-all":
+        return result_bytes * (g - 1) / g
+    if kind == "collective-permute":
+        return float(result_bytes)
+    return 0.0
+
+
+def parse_collectives(hlo_text: str) -> Dict:
+    """→ {"ops": [...], "per_kind": {...}, "total_link_bytes": float,
+          "count": int}. Bytes are PER DEVICE (HLO is post-partitioning)."""
+    ops: List[Dict] = []
+    for line in hlo_text.splitlines():
+        # match "<result-shapes> <kind>(" or "<kind>-start("
+        found = None
+        for kind in _KINDS:
+            if f" {kind}(" in line or f" {kind}-start(" in line:
+                found = kind
+                break
+        if not found or "-done" in line.split("=")[0]:
+            continue
+        head = line.split(f" {found}", 1)[0]
+        shapes = _SHAPE_RE.findall(head)
+        if not shapes:
+            continue
+        rb = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        g = _group_size(line)
+        ops.append({
+            "kind": found, "result_bytes": rb, "group": g,
+            "link_bytes": _volume(found, rb, g),
+        })
+    per_kind = defaultdict(lambda: {"count": 0, "result_bytes": 0.0,
+                                    "link_bytes": 0.0})
+    for op in ops:
+        e = per_kind[op["kind"]]
+        e["count"] += 1
+        e["result_bytes"] += op["result_bytes"]
+        e["link_bytes"] += op["link_bytes"]
+    top = sorted(ops, key=lambda o: -o["link_bytes"])[:8]
+    return {
+        "ops": ops,
+        "per_kind": dict(per_kind),
+        "total_link_bytes": float(sum(o["link_bytes"] for o in ops)),
+        "count": len(ops),
+        "top_ops": top,
+    }

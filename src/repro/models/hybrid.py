@@ -1,0 +1,192 @@
+"""Hymba — hybrid-head decoder: every layer runs attention heads and SSM
+(mamba) heads *in parallel* on the same normalized input, combines the two
+paths after per-path normalization, then a gated MLP.
+
+Layout per assignment: 32L, d=1600, 25 attn heads (GQA kv=5, head_dim 64),
+SSM heads 25×64 (state 16), 128 learned meta tokens prepended to every
+sequence (attention sinks), global attention in layers {0, 15, 31}, sliding
+window 1024 elsewhere.
+
+Decode caches: global layers keep a full KV cache; SWA layers keep a
+**ring buffer** of (meta + window) slots with a position-tracking array —
+O(window) memory regardless of sequence length, which is what makes the
+long_500k cell legal for this arch. The SSM path carries O(1) state.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssm as S
+
+
+def _is_global(cfg, i: int) -> bool:
+    return i in cfg.global_layers
+
+
+def hybrid_layer_init(key, cfg) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    return {
+        "attn": L.gqa_init(ks[0], cfg),
+        "ssm": S.mamba_block_init(ks[1], cfg),
+        "mlp": L.mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.compute_dtype,
+                          cfg.act),
+        "ln1": L.rmsnorm_init(cfg.d_model, cfg.compute_dtype),
+        "ln2": L.rmsnorm_init(cfg.d_model, cfg.compute_dtype),
+        "norm_attn": L.rmsnorm_init(cfg.d_model, cfg.compute_dtype),
+        "norm_ssm": L.rmsnorm_init(cfg.d_model, cfg.compute_dtype),
+    }
+
+
+def hybrid_init(cfg, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    return {
+        "emb": L.dense_init(ks[0], cfg.vocab_padded, cfg.d_model,
+                            cfg.compute_dtype),
+        "meta": L.dense_init(ks[1], cfg.meta_tokens, cfg.d_model,
+                             cfg.compute_dtype) if cfg.meta_tokens else None,
+        "ln_f": L.rmsnorm_init(cfg.d_model, cfg.compute_dtype),
+        "layers": [hybrid_layer_init(ks[i + 2], cfg)
+                   for i in range(cfg.n_layers)],
+    }
+
+
+def _layer_apply(p, x, cfg, i):
+    xin = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    window = 0 if _is_global(cfg, i) else cfg.window
+    att = L.gqa_apply(p["attn"], xin, cfg, causal=True, window=window,
+                      sink=cfg.meta_tokens)
+    ssm = S.mamba_block_apply(p["ssm"], xin, cfg)
+    mixed = 0.5 * (L.rmsnorm(att, p["norm_attn"], cfg.norm_eps)
+                   + L.rmsnorm(ssm, p["norm_ssm"], cfg.norm_eps))
+    h = x + mixed
+    return h + L.mlp_apply(p["mlp"], L.rmsnorm(h, p["ln2"], cfg.norm_eps),
+                           cfg.act)
+
+
+def _with_meta(params, tokens, cfg):
+    x = params["emb"][tokens]
+    if cfg.meta_tokens:
+        b = x.shape[0]
+        meta = jnp.broadcast_to(params["meta"][None],
+                                (b, cfg.meta_tokens, cfg.d_model))
+        x = jnp.concatenate([meta.astype(x.dtype), x], axis=1)
+    return x
+
+
+def hybrid_forward(params, tokens, cfg, return_hidden=False):
+    x = _with_meta(params, tokens, cfg)
+    for i, p in enumerate(params["layers"]):
+        f = L.remat(_layer_apply, cfg, static_argnums=(2, 3))
+        x = L.sp(f(p, x, cfg, i))
+    x = x[:, cfg.meta_tokens:]                  # drop meta outputs
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    if return_hidden:
+        return x, params["emb"].T
+    return x @ params["emb"].T
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+def hybrid_init_cache(cfg, batch: int, max_len: int, dtype):
+    """max_len counts generated/prompt tokens EXCLUDING meta tokens."""
+    meta = cfg.meta_tokens
+    caches = []
+    for i in range(cfg.n_layers):
+        size = meta + (max_len if _is_global(cfg, i) else cfg.window)
+        caches.append({
+            "k": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.hd), dtype),
+            "pos": jnp.full((size,), -1, jnp.int32),
+            "ssm": S.ssm_cache_leaf(cfg, batch, dtype),
+        })
+    return caches
+
+
+def _ring_slots(cfg, i, positions):
+    """Cache slots for absolute positions (meta tokens at slots [0, meta))."""
+    meta = cfg.meta_tokens
+    if _is_global(cfg, i):
+        return positions
+    return jnp.where(positions < meta, positions,
+                     meta + (positions - meta) % cfg.window)
+
+
+def hybrid_prefill(params, tokens, cfg, max_len: int):
+    b, s = tokens.shape
+    x = _with_meta(params, tokens, cfg)
+    total = x.shape[1]
+    positions = jnp.arange(total)
+    cache = hybrid_init_cache(cfg, b, max_len, cfg.compute_dtype)
+    for i, p in enumerate(params["layers"]):
+        xin = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        window = 0 if _is_global(cfg, i) else cfg.window
+        q, k, v = L.gqa_project(p["attn"], xin, cfg)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        att = L.attention(q, k, v, causal=True, window=window,
+                          sink=cfg.meta_tokens, impl=cfg.attn_impl,
+                          q_chunk=cfg.q_chunk, remat_chunks=False)
+        # write to cache: all positions for global layers; meta + the last
+        # `window` positions (distinct ring slots) for SWA layers
+        if _is_global(cfg, i):
+            wpos = positions
+        else:
+            keep = min(cfg.window, total - cfg.meta_tokens)
+            wpos = jnp.concatenate(
+                [jnp.arange(cfg.meta_tokens), total - keep + jnp.arange(keep)])
+        slots = _ring_slots(cfg, i, wpos)
+        cache[i]["k"] = cache[i]["k"].at[:, slots].set(k[:, wpos])
+        cache[i]["v"] = cache[i]["v"].at[:, slots].set(v[:, wpos])
+        cache[i]["pos"] = cache[i]["pos"].at[slots].set(wpos.astype(jnp.int32))
+
+        ssm_out, ssm_cache = S.mamba_block_prefill(p["ssm"], xin, cfg)
+        cache[i]["ssm"] = ssm_cache
+        mixed = 0.5 * (
+            L.rmsnorm(att.reshape(b, total, -1) @ p["attn"]["wo"],
+                      p["norm_attn"], cfg.norm_eps)
+            + L.rmsnorm(ssm_out, p["norm_ssm"], cfg.norm_eps))
+        x = x + mixed
+        x = x + L.mlp_apply(p["mlp"], L.rmsnorm(x, p["ln2"], cfg.norm_eps),
+                            cfg.act)
+    x = L.rmsnorm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    return (x @ params["emb"].T)[:, 0], cache
+
+
+def hybrid_decode_step(params, cache, token, pos, cfg):
+    """pos = absolute position INCLUDING meta offset (i.e. meta + #tokens)."""
+    b = token.shape[0]
+    x = params["emb"][token][:, None]
+    positions = jnp.full((1,), pos, jnp.int32)
+    new_cache = []
+    for i, p in enumerate(params["layers"]):
+        xin = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        window = 0 if _is_global(cfg, i) else cfg.window
+        q, k, v = L.gqa_project(p["attn"], xin, cfg)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        slot = _ring_slots(cfg, i, positions)[0]
+        ck = jax.lax.dynamic_update_slice_in_dim(cache[i]["k"], k, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache[i]["v"], v, slot, axis=1)
+        cpos = jax.lax.dynamic_update_slice_in_dim(
+            cache[i]["pos"], positions, slot, axis=0)
+        valid = cpos >= 0
+        if window > 0:
+            valid &= (cpos > pos - window) | (cpos < cfg.meta_tokens)
+        att = L.decode_attention(q, ck, cv, valid)
+        ssm_out, ssm_cache = S.mamba_block_decode(p["ssm"], xin,
+                                                  cache[i]["ssm"], cfg)
+        mixed = 0.5 * (
+            L.rmsnorm(att.reshape(b, 1, -1) @ p["attn"]["wo"],
+                      p["norm_attn"], cfg.norm_eps)
+            + L.rmsnorm(ssm_out, p["norm_ssm"], cfg.norm_eps))
+        x = x + mixed
+        x = x + L.mlp_apply(p["mlp"], L.rmsnorm(x, p["ln2"], cfg.norm_eps),
+                            cfg.act)
+        new_cache.append({"k": ck, "v": cv, "pos": cpos, "ssm": ssm_cache})
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return (x @ params["emb"].T)[:, 0], new_cache

@@ -1,0 +1,318 @@
+"""Shared model layers: norms, RoPE, MLPs, attention (dense / chunked /
+decode), KV caches. Pure-functional: params are plain dict pytrees.
+
+Attention memory policy: ``dense`` materializes (S_q × S_kv) scores — fine
+for short sequences and smoke tests; ``chunked`` python-loops over q-blocks
+(unrolled ⇒ exact dry-run FLOP accounting) with per-chunk ``jax.checkpoint``
+so training at 32k keeps O(S·q_chunk) live scores. ``auto`` picks by size.
+
+Sharding notes (see dist/sharding.py): attention computes with KV repeated
+to the full head count so the q-head axis is the tensor-parallel axis when
+divisible; the repeat of a replicated KV tensor to a head-sharded layout is
+local slicing, not communication.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+# --------------------------------------------------------------------------
+# sequence-parallel activation constraint (set by the launcher; models call
+# sp() on the residual stream at layer boundaries — no-op unless enabled)
+# --------------------------------------------------------------------------
+_SP_SPEC = None
+
+
+def set_sp_spec(spec) -> None:
+    """spec: PartitionSpec for [B, S, D] activations (e.g. P(dp,'model',None))
+    or None to disable. Resolved under the ambient mesh at trace time."""
+    global _SP_SPEC
+    _SP_SPEC = spec
+
+
+def sp(x: jax.Array) -> jax.Array:
+    if _SP_SPEC is None or x.ndim != 3:
+        return x
+    return jax.lax.with_sharding_constraint(x, _SP_SPEC)
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else (1.0 / d_in) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype):
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: [S] or [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [d/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, d/2]
+    cos = jnp.cos(ang)[..., :, None, :]                # [..., S, 1, d/2]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP (gated-SiLU or GELU)
+# --------------------------------------------------------------------------
+def mlp_init(key, d: int, d_ff: int, dtype, act: str) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d, d_ff, dtype),
+         "w_down": dense_init(ks[1], d_ff, d, dtype)}
+    if act == "silu":  # gated
+        p["w_gate"] = dense_init(ks[2], d, d_ff, dtype)
+    return p
+
+
+def mlp_apply(p: Params, x: jax.Array, act: str) -> jax.Array:
+    up = x @ p["w_up"]
+    if act == "silu":
+        h = jax.nn.silu(x @ p["w_gate"]) * up
+    else:
+        h = jax.nn.gelu(up)
+    return h @ p["w_down"]
+
+
+# --------------------------------------------------------------------------
+# attention core
+# --------------------------------------------------------------------------
+NEG_INF = -1e30
+
+
+def _mask_bias(q_pos, k_pos, causal, window, sink):
+    """Additive bias [Sq, Sk] from position vectors."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        in_win = k_pos[None, :] > q_pos[:, None] - window
+        if sink > 0:
+            in_win |= k_pos[None, :] < sink
+        ok &= in_win
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+_SOFTMAX_DTYPE = jnp.float32
+
+
+def set_softmax_dtype(dtype) -> None:
+    """f32 (default) or bf16 score buffers. The bf16 path subtracts the row
+    max (computed in f32) before exp and accumulates the denominator in f32
+    — the PaLM-style reduced-precision softmax. Set by the launcher for the
+    §Perf memory-term experiments."""
+    global _SOFTMAX_DTYPE
+    _SOFTMAX_DTYPE = dtype
+
+
+def _sdpa_dense(q, k, v, bias):
+    """q:[B,Sq,H,D] k/v:[B,Sk,H,D] bias:[Sq,Sk] → [B,Sq,H,D]."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    if _SOFTMAX_DTYPE == jnp.float32:
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+        s = s + bias[None, None]
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    # reduced-precision score buffers: [B,H,Sq,Sk] stays bf16
+    s = (jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+         + bias[None, None].astype(q.dtype))
+    m = jnp.max(s.astype(jnp.float32), axis=-1, keepdims=True)
+    p = jnp.exp(s - m.astype(s.dtype))                     # bf16 buffer
+    denom = jnp.sum(p, axis=-1, keepdims=True, dtype=jnp.float32)
+    p = (p / denom.astype(p.dtype))
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def attention(
+    q: jax.Array,           # [B, Sq, H, D]
+    k: jax.Array,           # [B, Sk, KV, D]
+    v: jax.Array,           # [B, Sk, KV, D]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    sink: int = 0,
+    impl: str = "auto",
+    q_chunk: int = 2048,
+    remat_chunks: bool = True,
+    q_offset: int = 0,      # q positions start here (prefill continuation)
+) -> jax.Array:
+    """Multi-head attention with GQA repeat, masks, and chunking."""
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    if kv != h:  # GQA: repeat kv to full head count (local slice under TP)
+        rep = h // kv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    sk = k.shape[1]
+    if impl == "auto":
+        impl = "dense" if sq * sk <= 4096 * 4096 or sq < q_chunk else "chunked"
+
+    q_pos = jnp.arange(sq) + q_offset
+    k_pos = jnp.arange(sk)
+    if impl == "dense" or sq <= q_chunk:
+        bias = _mask_bias(q_pos, k_pos, causal, window, sink)
+        return _sdpa_dense(q, k, v, bias)
+
+    # chunked: unrolled python loop over q blocks (remainder chunk allowed);
+    # each block rematerialized
+    def block(qc, q_pos_c, k, v):
+        bias = _mask_bias(q_pos_c, k_pos, causal, window, sink)
+        return _sdpa_dense(qc, k, v, bias)
+
+    if remat_chunks:
+        block = jax.checkpoint(block)
+    outs = []
+    for lo in range(0, sq, q_chunk):
+        hi = min(lo + q_chunk, sq)
+        qc = jax.lax.slice_in_dim(q, lo, hi, axis=1)
+        outs.append(block(qc, q_pos[lo:hi], k, v))
+    return jnp.concatenate(outs, axis=1)
+
+
+def decode_attention(
+    q: jax.Array,            # [B, 1, H, D]
+    k_cache: jax.Array,      # [B, S, KV, D]
+    v_cache: jax.Array,      # [B, S, KV, D]
+    valid: jax.Array,        # bool[B, S] or [S] — which cache slots count
+) -> jax.Array:
+    b, _, h, d = q.shape
+    kv = k_cache.shape[2]
+    if kv != h:
+        rep = h // kv
+        k_cache = jnp.repeat(k_cache, rep, axis=2)
+        v_cache = jnp.repeat(v_cache, rep, axis=2)
+    scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k_cache).astype(jnp.float32) * scale
+    if valid.ndim == 1:
+        bias = jnp.where(valid, 0.0, NEG_INF)[None, None, None, :]
+    else:
+        bias = jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]
+    p = jax.nn.softmax(s + bias, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v_cache)
+
+
+# --------------------------------------------------------------------------
+# standard GQA attention block (init/apply/decode)
+# --------------------------------------------------------------------------
+def gqa_init(key, cfg) -> Params:
+    ks = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.hd
+    return {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, cfg.compute_dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, cfg.compute_dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, cfg.compute_dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, cfg.compute_dtype),
+    }
+
+
+def gqa_project(p, x, cfg):
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def gqa_apply(
+    p: Params, x: jax.Array, cfg, *, causal=True, window=0, sink=0,
+    positions=None, rope=True, kv_source: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill). kv_source → cross-attn."""
+    b, s, _ = x.shape
+    src = kv_source if kv_source is not None else x
+    hd = cfg.hd
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (src @ p["wk"]).reshape(b, src.shape[1], cfg.n_kv_heads, hd)
+    v = (src @ p["wv"]).reshape(b, src.shape[1], cfg.n_kv_heads, hd)
+    if rope:
+        pos = positions if positions is not None else jnp.arange(s)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos if kv_source is None else jnp.arange(src.shape[1]),
+                       cfg.rope_theta)
+    out = attention(
+        q, k, v, causal=causal, window=window, sink=sink,
+        impl=cfg.attn_impl, q_chunk=cfg.q_chunk,
+    )
+    return out.reshape(b, s, cfg.n_heads * hd) @ p["wo"]
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+def remat(f, cfg, static_argnums=()):
+    """jax.checkpoint with the configured policy."""
+    if not cfg.remat:
+        return f
+    policy = None
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+    return jax.checkpoint(f, static_argnums=static_argnums, policy=policy)
+
+
+def cross_entropy_chunked(
+    hidden: jax.Array,     # [B, S, D] final hidden states
+    head: jax.Array,       # [D, Vp]
+    labels: jax.Array,     # [B, S]
+    vocab: int,
+    chunk: int,
+) -> jax.Array:
+    """CE without materializing [B,S,Vp] f32 logits: per-seq-chunk logits +
+    logsumexp, rematerialized in backward. HBM traffic drops from O(B·S·V)
+    to O(B·chunk·V) live."""
+    b, s, d = hidden.shape
+    vp = head.shape[1]
+    assert s % chunk == 0, (s, chunk)
+    pad_bias = jnp.where(jnp.arange(vp) < vocab, 0.0, NEG_INF)
+
+    def piece(h_c, l_c):
+        logits = (h_c @ head).astype(jnp.float32) + pad_bias
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l_c[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - gold)
+
+    piece = jax.checkpoint(piece)
+    total = jnp.float32(0.0)
+    for i in range(s // chunk):
+        total = total + piece(
+            jax.lax.slice_in_dim(hidden, i * chunk, (i + 1) * chunk, axis=1),
+            jax.lax.slice_in_dim(labels, i * chunk, (i + 1) * chunk, axis=1))
+    return total / (b * s)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  vocab: int) -> jax.Array:
+    """Mean CE over tokens; logits [B,S,Vp] (padded vocab masked out)."""
+    vp = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if vp > vocab:
+        pad_bias = jnp.where(jnp.arange(vp) < vocab, 0.0, NEG_INF)
+        logits = logits + pad_bias
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

@@ -1,0 +1,185 @@
+"""Unified model API over the five families + dry-run input specs.
+
+batch dicts:
+  * LM families:  {"tokens" [B,S] i32, "labels" [B,S] i32}
+  * [vlm] stub:   {"embeddings" [B,S,d] (precomputed patch+text), "labels"}
+  * [audio] stub: {"frames" [B,F,d] (precomputed log-mel embeddings),
+                   "tokens", "labels"}
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSpec
+from repro.models import transformer as T
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models import hybrid as H
+
+
+# --------------------------------------------------------------------------
+# dispatch
+# --------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key: jax.Array):
+    return {
+        "dense": T.dense_init,
+        "encdec": T.encdec_init,
+        "moe": M.moe_init,
+        "ssm": S.ssm_init,
+        "hybrid": H.hybrid_init,
+    }[cfg.family](cfg, key)
+
+
+def forward(cfg: ModelConfig, params, batch) -> Tuple[jax.Array, jax.Array]:
+    """→ (logits [B,S,Vp], aux_loss scalar)."""
+    zero = jnp.float32(0.0)
+    if cfg.family == "dense":
+        logits = T.dense_forward(params, batch.get("tokens"), cfg,
+                                 embeddings=batch.get("embeddings"))
+        return logits, zero
+    if cfg.family == "encdec":
+        return T.encdec_forward(params, batch, cfg), zero
+    if cfg.family == "moe":
+        return M.moe_forward(params, batch["tokens"], cfg)
+    if cfg.family == "ssm":
+        return S.ssm_forward(params, batch["tokens"], cfg), zero
+    if cfg.family == "hybrid":
+        return H.hybrid_forward(params, batch["tokens"], cfg), zero
+    raise ValueError(cfg.family)
+
+
+def forward_hidden(cfg: ModelConfig, params, batch):
+    """→ ((hidden [B,S,D], head [D,Vp]), aux) — for chunked cross-entropy."""
+    zero = jnp.float32(0.0)
+    if cfg.family == "dense":
+        out = T.dense_forward(params, batch.get("tokens"), cfg,
+                              embeddings=batch.get("embeddings"),
+                              return_hidden=True)
+        return out, zero
+    if cfg.family == "encdec":
+        return T.encdec_forward(params, batch, cfg, return_hidden=True), zero
+    if cfg.family == "moe":
+        return M.moe_forward(params, batch["tokens"], cfg, return_hidden=True)
+    if cfg.family == "ssm":
+        return S.ssm_forward(params, batch["tokens"], cfg,
+                             return_hidden=True), zero
+    if cfg.family == "hybrid":
+        return H.hybrid_forward(params, batch["tokens"], cfg,
+                                return_hidden=True), zero
+    raise ValueError(cfg.family)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    dt = cfg.compute_dtype
+    return {
+        "dense": T.dense_init_cache,
+        "encdec": T.encdec_init_cache,
+        "moe": M.moe_init_cache,
+        "ssm": S.ssm_init_cache,
+        "hybrid": H.hybrid_init_cache,
+    }[cfg.family](cfg, batch, max_len, dt)
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len: int):
+    if cfg.family == "dense":
+        return T.dense_prefill(params, batch.get("tokens"), cfg, max_len,
+                               embeddings=batch.get("embeddings"))
+    if cfg.family == "encdec":
+        return T.encdec_prefill(params, batch, cfg, max_len)
+    if cfg.family == "moe":
+        return M.moe_prefill(params, batch["tokens"], cfg, max_len)
+    if cfg.family == "ssm":
+        return S.ssm_prefill(params, batch["tokens"], cfg, max_len)
+    if cfg.family == "hybrid":
+        return H.hybrid_prefill(params, batch["tokens"], cfg, max_len)
+    raise ValueError(cfg.family)
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos):
+    return {
+        "dense": T.dense_decode_step,
+        "encdec": T.encdec_decode_step,
+        "moe": M.moe_decode_step,
+        "ssm": S.ssm_decode_step,
+        "hybrid": H.hybrid_decode_step,
+    }[cfg.family](params, cache, token, pos, cfg)
+
+
+# --------------------------------------------------------------------------
+# analytic parameter counts (for MODEL_FLOPS — no allocation)
+# --------------------------------------------------------------------------
+def count_params(cfg: ModelConfig) -> int:
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(shapes)
+                   if hasattr(l, "shape")))
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Per-token active params (= total for non-MoE)."""
+    total = count_params(cfg)
+    if cfg.family != "moe":
+        return total
+    n_moe_layers = cfg.n_layers - cfg.first_dense_layers
+    per_expert = 3 * cfg.d_model * cfg.d_ff
+    routed_total = n_moe_layers * cfg.n_experts * per_expert
+    routed_active = n_moe_layers * cfg.top_k * per_expert
+    return total - routed_total + routed_active
+
+
+# --------------------------------------------------------------------------
+# dry-run input specs (ShapeDtypeStruct — no device allocation)
+# --------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Stand-ins for every model input of the given shape cell.
+
+    For ``decode`` cells the cache spec is derived via jax.eval_shape over
+    init_cache (KV of length seq_len), matching the assignment: one new
+    token against a seq_len cache.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    cdt = cfg.compute_dtype
+
+    def tok(shape_):
+        return jax.ShapeDtypeStruct(shape_, i32)
+
+    if shape.kind == "train":
+        batch = {"tokens": tok((b, s)), "labels": tok((b, s))}
+        if cfg.frontend == "vision_stub":
+            batch = {"embeddings": jax.ShapeDtypeStruct((b, s, cfg.d_model), cdt),
+                     "labels": tok((b, s))}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct((b, cfg.n_frames, cfg.d_model), cdt)
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        batch = {"tokens": tok((b, s))}
+        if cfg.frontend == "vision_stub":
+            batch = {"embeddings": jax.ShapeDtypeStruct((b, s, cfg.d_model), cdt)}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct((b, cfg.n_frames, cfg.d_model), cdt)
+        return {"batch": batch, "max_len": s}
+
+    if shape.kind == "decode":
+        cache_shapes = jax.eval_shape(lambda: init_cache(cfg, b, s))
+        return {
+            "cache": cache_shapes,
+            "token": tok((b,)),
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+    raise ValueError(shape.kind)
+
+
+def decode_pos(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    """The decode position for a (arch, decode-shape) cell."""
+    base = shape.seq_len - 1
+    if cfg.family == "hybrid":
+        return cfg.meta_tokens + base
+    return base

@@ -1,0 +1,372 @@
+"""Mixture-of-Experts decoders: DeepSeek-V2-Lite (MLA attention) and
+Moonlight/moonshot (GQA attention). Shared + routed experts, top-k routing.
+
+Dispatch is **sort-based with a static capacity** (GShard/Switch "dropping"
+semantics, capacity_factor configurable): tokens are argsorted by expert id,
+scattered into an [E, capacity, d] buffer, processed as one batched einsum
+per weight (exact active-FLOP accounting — no one-hot dispatch matmuls), and
+combined back weighted by the (renormalized) router probabilities. Overflow
+tokens fall through on the residual path.
+
+Expert tensors are sharded on the expert axis ('model'); the scatter from
+data-sharded tokens to expert-sharded buffers is the EP boundary — the pjit
+baseline lets XLA insert the collectives; dist/ep.py provides the explicit
+shard_map all_to_all variant used in the perf hillclimb.
+
+MLA (multi-head latent attention) supports two decode cache modes:
+  * ``full``   — materialized per-head K/V cache (baseline),
+  * ``latent`` — cache only (c_kv, k_rope); score/value projections absorbed
+                 into the query/output (the DeepSeek-V2 inference trick) —
+                 cache bytes drop from H·(192+128) to (512+64) per token.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+# ==========================================================================
+# routed-expert FFN
+# ==========================================================================
+def moe_ffn_init(key, cfg) -> Dict[str, Any]:
+    ks = jax.random.split(key, 5)
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = cfg.compute_dtype
+
+    def experts(k, din, dout):
+        scale = (1.0 / din) ** 0.5
+        return (jax.random.normal(k, (e, din, dout), jnp.float32) * scale).astype(dt)
+
+    p = {
+        "router": L.dense_init(ks[0], d, e, jnp.float32),
+        "w_gate": experts(ks[1], d, ff),
+        "w_up": experts(ks[2], d, ff),
+        "w_down": experts(ks[3], ff, d),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = L.mlp_init(ks[4], d, ff * cfg.n_shared_experts, dt, "silu")
+    return p
+
+
+def moe_ffn_apply(p, x, cfg) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] → (out [B, S, d], aux_loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.top_k
+    e = cfg.n_experts
+    xf = x.reshape(t, d)
+
+    # bf16 matmul (f32 softmax): keeps the aux-loss backward cotangents
+    # bf16 — the dominant TP collectives halve (EXPERIMENTS §Perf B4)
+    logits = (xf @ p["router"].astype(xf.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                      # [T, E]
+    top_p, top_i = jax.lax.top_k(probs, k)                       # [T, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E · Σ_e f_e · P_e
+    f_e = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(1.0) / (t * k)
+    p_e = probs.mean(axis=0)
+    aux = e * jnp.sum(f_e * p_e)
+
+    from repro.dist import ep as ep_mod
+    if cfg.moe_impl == "ep" and ep_mod.ep_enabled():
+        # routing re-done inside the shard (replicated math, f32 cast local)
+        # so no f32 cotangent crosses the shard_map boundary; aux keeps the
+        # outside (global-batch) statistics above.
+        combined = ep_mod.ep_ffn(xf, p["router"], p["w_gate"], p["w_up"],
+                                 p["w_down"], cfg)
+        if "shared" in p:
+            combined = combined + L.mlp_apply(p["shared"], xf, "silu")
+        return combined.reshape(b, s, d), aux
+
+    cap = max(int(cfg.capacity_factor * t * k / e), 1)
+
+    flat_e = top_i.reshape(-1)                                   # [T·k]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_e].astype(jnp.int32)
+    keep = pos < cap
+    dest = jnp.where(keep, sorted_e * cap + pos, e * cap)        # drop slot
+
+    src_token = order // k
+    buf = jnp.zeros((e * cap, d), x.dtype).at[dest].set(
+        xf[src_token], mode="drop"
+    )
+    h = buf.reshape(e, cap, d)
+    act = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, p["w_gate"]))
+    act = act * jnp.einsum("ecd,edf->ecf", h, p["w_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", act, p["w_down"]).reshape(e * cap, d)
+
+    # map each (token, slot) back to its buffer row
+    dest_of_slot = jnp.zeros((t * k,), jnp.int32).at[order].set(
+        jnp.where(keep, dest, e * cap).astype(jnp.int32)
+    )
+    padded = jnp.concatenate([out_buf, jnp.zeros((1, d), x.dtype)], axis=0)
+    expert_out = padded[dest_of_slot].reshape(t, k, d)
+    combined = jnp.sum(expert_out * top_p[..., None].astype(x.dtype), axis=1)
+
+    if "shared" in p:
+        combined = combined + L.mlp_apply(p["shared"], xf, "silu")
+    return combined.reshape(b, s, d), aux
+
+
+# ==========================================================================
+# MLA attention (DeepSeek-V2)
+# ==========================================================================
+def mla_init(key, cfg) -> Dict[str, Any]:
+    ks = jax.random.split(key, 5)
+    d, h = cfg.d_model, cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    dt = cfg.compute_dtype
+    return {
+        "wq": L.dense_init(ks[0], d, h * qk, dt),
+        "w_dkv": L.dense_init(ks[1], d, cfg.kv_lora_rank + cfg.qk_rope_dim, dt),
+        "kv_ln": L.rmsnorm_init(cfg.kv_lora_rank, dt),
+        "w_ukv": L.dense_init(
+            ks[2], cfg.kv_lora_rank, h * (cfg.qk_nope_dim + cfg.v_head_dim), dt
+        ),
+        "wo": L.dense_init(ks[3], h * cfg.v_head_dim, d, dt),
+    }
+
+
+def _mla_qkv(p, x, cfg, positions):
+    b, s, _ = x.shape
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, dn + dr)
+    qn, qr = q[..., :dn], q[..., dn:]
+    qr = L.apply_rope(qr, positions, cfg.rope_theta)
+
+    dkv = x @ p["w_dkv"]                                  # [B,S,lora+dr]
+    ckv = L.rmsnorm(dkv[..., : cfg.kv_lora_rank], p["kv_ln"], cfg.norm_eps)
+    kr = dkv[..., cfg.kv_lora_rank:][:, :, None, :]       # [B,S,1,dr]
+    kr = L.apply_rope(kr, positions, cfg.rope_theta)
+
+    kv = (ckv @ p["w_ukv"]).reshape(b, s, h, dn + dv)
+    kn, v = kv[..., :dn], kv[..., dn:]
+    q_full = jnp.concatenate([qn, qr], axis=-1)
+    k_full = jnp.concatenate([kn, jnp.broadcast_to(kr, (b, s, h, dr))], axis=-1)
+    return q_full, k_full, v, ckv, kr
+
+
+def mla_apply(p, x, cfg, positions=None):
+    b, s, _ = x.shape
+    pos = positions if positions is not None else jnp.arange(s)
+    q, k, v, _, _ = _mla_qkv(p, x, cfg, pos)
+    out = L.attention(q, k, v, causal=True, impl=cfg.attn_impl,
+                      q_chunk=cfg.q_chunk)
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def mla_decode_full(p, x, cache, pos, cfg):
+    """Baseline decode: per-head K/V cache (like GQA but H heads)."""
+    b = x.shape[0]
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k, v, _, _ = _mla_qkv(p, x, cfg, positions)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1)
+    valid = jnp.arange(ck.shape[1]) <= pos
+    att = L.decode_attention(q, ck, cv, valid)
+    return att.reshape(b, 1, -1) @ p["wo"], {"k": ck, "v": cv}
+
+
+def mla_decode_latent(p, x, cache, pos, cfg):
+    """Absorbed decode: cache only (c_kv, k_rope); W_uk folded into q,
+    W_uv applied after the attention-weighted latent sum."""
+    b = x.shape[0]
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    lora = cfg.kv_lora_rank
+    positions = jnp.full((1,), pos, jnp.int32)
+
+    q = (x @ p["wq"]).reshape(b, 1, h, dn + dr)
+    qn, qr = q[..., :dn], q[..., dn:]
+    qr = L.apply_rope(qr, positions, cfg.rope_theta)
+
+    dkv = x @ p["w_dkv"]
+    ckv_new = L.rmsnorm(dkv[..., :lora], p["kv_ln"], cfg.norm_eps)
+    kr_new = L.apply_rope(dkv[..., lora:][:, :, None, :], positions,
+                          cfg.rope_theta)[:, :, 0, :]
+
+    c_ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_new, pos, axis=1)
+    c_kr = jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr_new, pos, axis=1)
+
+    w_ukv = p["w_ukv"].reshape(lora, h, dn + dv)
+    w_uk = w_ukv[..., :dn]                               # [lora, H, dn]
+    w_uv = w_ukv[..., dn:]                               # [lora, H, dv]
+
+    q_lat = jnp.einsum("bqhn,lhn->bqhl", qn, w_uk)       # absorb W_uk
+    s_lat = jnp.einsum("bqhl,bkl->bhqk", q_lat, c_ckv)
+    s_rope = jnp.einsum("bqhr,bkr->bhqk", qr, c_kr)
+    scale = 1.0 / ((dn + dr) ** 0.5)
+    s = (s_lat + s_rope).astype(jnp.float32) * scale
+    valid = jnp.arange(c_ckv.shape[1]) <= pos
+    s = s + jnp.where(valid, 0.0, L.NEG_INF)[None, None, None, :]
+    pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhqk,bkl->bqhl", pr, c_ckv)        # latent context
+    att = jnp.einsum("bqhl,lhv->bqhv", ctx, w_uv)        # absorb W_uv
+    out = att.reshape(b, 1, h * dv) @ p["wo"]
+    return out, {"ckv": c_ckv, "kr": c_kr}
+
+
+# ==========================================================================
+# MoE decoder model
+# ==========================================================================
+def _is_dense_layer(cfg, i: int) -> bool:
+    return i < cfg.first_dense_layers
+
+
+def moe_layer_init(key, cfg, i: int) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    attn = mla_init(ks[0], cfg) if cfg.use_mla else L.gqa_init(ks[0], cfg)
+    if _is_dense_layer(cfg, i):
+        ffn = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff_dense, cfg.compute_dtype,
+                         "silu")
+    else:
+        ffn = moe_ffn_init(ks[1], cfg)
+    return {
+        "attn": attn,
+        "ffn": ffn,
+        "ln1": L.rmsnorm_init(cfg.d_model, cfg.compute_dtype),
+        "ln2": L.rmsnorm_init(cfg.d_model, cfg.compute_dtype),
+    }
+
+
+def moe_init(cfg, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    return {
+        "emb": L.dense_init(ks[0], cfg.vocab_padded, cfg.d_model,
+                            cfg.compute_dtype),
+        "head": L.dense_init(ks[1], cfg.d_model, cfg.vocab_padded,
+                             cfg.compute_dtype),
+        "ln_f": L.rmsnorm_init(cfg.d_model, cfg.compute_dtype),
+        "layers": [moe_layer_init(ks[i + 2], cfg, i) for i in range(cfg.n_layers)],
+    }
+
+
+def moe_forward(params, tokens, cfg, return_hidden=False):
+    """Returns (logits, aux_loss) or ((hidden, head), aux_loss)."""
+    x = params["emb"][tokens]
+    aux_total = jnp.float32(0.0)
+    for i, p in enumerate(params["layers"]):
+        def layer(p, x, i=i):
+            xin = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+            if cfg.use_mla:
+                att = mla_apply(p["attn"], xin, cfg)
+            else:
+                att = L.gqa_apply(p["attn"], xin, cfg, causal=True)
+            h = x + att
+            hin = L.rmsnorm(h, p["ln2"], cfg.norm_eps)
+            if _is_dense_layer(cfg, i):
+                return h + L.mlp_apply(p["ffn"], hin, "silu"), jnp.float32(0.0)
+            out, aux = moe_ffn_apply(p["ffn"], hin, cfg)
+            return h + out, aux
+        f = L.remat(layer, cfg)
+        x, aux = f(p, x)
+        x = L.sp(x)
+        aux_total = aux_total + aux
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    if return_hidden:
+        return (x, params["head"]), aux_total
+    return x @ params["head"], aux_total
+
+
+def moe_init_cache(cfg, batch: int, max_len: int, dtype):
+    if cfg.use_mla and cfg.mla_cache_mode == "latent":
+        per = lambda: {
+            "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "kr": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+        }
+    elif cfg.use_mla:
+        qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+        per = lambda: {
+            "k": jnp.zeros((batch, max_len, cfg.n_heads, qk), dtype),
+            "v": jnp.zeros((batch, max_len, cfg.n_heads, cfg.v_head_dim), dtype),
+        }
+    else:
+        per = lambda: {
+            "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+        }
+    return [per() for _ in range(cfg.n_layers)]
+
+
+def moe_prefill(params, tokens, cfg, max_len: int):
+    b, s = tokens.shape
+    x = params["emb"][tokens]
+    cache = moe_init_cache(cfg, b, max_len, cfg.compute_dtype)
+    positions = jnp.arange(s)
+    for i, p in enumerate(params["layers"]):
+        xin = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        if cfg.use_mla:
+            q, k, v, ckv, kr = _mla_qkv(p["attn"], xin, cfg, positions)
+            if cfg.mla_cache_mode == "latent":
+                cache[i]["ckv"] = jax.lax.dynamic_update_slice_in_dim(
+                    cache[i]["ckv"], ckv, 0, axis=1)
+                cache[i]["kr"] = jax.lax.dynamic_update_slice_in_dim(
+                    cache[i]["kr"], kr[:, :, 0, :], 0, axis=1)
+            else:
+                cache[i]["k"] = jax.lax.dynamic_update_slice_in_dim(
+                    cache[i]["k"], k, 0, axis=1)
+                cache[i]["v"] = jax.lax.dynamic_update_slice_in_dim(
+                    cache[i]["v"], v, 0, axis=1)
+            att = L.attention(q, k, v, causal=True, impl=cfg.attn_impl,
+                              q_chunk=cfg.q_chunk, remat_chunks=False)
+            x = x + att.reshape(b, s, -1) @ p["attn"]["wo"]
+        else:
+            q, k, v = L.gqa_project(p["attn"], xin, cfg)
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+            cache[i]["k"] = jax.lax.dynamic_update_slice_in_dim(
+                cache[i]["k"], k, 0, axis=1)
+            cache[i]["v"] = jax.lax.dynamic_update_slice_in_dim(
+                cache[i]["v"], v, 0, axis=1)
+            att = L.attention(q, k, v, causal=True, impl=cfg.attn_impl,
+                              q_chunk=cfg.q_chunk, remat_chunks=False)
+            x = x + att.reshape(b, s, -1) @ p["attn"]["wo"]
+        hin = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if _is_dense_layer(cfg, i):
+            x = x + L.mlp_apply(p["ffn"], hin, "silu")
+        else:
+            out, _ = moe_ffn_apply(p["ffn"], hin, cfg)
+            x = x + out
+    x = L.rmsnorm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    return (x @ params["head"])[:, 0], cache
+
+
+def moe_decode_step(params, cache, token, pos, cfg):
+    b = token.shape[0]
+    x = params["emb"][token][:, None]
+    positions = jnp.full((1,), pos, jnp.int32)
+    new_cache = []
+    for i, p in enumerate(params["layers"]):
+        xin = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        if cfg.use_mla:
+            if cfg.mla_cache_mode == "latent":
+                att, nc = mla_decode_latent(p["attn"], xin, cache[i], pos, cfg)
+            else:
+                att, nc = mla_decode_full(p["attn"], xin, cache[i], pos, cfg)
+            x = x + att
+        else:
+            q, k, v = L.gqa_project(p["attn"], xin, cfg)
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+            ck = jax.lax.dynamic_update_slice_in_dim(cache[i]["k"], k, pos, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache[i]["v"], v, pos, axis=1)
+            nc = {"k": ck, "v": cv}
+            valid = jnp.arange(ck.shape[1]) <= pos
+            att = L.decode_attention(q, ck, cv, valid)
+            x = x + att.reshape(b, 1, -1) @ p["attn"]["wo"]
+        new_cache.append(nc)
+        hin = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if _is_dense_layer(cfg, i):
+            x = x + L.mlp_apply(p["ffn"], hin, "silu")
+        else:
+            out, _ = moe_ffn_apply(p["ffn"], hin, cfg)
+            x = x + out
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return (x @ params["head"])[:, 0], new_cache

@@ -1,0 +1,310 @@
+"""Mamba2 — SSD (state-space duality) blocks, chunked dual form.
+
+Per head h (state N=128, head dim P=64):
+    h_t = exp(Δ_t·A_h)·h_{t-1} + Δ_t·(x_t ⊗ B_t)
+    y_t = C_t·h_t + D_h·x_t
+The chunked dual form (chunk Q) splits this into an intra-chunk
+"masked-attention" term (batched matmuls — MXU-friendly, computed for all
+chunks at once *outside* any scan) and an inter-chunk recurrence over tiny
+per-chunk states carried by ``lax.associative_scan`` (log-depth, negligible
+FLOPs) — so the dry-run FLOP accounting stays exact (DESIGN.md §6).
+
+Decode is the O(1) recurrence on a cached state [H, P, N] + conv tail.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+# --------------------------------------------------------------------------
+# chunked SSD core
+# --------------------------------------------------------------------------
+def ssd_chunked(
+    x: jax.Array,    # [B, T, H, P]
+    b_mat: jax.Array,  # [B, T, N]   (G=1 shared across heads)
+    c_mat: jax.Array,  # [B, T, N]
+    dt: jax.Array,   # [B, T, H]   (post-softplus)
+    a_log: jax.Array,  # [H]       A = -exp(a_log)
+    chunk: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y [B,T,H,P], final_state [B,H,P,N])."""
+    bsz, t0, h, p = x.shape
+    n = b_mat.shape[-1]
+    # pad to a chunk multiple: padded steps carry dt=0 ⇒ decay=1, update=0,
+    # so the final state is unaffected and padded outputs are sliced away.
+    pad = (-t0) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    t = t0 + pad
+    cn, q = t // chunk, chunk
+
+    a = -jnp.exp(a_log.astype(jnp.float32))                   # [H]
+    dta = dt.astype(jnp.float32) * a                          # [B,T,H]
+    xr = x.reshape(bsz, cn, q, h, p)
+    br = b_mat.reshape(bsz, cn, q, n)
+    cr = c_mat.reshape(bsz, cn, q, n)
+    dtr = dt.reshape(bsz, cn, q, h).astype(jnp.float32)
+    dtar = dta.reshape(bsz, cn, q, h)
+
+    cum = jnp.cumsum(dtar, axis=2)                            # [B,Cn,Q,H]
+    total = cum[:, :, -1:, :]                                 # [B,Cn,1,H]
+
+    # ---- intra-chunk (quadratic in Q, batched matmuls) ----
+    cb = jnp.einsum("bcin,bcjn->bcij", cr, br)                # [B,Cn,Q,Q]
+    lam = jnp.exp(
+        jnp.clip(cum[:, :, :, None, :] - cum[:, :, None, :, :], -60.0, 0.0)
+    )                                                          # [B,Cn,Qi,Qj,H]
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    w = cb[:, :, :, :, None] * lam * dtr[:, :, None, :, :]    # [B,Cn,Qi,Qj,H]
+    w = jnp.where(causal[None, None, :, :, None], w, 0.0)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w.astype(x.dtype), xr)
+
+    # ---- per-chunk states ----
+    decay_to_end = jnp.exp(jnp.clip(total - cum, -60.0, 0.0))  # [B,Cn,Q,H]
+    s = jnp.einsum(
+        "bcjh,bcjhp,bcjn->bchpn",
+        (decay_to_end * dtr).astype(x.dtype), xr, br,
+    )                                                          # [B,Cn,H,P,N]
+
+    # ---- inter-chunk recurrence: H_c = d_c·H_{c-1} + S_c ----
+    d_c = jnp.exp(jnp.clip(total[:, :, 0, :], -60.0, 0.0))     # [B,Cn,H]
+
+    def combine(e1, e2):
+        dc1, s1 = e1
+        dc2, s2 = e2
+        return dc1 * dc2, s1 * dc2[..., None, None].astype(s1.dtype) + s2
+
+    _, h_all = jax.lax.associative_scan(combine, (d_c, s), axis=1)
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(h_all[:, :1]), h_all[:, :-1]], axis=1
+    )                                                          # [B,Cn,H,P,N]
+
+    y_inter = jnp.einsum(
+        "bcin,bcih,bchpn->bcihp",
+        cr, jnp.exp(jnp.clip(cum, -60.0, 0.0)).astype(x.dtype), h_prev,
+    )
+    y = (y_intra + y_inter).reshape(bsz, t, h, p)[:, :t0]
+    return y, h_all[:, -1]                                     # final state
+
+
+def ssd_ref(x, b_mat, c_mat, dt, a_log):
+    """Naive sequential recurrence oracle (tests)."""
+    bsz, t, h, p = x.shape
+    n = b_mat.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+
+    def step(state, inp):
+        xt, bt, ct, dtt = inp                      # [B,H,P],[B,N],[B,N],[B,H]
+        decay = jnp.exp(dtt * a)                   # [B,H]
+        upd = dtt[..., None, None] * xt[..., None] * bt[:, None, None, :]
+        state = state * decay[..., None, None] + upd
+        yt = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, yt
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(b_mat.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(c_mat.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+    )
+    final, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final
+
+
+# --------------------------------------------------------------------------
+# mamba2 block
+# --------------------------------------------------------------------------
+def _conv_dim(cfg):
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def mamba_block_init(key, cfg) -> Dict[str, Any]:
+    """Input projections are stored per segment (z / x / B / C / dt) so each
+    can carry its own TP sharding without resharding at split points; the
+    depthwise conv is likewise split (per-channel ⇒ segment-separable)."""
+    ks = jax.random.split(key, 7)
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    dt_ = cfg.compute_dtype
+
+    def conv_w(k, c):
+        return (jax.random.normal(k, (cfg.d_conv, c), jnp.float32) * 0.2
+                ).astype(dt_)
+
+    return {
+        "in_z": L.dense_init(ks[0], d, di, dt_),
+        "in_x": L.dense_init(ks[1], d, di, dt_),
+        "in_b": L.dense_init(ks[2], d, n, dt_),
+        "in_c": L.dense_init(ks[3], d, n, dt_),
+        "in_dt": L.dense_init(ks[4], d, h, dt_),
+        "conv_x_w": conv_w(ks[5], di),
+        "conv_x_b": jnp.zeros((di,), dt_),
+        "conv_b_w": conv_w(ks[6], n),
+        "conv_b_b": jnp.zeros((n,), dt_),
+        "conv_c_w": conv_w(jax.random.fold_in(ks[6], 1), n),
+        "conv_c_b": jnp.zeros((n,), dt_),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "out_norm": L.rmsnorm_init(di, dt_),
+        "out_proj": L.dense_init(ks[4], di, d, dt_),
+    }
+
+
+def _causal_conv(xc, w, b):
+    """Depthwise causal conv width K via shifted adds. xc: [B,T,C]."""
+    k = w.shape[0]
+    out = xc * w[-1]
+    for i in range(1, k):
+        shifted = jnp.pad(xc, ((0, 0), (i, 0), (0, 0)))[:, : xc.shape[1]]
+        out = out + shifted * w[k - 1 - i]
+    return jax.nn.silu(out + b)
+
+
+def _project(p, x, cfg):
+    z = x @ p["in_z"]
+    xr = x @ p["in_x"]
+    br = x @ p["in_b"]
+    cr = x @ p["in_c"]
+    dt_raw = x @ p["in_dt"]
+    return z, xr, br, cr, dt_raw
+
+
+def _mamba_core(p, x, cfg):
+    """Shared forward: returns (y [B,T,d], final_state, conv tails)."""
+    bsz, t, _ = x.shape
+    di, h, pd = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xr, br, cr, dt_raw = _project(p, x, cfg)
+    xc = _causal_conv(xr, p["conv_x_w"], p["conv_x_b"])
+    bc = _causal_conv(br, p["conv_b_w"], p["conv_b_b"])
+    cc = _causal_conv(cr, p["conv_c_w"], p["conv_c_b"])
+    xin = xc.reshape(bsz, t, h, pd)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    y, state = ssd_chunked(xin, bc, cc, dt, p["a_log"], cfg.ssm_chunk)
+    y = y + xin * p["d_skip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(bsz, t, di) * jax.nn.silu(z)
+    y = L.rmsnorm(y, p["out_norm"], cfg.norm_eps)
+    kc = cfg.d_conv - 1
+    tails = {"x": xr[:, t - kc:], "b": br[:, t - kc:], "c": cr[:, t - kc:]}
+    return y @ p["out_proj"], state, tails
+
+
+def mamba_block_apply(p, x, cfg):
+    """Full-sequence forward. x: [B,T,d] → [B,T,d]."""
+    out, _, _ = _mamba_core(p, x, cfg)
+    return out
+
+
+def mamba_block_prefill(p, x, cfg):
+    """Like apply, but also returns the decode cache."""
+    out, state, tails = _mamba_core(p, x, cfg)
+    return out, {"state": state, "conv": tails}
+
+
+def _conv_step(tail, new, w, b):
+    window = jnp.concatenate([tail, new], axis=1)               # [B,K,C]
+    out = jnp.einsum("bkc,kc->bc", window, w) + b
+    return jax.nn.silu(out), window[:, 1:]
+
+
+def mamba_block_decode(p, x, cache, cfg):
+    """One-token step. x: [B,1,d]; cache {state [B,H,P,N], conv{x,b,c}}."""
+    bsz = x.shape[0]
+    di, h, pd = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xr, br, cr, dt_raw = _project(p, x, cfg)
+    xc, tail_x = _conv_step(cache["conv"]["x"], xr, p["conv_x_w"], p["conv_x_b"])
+    bc, tail_b = _conv_step(cache["conv"]["b"], br, p["conv_b_w"], p["conv_b_b"])
+    cc, tail_c = _conv_step(cache["conv"]["c"], cr, p["conv_c_w"], p["conv_c_b"])
+    xin = xc.reshape(bsz, h, pd)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])[:, 0]
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * a)                                     # [B,H]
+    upd = dt[..., None, None] * xin.astype(jnp.float32)[..., None] \
+        * bc.astype(jnp.float32)[:, None, None, :]
+    state = cache["state"].astype(jnp.float32) * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, cc.astype(jnp.float32))
+    y = y.astype(x.dtype) + xin * p["d_skip"][None, :, None].astype(x.dtype)
+    y = y.reshape(bsz, 1, di) * jax.nn.silu(z)
+    y = L.rmsnorm(y, p["out_norm"], cfg.norm_eps)
+    new_cache = {"state": state.astype(cache["state"].dtype),
+                 "conv": {"x": tail_x, "b": tail_b, "c": tail_c}}
+    return y @ p["out_proj"], new_cache
+
+
+# --------------------------------------------------------------------------
+# full mamba2 model
+# --------------------------------------------------------------------------
+def ssm_init(cfg, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, cfg.n_layers + 1)
+    return {
+        "emb": L.dense_init(ks[0], cfg.vocab_padded, cfg.d_model,
+                            cfg.compute_dtype),
+        "ln_f": L.rmsnorm_init(cfg.d_model, cfg.compute_dtype),
+        "layers": [
+            {"mixer": mamba_block_init(ks[i + 1], cfg),
+             "ln": L.rmsnorm_init(cfg.d_model, cfg.compute_dtype)}
+            for i in range(cfg.n_layers)
+        ],
+    }
+
+
+def ssm_forward(params, tokens, cfg, return_hidden=False):
+    x = params["emb"][tokens]
+    for p in params["layers"]:
+        def layer(p, x):
+            return x + mamba_block_apply(p["mixer"],
+                                         L.rmsnorm(x, p["ln"], cfg.norm_eps), cfg)
+        x = L.sp(L.remat(layer, cfg)(p, x))
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    if return_hidden:
+        return x, params["emb"].T
+    return x @ params["emb"].T
+
+
+def ssm_cache_leaf(cfg, batch: int, dtype):
+    h, pd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    kc = cfg.d_conv - 1
+    return {
+        "state": jnp.zeros((batch, h, pd, n), jnp.float32),
+        "conv": {"x": jnp.zeros((batch, kc, cfg.d_inner), dtype),
+                 "b": jnp.zeros((batch, kc, n), dtype),
+                 "c": jnp.zeros((batch, kc, n), dtype)},
+    }
+
+
+def ssm_init_cache(cfg, batch: int, max_len: int, dtype):
+    return [ssm_cache_leaf(cfg, batch, dtype) for _ in range(cfg.n_layers)]
+
+
+def ssm_prefill(params, tokens, cfg, max_len: int):
+    b = tokens.shape[0]
+    x = params["emb"][tokens]
+    cache = []
+    for p in params["layers"]:
+        out, c = mamba_block_prefill(p["mixer"],
+                                     L.rmsnorm(x, p["ln"], cfg.norm_eps), cfg)
+        x = x + out
+        cache.append(c)
+    x = L.rmsnorm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    return (x @ params["emb"].T)[:, 0], cache
+
+
+def ssm_decode_step(params, cache, token, pos, cfg):
+    del pos  # recurrence is position-free
+    x = params["emb"][token][:, None]
+    new_cache = []
+    for p, c in zip(params["layers"], cache):
+        out, nc = mamba_block_decode(p["mixer"],
+                                     L.rmsnorm(x, p["ln"], cfg.norm_eps), c, cfg)
+        x = x + out
+        new_cache.append(nc)
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return (x @ params["emb"].T)[:, 0], new_cache

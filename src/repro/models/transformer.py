@@ -1,0 +1,300 @@
+"""Dense decoder-only transformers (llama family: granite/yi/pixtral
+backbone) and the whisper-small encoder–decoder.
+
+Layers run in an unrolled python loop (exact dry-run FLOP accounting — see
+DESIGN.md §6); per-layer ``jax.checkpoint`` implements the remat policy for
+training. Forward functions return logits over the *padded* vocab; the loss
+masks padding columns.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+# ==========================================================================
+# dense decoder
+# ==========================================================================
+def dense_layer_init(key, cfg) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    return {
+        "attn": L.gqa_init(ks[0], cfg),
+        "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.compute_dtype, cfg.act),
+        "ln1": L.rmsnorm_init(cfg.d_model, cfg.compute_dtype),
+        "ln2": L.rmsnorm_init(cfg.d_model, cfg.compute_dtype),
+    }
+
+
+def dense_layer_apply(p, x, cfg, *, window=0, sink=0, positions=None):
+    h = x + L.gqa_apply(
+        p["attn"], L.rmsnorm(x, p["ln1"], cfg.norm_eps), cfg,
+        causal=True, window=window, sink=sink, positions=positions,
+    )
+    return h + L.mlp_apply(p["mlp"], L.rmsnorm(h, p["ln2"], cfg.norm_eps), cfg.act)
+
+
+def dense_init(cfg, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    params = {
+        "emb": L.dense_init(ks[0], cfg.vocab_padded, cfg.d_model,
+                            cfg.compute_dtype),
+        "ln_f": L.rmsnorm_init(cfg.d_model, cfg.compute_dtype),
+        "layers": [dense_layer_init(ks[i + 2], cfg) for i in range(cfg.n_layers)],
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.dense_init(ks[1], cfg.d_model, cfg.vocab_padded,
+                                      cfg.compute_dtype)
+    return params
+
+
+def _lm_head(params, x, cfg):
+    if "head" in params:
+        return x @ params["head"]
+    return x @ params["emb"].T
+
+
+def _embed(params, tokens, cfg, embeddings=None):
+    """Token embedding, or pre-computed frontend embeddings for [vlm]."""
+    if embeddings is not None:
+        return embeddings.astype(cfg.compute_dtype)
+    return params["emb"][tokens]
+
+
+def dense_forward(params, tokens, cfg, *, embeddings=None,
+                  return_hidden=False):
+    x = _embed(params, tokens, cfg, embeddings)
+    for i, p in enumerate(params["layers"]):
+        f = L.remat(dense_layer_apply, cfg, static_argnums=(2,))
+        x = L.sp(f(p, x, cfg))
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    if return_hidden:
+        return x, (params["head"] if "head" in params else params["emb"].T)
+    return _lm_head(params, x, cfg)
+
+
+# ---- serving ----
+def dense_init_cache(cfg, batch: int, max_len: int, dtype):
+    hd = cfg.hd
+    return [
+        {
+            "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+            "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+        }
+        for _ in range(cfg.n_layers)
+    ]
+
+
+def dense_prefill(params, tokens, cfg, max_len: int, *, embeddings=None):
+    """Run the prompt; return (last-token logits, filled cache)."""
+    b, s = tokens.shape[:2] if tokens is not None else embeddings.shape[:2]
+    x = _embed(params, tokens, cfg, embeddings)
+    cache = dense_init_cache(cfg, b, max_len, cfg.compute_dtype)
+    positions = jnp.arange(s)
+    for i, p in enumerate(params["layers"]):
+        xin = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = L.gqa_project(p["attn"], xin, cfg)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        cache[i]["k"] = jax.lax.dynamic_update_slice_in_dim(cache[i]["k"], k, 0, axis=1)
+        cache[i]["v"] = jax.lax.dynamic_update_slice_in_dim(cache[i]["v"], v, 0, axis=1)
+        att = L.attention(q, k, v, causal=True, impl=cfg.attn_impl,
+                          q_chunk=cfg.q_chunk, remat_chunks=False)
+        x = x + att.reshape(b, s, -1) @ p["attn"]["wo"]
+        x = x + L.mlp_apply(p["mlp"], L.rmsnorm(x, p["ln2"], cfg.norm_eps), cfg.act)
+    x = L.rmsnorm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    return _lm_head(params, x, cfg)[:, 0], cache
+
+
+def dense_decode_step(params, cache, token, pos, cfg):
+    """One decode step. token [B], pos scalar (tokens so far). Returns
+    (logits [B, Vp], new cache)."""
+    b = token.shape[0]
+    x = params["emb"][token][:, None]          # [B, 1, d]
+    positions = jnp.full((1,), pos, jnp.int32)
+    s_max = cache[0]["k"].shape[1]
+    valid = jnp.arange(s_max) <= pos
+    new_cache = []
+    for i, p in enumerate(params["layers"]):
+        xin = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = L.gqa_project(p["attn"], xin, cfg)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache[i]["k"], k, pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache[i]["v"], v, pos, axis=1)
+        new_cache.append({"k": ck, "v": cv})
+        att = L.decode_attention(q, ck, cv, valid)
+        x = x + att.reshape(b, 1, -1) @ p["attn"]["wo"]
+        x = x + L.mlp_apply(p["mlp"], L.rmsnorm(x, p["ln2"], cfg.norm_eps), cfg.act)
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return _lm_head(params, x, cfg)[:, 0], new_cache
+
+
+# ==========================================================================
+# whisper-small encoder–decoder
+# ==========================================================================
+def _sinusoid(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[:, None].astype(jnp.float32) * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def encdec_init(cfg, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+
+    def enc_layer(k):
+        kk = jax.random.split(k, 2)
+        return {
+            "attn": L.gqa_init(kk[0], cfg),
+            "mlp": L.mlp_init(kk[1], cfg.d_model, cfg.d_ff, cfg.compute_dtype, cfg.act),
+            "ln1": L.rmsnorm_init(cfg.d_model, cfg.compute_dtype),
+            "ln2": L.rmsnorm_init(cfg.d_model, cfg.compute_dtype),
+        }
+
+    def dec_layer(k):
+        kk = jax.random.split(k, 3)
+        return {
+            "self": L.gqa_init(kk[0], cfg),
+            "cross": L.gqa_init(kk[1], cfg),
+            "mlp": L.mlp_init(kk[2], cfg.d_model, cfg.d_ff, cfg.compute_dtype, cfg.act),
+            "ln1": L.rmsnorm_init(cfg.d_model, cfg.compute_dtype),
+            "ln2": L.rmsnorm_init(cfg.d_model, cfg.compute_dtype),
+            "ln3": L.rmsnorm_init(cfg.d_model, cfg.compute_dtype),
+        }
+
+    return {
+        "emb": L.dense_init(ks[2], cfg.vocab_padded, cfg.d_model, cfg.compute_dtype),
+        "enc_layers": [enc_layer(k) for k in enc_keys],
+        "dec_layers": [dec_layer(k) for k in dec_keys],
+        "ln_enc": L.rmsnorm_init(cfg.d_model, cfg.compute_dtype),
+        "ln_f": L.rmsnorm_init(cfg.d_model, cfg.compute_dtype),
+    }
+
+
+def encode(params, frames, cfg):
+    """frames: [B, F, d] precomputed stub embeddings (conv frontend stub)."""
+    f = frames.shape[1]
+    x = frames.astype(cfg.compute_dtype)
+    x = x + _sinusoid(jnp.arange(f), cfg.d_model).astype(cfg.compute_dtype)
+    for p in params["enc_layers"]:
+        def enc_apply(p, x):
+            h = x + L.gqa_apply(p["attn"], L.rmsnorm(x, p["ln1"], cfg.norm_eps),
+                                cfg, causal=False, rope=False)
+            return h + L.mlp_apply(p["mlp"], L.rmsnorm(h, p["ln2"], cfg.norm_eps),
+                                   cfg.act)
+        x = L.remat(enc_apply, cfg)(p, x)
+    return L.rmsnorm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def encdec_forward(params, batch, cfg, return_hidden=False):
+    """batch = {frames [B,F,d], tokens [B,S]} → decoder logits."""
+    enc = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["emb"][tokens]
+    x = x + _sinusoid(jnp.arange(s), cfg.d_model).astype(cfg.compute_dtype)
+
+    def dec_apply(p, x, enc):
+        h = x + L.gqa_apply(p["self"], L.rmsnorm(x, p["ln1"], cfg.norm_eps),
+                            cfg, causal=True, rope=False)
+        h = h + L.gqa_apply(p["cross"], L.rmsnorm(h, p["ln2"], cfg.norm_eps),
+                            cfg, causal=False, rope=False, kv_source=enc)
+        return h + L.mlp_apply(p["mlp"], L.rmsnorm(h, p["ln3"], cfg.norm_eps),
+                               cfg.act)
+
+    for p in params["dec_layers"]:
+        f = L.remat(dec_apply, cfg)
+        x = f(p, x, enc)
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    if return_hidden:
+        return x, params["emb"].T
+    return x @ params["emb"].T
+
+
+def encdec_init_cache(cfg, batch: int, max_len: int, dtype):
+    hd = cfg.hd
+    return {
+        "self": [
+            {"k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+             "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype)}
+            for _ in range(cfg.n_layers)
+        ],
+        # cross-attention K/V over the encoder output (filled by prefill;
+        # zero-initialized so the cache pytree is shape-complete for the
+        # decode dry-run and for checkpointing)
+        "cross_kv": [
+            {"k": jnp.zeros((batch, cfg.n_frames, cfg.n_kv_heads, hd), dtype),
+             "v": jnp.zeros((batch, cfg.n_frames, cfg.n_kv_heads, hd), dtype)}
+            for _ in range(cfg.n_layers)
+        ],
+    }
+
+
+def encdec_prefill(params, batch, cfg, max_len: int):
+    """Encode frames, run prompt tokens, build self+cross caches."""
+    enc = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    cache = encdec_init_cache(cfg, b, max_len, cfg.compute_dtype)
+    # precompute cross K/V once per layer (fixed for the whole decode)
+    cross = []
+    for p in params["dec_layers"]:
+        k = (enc @ p["cross"]["wk"]).reshape(b, enc.shape[1], cfg.n_kv_heads, cfg.hd)
+        v = (enc @ p["cross"]["wv"]).reshape(b, enc.shape[1], cfg.n_kv_heads, cfg.hd)
+        cross.append({"k": k, "v": v})
+    cache["cross_kv"] = cross
+
+    x = params["emb"][tokens]
+    x = x + _sinusoid(jnp.arange(s), cfg.d_model).astype(cfg.compute_dtype)
+    for i, p in enumerate(params["dec_layers"]):
+        xin = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = L.gqa_project(p["self"], xin, cfg)
+        cache["self"][i]["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["self"][i]["k"], k, 0, axis=1)
+        cache["self"][i]["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["self"][i]["v"], v, 0, axis=1)
+        att = L.attention(q, k, v, causal=True, impl=cfg.attn_impl,
+                          q_chunk=cfg.q_chunk, remat_chunks=False)
+        x = x + att.reshape(b, s, -1) @ p["self"]["wo"]
+        h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        qc = (h @ p["cross"]["wq"]).reshape(b, s, cfg.n_heads, cfg.hd)
+        catt = L.attention(qc, cross[i]["k"], cross[i]["v"], causal=False,
+                           impl="dense", remat_chunks=False)
+        x = x + catt.reshape(b, s, -1) @ p["cross"]["wo"]
+        x = x + L.mlp_apply(p["mlp"], L.rmsnorm(x, p["ln3"], cfg.norm_eps), cfg.act)
+    x = L.rmsnorm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    return (x @ params["emb"].T)[:, 0], cache
+
+
+def encdec_decode_step(params, cache, token, pos, cfg):
+    b = token.shape[0]
+    x = params["emb"][token][:, None]
+    x = x + _sinusoid(jnp.full((1,), pos, jnp.int32), cfg.d_model).astype(
+        cfg.compute_dtype)
+    s_max = cache["self"][0]["k"].shape[1]
+    valid = jnp.arange(s_max) <= pos
+    new_self = []
+    for i, p in enumerate(params["dec_layers"]):
+        xin = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = L.gqa_project(p["self"], xin, cfg)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["self"][i]["k"], k, pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["self"][i]["v"], v, pos, axis=1)
+        new_self.append({"k": ck, "v": cv})
+        att = L.decode_attention(q, ck, cv, valid)
+        x = x + att.reshape(b, 1, -1) @ p["self"]["wo"]
+        h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        qc = (h @ p["cross"]["wq"]).reshape(b, 1, cfg.n_heads, cfg.hd)
+        cr = cache["cross_kv"][i]
+        catt = L.decode_attention(qc, cr["k"], cr["v"],
+                                  jnp.ones((cr["k"].shape[1],), bool))
+        x = x + catt.reshape(b, 1, -1) @ p["cross"]["wo"]
+        x = x + L.mlp_apply(p["mlp"], L.rmsnorm(x, p["ln3"], cfg.norm_eps), cfg.act)
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    new_cache = {"self": new_self, "cross_kv": cache["cross_kv"]}
+    return (x @ params["emb"].T)[:, 0], new_cache

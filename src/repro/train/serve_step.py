@@ -1,0 +1,49 @@
+"""Serving step factories: batched prefill and single-token decode.
+
+``decode_step`` is the unit the decode_32k/long_500k dry-run cells lower:
+one new token against a KV cache of the cell's seq_len. ``greedy_generate``
+drives multi-token generation for the examples/tests (host loop around the
+jitted step — cache donation keeps it allocation-stable).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as mdl
+
+
+def make_prefill(cfg: ModelConfig, max_len: int):
+    def prefill(params, batch):
+        return mdl.prefill(cfg, params, batch, max_len)
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, token, pos):
+        return mdl.decode_step(cfg, params, cache, token, pos)
+
+    return decode_step
+
+
+def greedy_generate(cfg: ModelConfig, params, batch, steps: int,
+                    max_len: int):
+    """Prefill + greedy decode loop. Returns [B, steps] generated tokens."""
+    prompt_len = (batch["tokens"].shape[1] if "tokens" in batch
+                  else batch["embeddings"].shape[1])
+    prefill = jax.jit(make_prefill(cfg, max_len))
+    step = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+    logits, cache = prefill(params, batch)
+    out = []
+    tok = jnp.argmax(logits[:, : cfg.vocab], axis=-1).astype(jnp.int32)
+    base = prompt_len + (cfg.meta_tokens if cfg.family == "hybrid" else 0)
+    for i in range(steps):
+        out.append(tok)
+        logits, cache = step(params, cache, tok, base + i)
+        tok = jnp.argmax(logits[:, : cfg.vocab], axis=-1).astype(jnp.int32)
+    return jnp.stack(out, axis=1)

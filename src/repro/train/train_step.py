@@ -1,0 +1,72 @@
+"""Training step factory: CE (+ MoE aux) loss, microbatched gradient
+accumulation, AdamW. The accumulation loop is an unrolled python loop (XLA
+reuses the gradient buffers in place; unrolling keeps dry-run FLOP
+accounting exact — DESIGN.md §6).
+
+Batch layout: every array in the batch carries a leading microbatch axis
+[accum, B_micro, ...]; ``accum=1`` collapses to a plain step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as mdl
+from repro.models.layers import cross_entropy
+from repro.optim import adamw
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> Tuple[jax.Array, Dict]:
+    if cfg.ce_chunk > 0:
+        (hidden, head), aux = mdl.forward_hidden(cfg, params, batch)
+        from repro.models.layers import cross_entropy_chunked
+        ce = cross_entropy_chunked(hidden, head, batch["labels"], cfg.vocab,
+                                   cfg.ce_chunk)
+    else:
+        logits, aux = mdl.forward(cfg, params, batch)
+        ce = cross_entropy(logits, batch["labels"], cfg.vocab)
+    loss = ce + cfg.router_aux_coef * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, hp: adamw.AdamWConfig, accum: int = 1):
+    """→ train_step(params, opt_state, batch) → (params, opt_state, metrics)."""
+
+    grad_fn = jax.grad(functools.partial(loss_fn, cfg), has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        def micro(i, params_dep):
+            mb = jax.tree.map(lambda x: x[i], batch)
+            return grad_fn(params_dep, mb)
+
+        grads, metrics = micro(0, params)
+        for i in range(1, accum):
+            # optimization_barrier chains microstep i on microstep i-1's
+            # grads: the scheduler cannot overlap them, so live activation
+            # memory stays one-microbatch-sized instead of accum-sized.
+            params_dep, _ = jax.lax.optimization_barrier(
+                (params, jax.tree.leaves(grads)[0]))
+            g_i, m_i = micro(i, params_dep)
+            grads = jax.tree.map(jnp.add, grads, g_i)
+            metrics = jax.tree.map(jnp.add, metrics, m_i)
+        if accum > 1:
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            metrics = jax.tree.map(lambda m: m / accum, metrics)
+
+        new_params, new_opt, opt_metrics = adamw.update(grads, opt_state, hp)
+        metrics = dict(metrics, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        _, metrics = loss_fn(cfg, params, batch)
+        return metrics
+
+    return eval_step

@@ -1,0 +1,13 @@
+import os
+
+# Tests must see the real (single) CPU device — the 512-device override is
+# exclusively for launch/dryrun.py (per assignment).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

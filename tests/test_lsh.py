@@ -1,0 +1,107 @@
+"""LSH approximation: Theorems 5.2/5.3 classification guarantees + §6.3
+degree heuristic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    approximate_similarities,
+    build_index,
+    compute_similarities,
+    minhash_sketches,
+    minhash_edge_similarity,
+    kpartition_sketches,
+    kpartition_edge_similarity,
+    simhash_sketches,
+    simhash_edge_similarity,
+    random_graph,
+    query,
+)
+from repro.core.quality import adjusted_rand_index
+
+
+def test_simhash_classification_bound():
+    """Theorem 5.2: with k ≥ π²·ln(nm)/(2δ²), every edge with exact cosine
+    outside (ε−δ, ε+√(1−ε²)δ) is classified correctly w.h.p."""
+    g = random_graph(60, 8.0, seed=21)
+    eps, delta = 0.5, 0.25
+    n, m = g.n, g.m
+    k = int(np.ceil(np.pi**2 * np.log(n * m) / (2 * delta**2)))
+    exact = np.asarray(compute_similarities(g, "cosine"))
+    sk = simhash_sketches(g, k, jax.random.PRNGKey(0))
+    approx = np.asarray(simhash_edge_similarity(sk, g.edge_u, g.nbrs, k))
+    lo, hi = eps - delta, eps + np.sqrt(1 - eps**2) * delta
+    outside = (exact <= lo) | (exact >= hi)
+    misclassified = ((exact >= eps) != (approx >= eps)) & outside
+    assert misclassified.sum() == 0, \
+        f"{misclassified.sum()} edges misclassified outside the band"
+
+
+def test_minhash_classification_bound():
+    """Theorem 5.3: k ≥ ln(nm)/(2δ²) ⇒ edges outside (ε−δ, ε+δ) classified
+    correctly w.h.p."""
+    g = random_graph(60, 8.0, seed=22)
+    eps, delta = 0.4, 0.2
+    k = int(np.ceil(np.log(g.n * g.m) / (2 * delta**2)))
+    exact = np.asarray(compute_similarities(g, "jaccard"))
+    sk = minhash_sketches(g, k, jax.random.PRNGKey(1))
+    approx = np.asarray(minhash_edge_similarity(sk, g.edge_u, g.nbrs))
+    outside = (exact <= eps - delta) | (exact >= eps + delta)
+    mis = ((exact >= eps) != (approx >= eps)) & outside
+    assert mis.sum() == 0
+
+
+def test_minhash_unbiased():
+    """MinHash match probability equals the Jaccard similarity."""
+    g = random_graph(30, 6.0, seed=23)
+    exact = np.asarray(compute_similarities(g, "jaccard"))
+    ests = []
+    for trial in range(6):
+        sk = minhash_sketches(g, 128, jax.random.PRNGKey(100 + trial))
+        ests.append(np.asarray(minhash_edge_similarity(sk, g.edge_u, g.nbrs)))
+    mean_est = np.mean(ests, axis=0)
+    assert np.max(np.abs(mean_est - exact)) < 0.12
+
+
+def test_kpartition_reasonable():
+    """k-partition MinHash (no tail bound — paper §6.3) is still a usable
+    estimator: mean abs error small at moderate k."""
+    g = random_graph(80, 10.0, seed=24)
+    exact = np.asarray(compute_similarities(g, "jaccard"))
+    sk = kpartition_sketches(g, 128, jax.random.PRNGKey(2))
+    approx = np.asarray(kpartition_edge_similarity(sk, g.edge_u, g.nbrs))
+    assert np.mean(np.abs(approx - exact)) < 0.12
+
+
+def test_degree_heuristic_exact_for_low_degree():
+    """§6.3: edges with a low-degree endpoint get *exact* similarities."""
+    g = random_graph(50, 4.0, seed=25)
+    k = 64   # threshold k ⇒ every vertex here is low-degree
+    exact = np.asarray(compute_similarities(g, "cosine"))
+    approx = np.asarray(approximate_similarities(
+        g, measure="cosine", method="simhash", samples=k,
+        key=jax.random.PRNGKey(3), degree_heuristic=True))
+    np.testing.assert_allclose(approx, exact, atol=1e-5)
+
+
+def test_approx_clustering_quality():
+    """Clusterings from approximate σ recover the exact-σ clustering on a
+    planted-partition graph (paper §7.3.4 ARI experiment, miniature)."""
+    g = random_graph(120, 10.0, seed=26, planted_clusters=5)
+    idx_exact = build_index(g, "cosine")
+    res_exact = query(idx_exact, g, 3, 0.4)
+    idx_approx = build_index(g, "cosine", approx="simhash", samples=512,
+                             key=jax.random.PRNGKey(4))
+    res_approx = query(idx_approx, g, 3, 0.4)
+    ari = adjusted_rand_index(np.asarray(res_exact.labels),
+                              np.asarray(res_approx.labels))
+    assert ari > 0.8, f"ARI {ari}"
+
+
+def test_sketches_deterministic():
+    g = random_graph(40, 5.0, seed=27)
+    k = jax.random.PRNGKey(9)
+    a = np.asarray(simhash_sketches(g, 96, k))
+    b = np.asarray(simhash_sketches(g, 96, k))
+    np.testing.assert_array_equal(a, b)

@@ -1,0 +1,99 @@
+"""Hypothesis property tests for SCAN invariants (paper §3.1 definitions)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    build_index,
+    compute_similarities,
+    from_edge_list,
+    query,
+)
+from repro.core.scan_ref import scan_ref
+
+
+@st.composite
+def graphs(draw):
+    n = draw(st.integers(5, 28))
+    max_edges = n * (n - 1) // 2
+    m = draw(st.integers(1, min(max_edges, 3 * n)))
+    pairs = draw(
+        st.lists(
+            st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+            min_size=m, max_size=m,
+        )
+    )
+    pairs = [(u, v) for u, v in pairs if u != v]
+    if not pairs:
+        pairs = [(0, 1 % n)] if n > 1 else []
+    return from_edge_list(n, np.asarray(pairs, dtype=np.int64))
+
+
+@settings(max_examples=25, deadline=None)
+@given(graphs(), st.integers(2, 5), st.floats(0.05, 0.95))
+def test_parallel_matches_oracle(g, mu, eps):
+    sims = compute_similarities(g, "cosine")
+    idx = build_index(g, "cosine", sims=sims)
+    res = query(idx, g, mu, float(eps))
+    ref = scan_ref(g, mu, float(eps), "cosine", sims=np.asarray(sims))
+    np.testing.assert_array_equal(np.asarray(res.is_core), ref["is_core"])
+    np.testing.assert_array_equal(np.asarray(res.labels), ref["labels"])
+
+
+@settings(max_examples=25, deadline=None)
+@given(graphs(), st.integers(2, 5), st.floats(0.05, 0.95))
+def test_structural_invariants(g, mu, eps):
+    """Definitional invariants, checked directly (not via the oracle):
+    1. every clustered core's ε-similar core neighbors share its cluster
+       (maximality);
+    2. every clustered non-core (border) has an ε-similar core neighbor in
+       its cluster;
+    3. unclustered vertices are exactly those that are neither cores nor
+       ε-similar to a core."""
+    eps = float(eps)
+    sims = np.asarray(compute_similarities(g, "cosine"))
+    idx = build_index(g, "cosine", sims=sims)
+    res = query(idx, g, mu, eps)
+    labels = np.asarray(res.labels)
+    core = np.asarray(res.is_core)
+    eu, ev = np.asarray(g.edge_u), np.asarray(g.nbrs)
+    f32 = np.float32
+    simok = sims.astype(f32) >= f32(eps)
+
+    # (1) maximality over core-core similar edges
+    for i in range(g.m2):
+        u, v = eu[i], ev[i]
+        if core[u] and core[v] and simok[i]:
+            assert labels[u] == labels[v]
+    # (2)+(3)
+    for v in range(g.n):
+        if core[v]:
+            assert labels[v] >= 0
+            continue
+        nbr_core_sim = [
+            (labels[eu[i]], sims[i]) for i in range(g.m2)
+            if ev[i] == v and core[eu[i]] and simok[i]
+        ]
+        if labels[v] >= 0:
+            assert any(l == labels[v] for l, _ in nbr_core_sim)
+        else:
+            assert not nbr_core_sim
+
+
+@settings(max_examples=15, deadline=None)
+@given(graphs())
+def test_index_structure(g):
+    """NO rows are σ-descending with the self slot first; CO segments are
+    θ-descending (the sorted-prefix properties queries depend on)."""
+    idx = build_index(g, "cosine")
+    off = np.asarray(idx.offsets_c)
+    sims = np.asarray(idx.no_sims)
+    selfs = np.asarray(idx.no_self)
+    for v in range(g.n):
+        row = sims[off[v]: off[v + 1]]
+        assert np.all(np.diff(row) <= 1e-6)
+        assert selfs[off[v]]
+    co_off = np.asarray(idx.co_offsets)
+    theta = np.asarray(idx.co_theta)
+    for mu in range(2, idx.max_cdeg + 1):
+        seg = theta[co_off[mu]: co_off[mu + 1]]
+        assert np.all(np.diff(seg) <= 1e-6)

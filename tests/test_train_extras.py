@@ -1,0 +1,84 @@
+"""Training-path extras: chunked cross-entropy, remat policies, SP no-op,
+supervisor-driven elastic restore shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import model as mdl
+from repro.models import layers as L
+from repro.train.train_step import loss_fn
+
+
+def _cfg(**kw):
+    base = dict(arch_id="t", family="dense", n_layers=2, d_model=64,
+                n_heads=4, n_kv_heads=2, d_ff=128, vocab=251, head_dim=16,
+                dtype="float32", q_chunk=16)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    params = mdl.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    return cfg, params, {"tokens": tokens, "labels": tokens}
+
+
+def test_chunked_ce_matches_full(setup):
+    cfg, params, batch = setup
+    l1, _ = loss_fn(cfg, params, batch)
+    l2, _ = loss_fn(cfg.scaled(ce_chunk=8), params, batch)
+    assert abs(float(l1) - float(l2)) < 1e-5
+
+
+def test_chunked_ce_grads_match(setup):
+    cfg, params, batch = setup
+    g1 = jax.grad(lambda p: loss_fn(cfg, p, batch)[0])(params)
+    g2 = jax.grad(lambda p: loss_fn(cfg.scaled(ce_chunk=8), p, batch)[0])(params)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@pytest.mark.parametrize("policy", ["full", "dots"])
+def test_remat_policies_same_loss_and_grads(setup, policy):
+    cfg, params, batch = setup
+    l0, _ = loss_fn(cfg.scaled(remat=False), params, batch)
+    l1, _ = loss_fn(cfg.scaled(remat_policy=policy), params, batch)
+    assert abs(float(l0) - float(l1)) < 1e-5
+    g0 = jax.grad(lambda p: loss_fn(cfg.scaled(remat=False), p, batch)[0])(params)
+    g1 = jax.grad(
+        lambda p: loss_fn(cfg.scaled(remat_policy=policy), p, batch)[0])(params)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_sp_noop_on_single_device(setup):
+    cfg, params, batch = setup
+    L.set_sp_spec(None)
+    l0, _ = loss_fn(cfg, params, batch)
+    assert np.isfinite(float(l0))
+
+
+def test_chunked_ce_all_families():
+    """ce_chunk agrees with full CE for every model family."""
+    fams = {
+        "moe": _cfg(family="moe", n_kv_heads=4, n_experts=8, top_k=2,
+                    d_ff=48, d_ff_dense=96, first_dense_layers=1,
+                    capacity_factor=4.0),
+        "ssm": _cfg(family="ssm", n_heads=0, n_kv_heads=0, d_ff=0,
+                    ssm_state=8, ssm_head_dim=16, ssm_chunk=8),
+        "hybrid": _cfg(family="hybrid", ssm_state=8, ssm_head_dim=16,
+                       ssm_chunk=8, global_layers=(0,), window=16,
+                       meta_tokens=8),
+    }
+    for name, cfg in fams.items():
+        params = mdl.init_params(cfg, jax.random.PRNGKey(0))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                    cfg.vocab)
+        batch = {"tokens": tokens, "labels": tokens}
+        l1, _ = loss_fn(cfg, params, batch)
+        l2, _ = loss_fn(cfg.scaled(ce_chunk=8), params, batch)
+        assert abs(float(l1) - float(l2)) < 2e-5, name
