@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import build_index, compute_similarities, query
+from repro.core import build_index, compute_similarities, query, query_batch
 from benchmarks.common import GRAPHS, load_graph, timeit, emit
 
 
@@ -37,6 +37,18 @@ def run():
                 f"fig7/query_mu/{gname}/mu={mu}", t,
                 f"clusters={int(res.n_clusters)}"))
             mu *= 4
+
+        # batched sweep: a 4×4 (μ, ε) grid answered as ONE vmapped call
+        # (the serve-layer amortization; compare against per_query_s above)
+        mus = np.asarray([m for m in (2, 3, 4, 5) for _ in range(4)],
+                         dtype=np.int32)
+        epss = np.asarray([0.2, 0.4, 0.6, 0.8] * 4, dtype=np.float32)
+        t_grid = timeit(lambda: query_batch(idx, g, mus, epss))
+        t_one = timeit(lambda: query(idx, g, 5, 0.6))
+        lines.append(emit(
+            f"fig6/query_batched_sweep/{gname}/settings={len(mus)}", t_grid,
+            f"per_setting_s={t_grid / len(mus):.4f};"
+            f"vs_sequential={t_one * len(mus) / t_grid:.1f}x"))
 
         # direct (index-free) baseline: similarities recomputed per query
         def direct():

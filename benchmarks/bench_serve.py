@@ -1,0 +1,85 @@
+"""Serving-layer benchmark: batched-vs-sequential sweeps and the
+micro-batching engine under concurrent synthetic traffic.
+
+Three sections per graph:
+  * ``sweep_seq``    — G sequential ``query`` calls over a (μ, ε) grid;
+  * ``sweep_batch``  — the same grid as ONE vmapped ``query_batch`` call
+    (the amortization the serve layer is built on) + speedup;
+  * ``engine``       — queries/sec through the async micro-batching engine
+    with cold cache, and again fully cached.
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+
+import numpy as np
+
+from repro.core import build_index, query, query_batch
+from repro.serve import EngineConfig, MicroBatchEngine
+from benchmarks.common import load_graph, timeit, emit
+
+GRID_MUS = (2, 3, 4, 5)
+GRID_EPS = (0.2, 0.4, 0.6, 0.8)
+
+
+def run():
+    lines = []
+    for gname in ("sparse-8k", "planted-4k"):
+        g = load_graph(gname)
+        idx = build_index(g, "cosine")
+        mus = np.asarray([m for m in GRID_MUS for _ in GRID_EPS], np.int32)
+        epss = np.asarray(list(GRID_EPS) * len(GRID_MUS), np.float32)
+        n_set = len(mus)
+
+        def seq():
+            return [query(idx, g, int(m), float(e)) for m, e in zip(mus, epss)]
+
+        def batched():
+            return query_batch(idx, g, mus, epss)
+
+        t_seq = timeit(seq, trials=2)
+        t_batch = timeit(batched, trials=2)
+        lines.append(emit(
+            f"serve/sweep_seq/{gname}/settings={n_set}", t_seq,
+            f"per_query_s={t_seq / n_set:.4f}"))
+        lines.append(emit(
+            f"serve/sweep_batch/{gname}/settings={n_set}", t_batch,
+            f"per_query_s={t_batch / n_set:.4f};"
+            f"speedup={t_seq / t_batch:.2f}x"))
+
+        # ---- micro-batching engine under concurrent clients ----
+        cfg = EngineConfig(max_batch=16, flush_ms=2.0)
+        pool = [(int(m), float(e)) for m, e in zip(mus, epss)]
+
+        async def traffic(n_clients: int, n_requests: int):
+            engine = MicroBatchEngine(idx, g, config=cfg)
+            async with engine:
+                await engine.query(*pool[0])          # compile warmup
+                t0 = time.time()
+                rng = np.random.default_rng(0)
+
+                async def client():
+                    for _ in range(n_requests):
+                        await engine.query(*pool[rng.integers(len(pool))])
+                        await asyncio.sleep(0)
+
+                await asyncio.gather(*[client() for _ in range(n_clients)])
+                dt = time.time() - t0
+                # fully-cached second wave
+                t1 = time.time()
+                await asyncio.gather(*[client() for _ in range(n_clients)])
+                dt_hot = time.time() - t1
+            return dt, dt_hot, engine.batch_stats()
+
+        n_clients, n_requests = 8, 16
+        dt, dt_hot, st = asyncio.run(traffic(n_clients, n_requests))
+        total = n_clients * n_requests
+        lines.append(emit(
+            f"serve/engine_cold/{gname}/clients={n_clients}", dt / total,
+            f"qps={total / dt:.1f};device_calls={st['device_queries']};"
+            f"avg_batch={st['avg_batch']:.1f}"))
+        lines.append(emit(
+            f"serve/engine_cached/{gname}/clients={n_clients}", dt_hot / total,
+            f"qps={total / dt_hot:.1f};hit_rate={st['cache_hit_rate']:.2f}"))
+    return lines

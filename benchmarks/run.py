@@ -1,7 +1,7 @@
 """Benchmark entry point — one section per paper table/figure.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [section ...]
-Sections: fig5 fig6 fig8 fig9 roofline (default: all).
+Sections: fig5 fig6 fig8 fig9 serve roofline (default: all).
 Output: ``name,us_per_call,derived`` CSV lines.
 """
 from __future__ import annotations
@@ -10,7 +10,8 @@ import sys
 
 
 def main() -> None:
-    sections = sys.argv[1:] or ["fig5", "fig6", "fig8", "fig9", "roofline"]
+    sections = sys.argv[1:] or ["fig5", "fig6", "fig8", "fig9", "serve",
+                                "roofline"]
     print("name,us_per_call,derived")
     if "fig5" in sections:
         from benchmarks import bench_index_construction
@@ -24,6 +25,9 @@ def main() -> None:
     if "fig9" in sections or "fig10" in sections:
         from benchmarks import bench_approx_quality
         bench_approx_quality.run()
+    if "serve" in sections:
+        from benchmarks import bench_serve
+        bench_serve.run()
     if "roofline" in sections:
         from benchmarks import roofline
         roofline.run()

@@ -87,6 +87,25 @@ def latest_step(directory: str, shard_suffix: str = "") -> Optional[int]:
     return max(steps) if steps else None
 
 
+def leaf_key(*parts: str) -> str:
+    """The manifest path string for a nested-dict leaf, e.g.
+    ``leaf_key("index", "no_sims") == "['index']/['no_sims']"`` — matches
+    how ``_leaf_paths`` serializes ``jax.tree_util.DictKey`` paths."""
+    return "/".join(f"['{p}']" for p in parts)
+
+
+def load_leaves(directory: str, step: int,
+                shard_suffix: str = "") -> dict:
+    """Reference-free restore: the manifest is self-describing, so return
+    ``{leaf path string: numpy array}`` without a template pytree. Callers
+    that know their tree's keys rebuild structures via :func:`leaf_key`."""
+    path = os.path.join(directory, f"step_{step:08d}{shard_suffix}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    return {e["path"]: np.load(os.path.join(path, e["file"]))
+            for e in manifest["leaves"]}
+
+
 def restore(directory: str, step: int, like: Any, *, shardings=None,
             shard_suffix: str = "") -> Any:
     """Restore into the structure of ``like`` (shape/dtype validated).

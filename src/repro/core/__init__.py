@@ -12,7 +12,7 @@ from repro.core.similarity import (
     edge_similarities_subset,
 )
 from repro.core.index import ScanIndex, build_index, get_cores
-from repro.core.query import ClusterResult, query, hubs_outliers
+from repro.core.query import ClusterResult, query, query_batch, hubs_outliers
 from repro.core.lsh import (
     approximate_similarities,
     simhash_sketches,

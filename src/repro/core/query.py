@@ -79,6 +79,25 @@ def query(index: ScanIndex, g: CSRGraph, mu, eps) -> ClusterResult:
     return ClusterResult(labels=labels, is_core=is_core, n_clusters=n_clusters)
 
 
+@functools.partial(jax.jit, static_argnames=())
+def query_batch(index: ScanIndex, g: CSRGraph, mus, epss) -> ClusterResult:
+    """Answer a whole batch of (μ, ε) settings in one compiled call.
+
+    ``mus`` int32[B] / ``epss`` float32[B] → ClusterResult with a leading
+    batch axis (labels int32[B, n], is_core bool[B, n], n_clusters int32[B]).
+
+    Because ``query`` treats (μ, ε) as traced scalars over a fixed index,
+    vmapping over them shares one compiled artifact across the batch — the
+    index arrays are closed over (broadcast), only the parameters vary.
+    The inner connectivity ``while_loop`` runs until every batch member has
+    converged; min-label propagation is monotone so already-converged
+    members are fixed points and extra rounds are no-ops.
+    """
+    mus = jnp.atleast_1d(jnp.asarray(mus, jnp.int32))
+    epss = jnp.atleast_1d(jnp.asarray(epss, jnp.float32))
+    return jax.vmap(lambda m, e: query(index, g, m, e))(mus, epss)
+
+
 @jax.jit
 def hubs_outliers(g: CSRGraph, labels: jax.Array):
     """Classify unclustered vertices (paper §4.3).

@@ -1,0 +1,7 @@
+"""Distribution layer: sharding rules, expert parallelism, fault tolerance.
+
+Submodules (imported lazily by callers to keep device state untouched):
+  * ``sharding``        — :class:`Sharder`, the mesh→PartitionSpec rule engine.
+  * ``ep``              — explicit shard_map expert-parallel MoE FFN.
+  * ``fault_tolerance`` — :class:`Supervisor`, the restart/resume train loop.
+"""

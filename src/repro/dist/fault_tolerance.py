@@ -1,0 +1,187 @@
+"""Fault-tolerant training supervisor.
+
+The supervisor wraps the inner ``step_fn`` loop with the three behaviours a
+long-running multi-host job needs:
+
+* **restart-on-failure** — a step that raises is retried (up to
+  ``max_retries_per_step``) after restoring the last committed checkpoint,
+  so a flaky node loses at most ``ckpt_every`` steps of work;
+* **resume** — a fresh supervisor pointed at a populated ``ckpt_dir``
+  continues from the latest committed step instead of step 0 (elastic
+  restart path);
+* **straggler detection** — per-step wall times are compared against a
+  running mean; ``straggler_factor``× slowdowns sustained for
+  ``straggler_patience`` consecutive steps flag a persistent straggler
+  (the caller decides whether to re-mesh).
+
+Every decision is recorded in ``self.events`` as ``(step, kind, detail)``
+tuples — the audit log the tests (and an operator) read.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.ckpt import checkpoint
+
+
+@dataclasses.dataclass(frozen=True)
+class SupervisorConfig:
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    keep: int = 3
+    max_retries_per_step: int = 3
+    straggler_factor: float = 2.0
+    straggler_patience: int = 3
+
+
+class Supervisor:
+    """Runs ``state = step_fn(params, opt_state, batch)`` with checkpointed
+    restart/resume. ``state`` is ``{"params", "opt_state", "step"}``."""
+
+    def __init__(self, cfg: SupervisorConfig):
+        self.cfg = cfg
+        self.events: list[tuple] = []
+        self._step_times: list[float] = []
+        self._straggler_streak = 0
+        self._stop_requested = False
+
+    # ------------------------------------------------------------------
+    # event log
+    # ------------------------------------------------------------------
+    def _event(self, step: int, kind: str, detail: str = "") -> None:
+        self.events.append((step, kind, detail))
+
+    # ------------------------------------------------------------------
+    # straggler detection
+    # ------------------------------------------------------------------
+    def observe_step_time(self, step: int, seconds: float) -> bool:
+        """Record one step's wall time; True if it looks like a straggler."""
+        prior = self._step_times
+        is_straggler = bool(
+            prior
+            and seconds > self.cfg.straggler_factor * (sum(prior) / len(prior))
+        )
+        if is_straggler:
+            self._straggler_streak += 1
+            self._event(step, "straggler", f"{seconds:.3f}s")
+        else:
+            self._straggler_streak = 0
+            self._step_times.append(seconds)
+        return is_straggler
+
+    def straggler_persistent(self) -> bool:
+        return self._straggler_streak >= self.cfg.straggler_patience
+
+    # ------------------------------------------------------------------
+    # signals
+    # ------------------------------------------------------------------
+    def install_signal_handlers(self) -> None:
+        """SIGTERM/SIGINT request a graceful checkpoint-and-exit. No-op when
+        not on the main thread (e.g. under a test runner)."""
+
+        def _handler(signum, frame):  # noqa: ARG001
+            self._stop_requested = True
+
+        try:
+            signal.signal(signal.SIGTERM, _handler)
+            signal.signal(signal.SIGINT, _handler)
+        except ValueError:  # not the main thread
+            pass
+
+    # ------------------------------------------------------------------
+    # checkpoint plumbing
+    # ------------------------------------------------------------------
+    def _save(self, state: Dict[str, Any], step: int) -> None:
+        if not self.cfg.ckpt_dir:
+            return
+        tree = {
+            "params": state["params"],
+            "opt_state": state["opt_state"],
+            "step": jnp.int32(step),
+        }
+        checkpoint.save(self.cfg.ckpt_dir, step, tree, keep=self.cfg.keep)
+        self._event(step, "checkpoint", "")
+
+    def _restore(self, like: Dict[str, Any], step: int, shardings) -> Dict[str, Any]:
+        like_tree = {
+            "params": like["params"],
+            "opt_state": like["opt_state"],
+            "step": jnp.int32(0),
+        }
+        sh_tree = None
+        if shardings is not None:
+            sh_tree = {
+                "params": shardings.get("params"),
+                "opt_state": shardings.get("opt_state"),
+                "step": None,
+            }
+        tree = checkpoint.restore(self.cfg.ckpt_dir, step, like_tree,
+                                  shardings=sh_tree)
+        return {"params": tree["params"], "opt_state": tree["opt_state"],
+                "step": int(tree["step"])}
+
+    # ------------------------------------------------------------------
+    # the loop
+    # ------------------------------------------------------------------
+    def run(
+        self,
+        state: Dict[str, Any],
+        step_fn: Callable,
+        get_batch: Callable[[int], Any],
+        total_steps: int,
+        *,
+        shardings: Optional[Dict[str, Any]] = None,
+        hooks: Optional[Dict[str, Callable]] = None,
+    ) -> Dict[str, Any]:
+        hooks = hooks or {}
+        initial = state
+
+        latest = (checkpoint.latest_step(self.cfg.ckpt_dir)
+                  if self.cfg.ckpt_dir else None)
+        if latest is not None and latest > int(state["step"]):
+            state = self._restore(initial, latest, shardings)
+            self._event(latest, "resume", f"from step {latest}")
+
+        step = int(state["step"])
+        retries = 0
+        while step < total_steps:
+            if self._stop_requested:
+                self._save(state, step)
+                self._event(step, "preempted", "signal")
+                break
+            batch = get_batch(step)
+            t0 = time.time()
+            try:
+                params, opt_state, metrics = step_fn(
+                    state["params"], state["opt_state"], batch)
+            except Exception as e:  # noqa: BLE001 — injected node failures
+                retries += 1
+                self._event(step, "failure", repr(e))
+                if retries > self.cfg.max_retries_per_step:
+                    raise
+                latest = (checkpoint.latest_step(self.cfg.ckpt_dir)
+                          if self.cfg.ckpt_dir else None)
+                if latest is not None:
+                    state = self._restore(initial, latest, shardings)
+                    step = int(state["step"])
+                    self._event(step, "restart", f"rolled back to {step}")
+                else:
+                    self._event(step, "restart", "retrying in place")
+                continue
+            retries = 0
+            step += 1
+            state = {"params": params, "opt_state": opt_state, "step": step}
+            self.observe_step_time(step, time.time() - t0)
+            if "on_step" in hooks:
+                hooks["on_step"](step, metrics)
+            if self.cfg.ckpt_dir and step % self.cfg.ckpt_every == 0:
+                self._save(state, step)
+        if (self.cfg.ckpt_dir and not self._stop_requested
+                and checkpoint.latest_step(self.cfg.ckpt_dir) != step):
+            self._save(state, step)
+        return state

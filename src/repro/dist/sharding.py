@@ -1,0 +1,144 @@
+"""Mesh → PartitionSpec rule engine.
+
+One class owns every sharding decision so launchers, the dry-run driver and
+tests agree on the layout:
+
+* **params** — tensor-parallel over the ``model`` axis. The rule is a
+  fallback chain, not a name table: shard the largest dim divisible by the
+  TP degree, else the next, else replicate. The chain guarantees the
+  invariant the tests pin down — a sharded dim always divides its mesh-axis
+  size, and nothing ≥ 64M elements stays fully replicated on a 16-way mesh.
+* **optimizer state** — params layout plus ZeRO-1: the fp32 m/v/master
+  trees additionally shard their largest replicated dim over the data
+  axes, shrinking per-device optimizer bytes by the full mesh size.
+* **batches** — data-parallel over the non-``model`` axes (axis 0, or
+  axis 1 under a leading gradient-accumulation axis).
+* **decode/prefill caches** — batch over data axes; the largest remaining
+  TP-divisible dim (heads, or sequence for long caches) over ``model``.
+
+All meshes here use ``AxisType.Auto``, so a spec is a layout request —
+XLA inserts the collectives that keep the math identical to the
+unsharded program.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_REPLICATE_BELOW = 1 << 16   # leaves smaller than this stay replicated
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+class Sharder:
+    def __init__(self, mesh, cfg):
+        self.mesh = mesh
+        self.cfg = cfg
+        shape = dict(mesh.shape)
+        self.tp = int(shape.get("model", 1))
+        self.dp_axes = tuple(a for a in shape if a != "model")
+        self.dp = 1
+        for a in self.dp_axes:
+            self.dp *= int(shape[a])
+
+    # ------------------------------------------------------------------
+    # spec → sharding plumbing
+    # ------------------------------------------------------------------
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def tree_named(self, specs):
+        return jax.tree.map(self.named, specs, is_leaf=_is_spec)
+
+    def _dp_entry(self):
+        if not self.dp_axes:
+            return None
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+    # ------------------------------------------------------------------
+    # parameters
+    # ------------------------------------------------------------------
+    def _param_spec(self, shape) -> P:
+        shape = tuple(int(s) for s in shape)
+        size = int(np.prod(shape)) if shape else 1
+        if self.tp <= 1 or not shape or size < _REPLICATE_BELOW:
+            return P(*([None] * len(shape)))
+        entries = [None] * len(shape)
+        # largest divisible dim wins; later dims break ties (the contraction
+        # output dim, which keeps matmul outputs sharded like megatron)
+        for d in sorted(range(len(shape)),
+                        key=lambda d: (shape[d], d), reverse=True):
+            if shape[d] >= self.tp and shape[d] % self.tp == 0:
+                entries[d] = "model"
+                break
+        return P(*entries)
+
+    def param_specs(self, params):
+        return jax.tree.map(lambda leaf: self._param_spec(leaf.shape), params)
+
+    # ------------------------------------------------------------------
+    # optimizer state (ZeRO-1 over the data axes)
+    # ------------------------------------------------------------------
+    def _zero_spec(self, spec: P, shape) -> P:
+        shape = tuple(int(s) for s in shape)
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        dp_entry = self._dp_entry()
+        if self.dp > 1 and dp_entry is not None:
+            for d in sorted(range(len(shape)),
+                            key=lambda d: (shape[d], d), reverse=True):
+                if (entries[d] is None and shape[d] >= self.dp
+                        and shape[d] % self.dp == 0
+                        and np.prod(shape) >= _REPLICATE_BELOW):
+                    entries[d] = dp_entry
+                    break
+        return P(*entries)
+
+    def opt_specs(self, pspecs, params):
+        def zero_tree():
+            return jax.tree.map(
+                lambda sp, leaf: self._zero_spec(sp, leaf.shape),
+                pspecs, params, is_leaf=_is_spec)
+
+        return {"m": zero_tree(), "v": zero_tree(), "master": zero_tree(),
+                "count": P()}
+
+    # ------------------------------------------------------------------
+    # batches and caches
+    # ------------------------------------------------------------------
+    def batch_specs(self, batch, leading_accum: bool = False):
+        bdim = 1 if leading_accum else 0
+        dp_entry = self._dp_entry()
+
+        def spec(leaf):
+            shape = tuple(int(s) for s in leaf.shape)
+            if (self.dp <= 1 or dp_entry is None or len(shape) <= bdim
+                    or shape[bdim] % self.dp != 0):
+                return P(*([None] * len(shape)))
+            entries = [None] * len(shape)
+            entries[bdim] = dp_entry
+            return P(*entries)
+
+        return jax.tree.map(spec, batch)
+
+    def cache_specs(self, cache, kind: str | None = None):  # noqa: ARG002
+        dp_entry = self._dp_entry()
+
+        def spec(leaf):
+            shape = tuple(int(s) for s in leaf.shape)
+            entries = [None] * len(shape)
+            if (shape and self.dp > 1 and dp_entry is not None
+                    and shape[0] % self.dp == 0):
+                entries[0] = dp_entry
+            if self.tp > 1:
+                for d in sorted(range(1, len(shape)),
+                                key=lambda d: (shape[d], d), reverse=True):
+                    if shape[d] >= self.tp and shape[d] % self.tp == 0:
+                        entries[d] = "model"
+                        break
+            return P(*entries)
+
+        return jax.tree.map(spec, cache)

@@ -9,20 +9,26 @@ from __future__ import annotations
 import jax
 
 
+def _mesh(shape, axes):
+    # jax ≥ 0.5 takes axis_types=(AxisType.Auto, ...); 0.4.x has no axis
+    # types (every axis is implicitly auto). Support both.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(
+            tuple(shape), tuple(axes),
+            axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: (data=16, model=16) = 256 chips (one v5e pod).
     Multi-pod: (pod=2, data=16, model=16) = 512 chips; the 'pod' axis carries
     cross-pod data parallelism over DCN."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests, elastic re-mesh)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return _mesh(shape, axes)

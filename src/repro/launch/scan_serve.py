@@ -1,0 +1,139 @@
+"""SCAN query service launcher.
+
+Build (or load) a persistent SCAN index, then either print a (μ, ε)
+parameter-sweep table or run the micro-batching engine under synthetic
+concurrent traffic:
+
+    # build an index, persist it, sweep a parameter grid
+    PYTHONPATH=src python -m repro.launch.scan_serve sweep \
+        --n 8192 --avg-degree 16 --save /tmp/scan_idx \
+        --mus 2,4,8 --epss 0.2:0.8:7
+
+    # reload the persisted index and serve concurrent clients
+    PYTHONPATH=src python -m repro.launch.scan_serve serve \
+        --load /tmp/scan_idx --clients 32 --requests 64 --max-batch 32
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import time
+
+import numpy as np
+
+from repro.core import build_index, random_graph
+from repro.serve import (EngineConfig, IndexStore, MicroBatchEngine,
+                         grid_sweep, index_fingerprint, sweep_stats)
+
+
+def parse_values(spec: str, kind):
+    """``"2,4,8"`` → list, or ``"0.1:0.9:5"`` → linspace."""
+    if ":" in spec:
+        lo, hi, num = spec.split(":")
+        return [kind(v) for v in np.linspace(float(lo), float(hi), int(num))]
+    return [kind(v) for v in spec.split(",")]
+
+
+def get_index(args):
+    if args.load:
+        store = IndexStore(args.load)
+        index, g, fp = store.load()
+        print(f"loaded index v{store.latest_version()} from {args.load} "
+              f"(n={g.n}, m={g.m}, fingerprint={fp[:12]})")
+        return index, g, fp
+    g = random_graph(args.n, args.avg_degree, seed=args.seed,
+                     weighted=args.weighted,
+                     planted_clusters=args.clusters)
+    t0 = time.time()
+    index = build_index(g, args.measure)
+    fp = index_fingerprint(index, g)
+    print(f"built index in {time.time() - t0:.2f}s "
+          f"(n={g.n}, m={g.m}, fingerprint={fp[:12]})")
+    if args.save:
+        path = IndexStore(args.save).save(index, g)
+        print(f"persisted to {path}")
+    return index, g, fp
+
+
+def cmd_sweep(args):
+    index, g, _ = get_index(args)
+    mus = parse_values(args.mus, int)
+    epss = parse_values(args.epss, float)
+    t0 = time.time()
+    rows = sweep_stats(index, g, mus, epss)
+    dt = time.time() - t0
+    print(f"\n{len(rows)} (μ, ε) settings in one vmapped call "
+          f"({dt:.2f}s incl. compile)")
+    print(f"{'mu':>4} {'eps':>6} {'clusters':>9} {'cores':>7} "
+          f"{'coverage':>9} {'modularity':>11}")
+    for r in rows:
+        print(f"{r['mu']:>4} {r['eps']:>6.2f} {r['n_clusters']:>9} "
+              f"{r['n_cores']:>7} {r['coverage']:>9.3f} "
+              f"{r['modularity']:>11.4f}")
+    best = max(rows, key=lambda r: r["modularity"])
+    print(f"best modularity: mu={best['mu']} eps={best['eps']:.2f} "
+          f"Q={best['modularity']:.4f}")
+
+
+def cmd_serve(args):
+    index, g, fp = get_index(args)
+    cfg = EngineConfig(max_batch=args.max_batch, flush_ms=args.flush_ms)
+    engine = MicroBatchEngine(index, g, fingerprint=fp, config=cfg)
+    rng = np.random.default_rng(0)
+    pool = [(int(m), float(e))
+            for m in (2, 3, 4, 5, 8)
+            for e in np.round(np.linspace(0.1, 0.9, 17), 3)]
+
+    async def client(cid: int):
+        for _ in range(args.requests):
+            mu, eps = pool[rng.integers(len(pool))]
+            res = await engine.query(mu, eps)
+            del res
+            await asyncio.sleep(0)
+
+    async def main():
+        async with engine:
+            # warm the single compiled batch shape before timing
+            await engine.query(*pool[0])
+            t0 = time.time()
+            await asyncio.gather(*[client(i) for i in range(args.clients)])
+            return time.time() - t0
+
+    dt = asyncio.run(main())
+    total = args.clients * args.requests
+    st = engine.batch_stats()
+    print(f"\n{total} queries from {args.clients} clients in {dt:.2f}s "
+          f"→ {total / dt:.1f} q/s")
+    print(f"device calls={st['device_queries']} avg_batch={st['avg_batch']:.1f} "
+          f"cache_hits={st['cache_hits']} deduped={st['deduped']} "
+          f"hit_rate={st['cache_hit_rate']:.2f}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    for name, fn in (("sweep", cmd_sweep), ("serve", cmd_serve)):
+        p = sub.add_parser(name)
+        p.set_defaults(fn=fn)
+        p.add_argument("--load", help="load a persisted index directory")
+        p.add_argument("--save", help="persist the built index here")
+        p.add_argument("--n", type=int, default=8192)
+        p.add_argument("--avg-degree", type=float, default=16.0)
+        p.add_argument("--seed", type=int, default=0)
+        p.add_argument("--clusters", type=int, default=0)
+        p.add_argument("--weighted", action="store_true")
+        p.add_argument("--measure", default="cosine")
+        if name == "sweep":
+            p.add_argument("--mus", default="2,4,8")
+            p.add_argument("--epss", default="0.1:0.9:9")
+        else:
+            p.add_argument("--clients", type=int, default=16)
+            p.add_argument("--requests", type=int, default=32)
+            p.add_argument("--max-batch", type=int, default=32)
+            p.add_argument("--flush-ms", type=float, default=2.0)
+    args = ap.parse_args()
+    args.fn(args)
+
+
+if __name__ == "__main__":
+    main()

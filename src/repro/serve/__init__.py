@@ -1,0 +1,23 @@
+"""SCAN query service — the index as a servable artifact.
+
+The paper's GS*-Index exists because SCAN users explore many (μ, ε)
+settings against one graph: construction cost is amortized over queries.
+This package is the serving layer that completes that story:
+
+  * :mod:`repro.serve.store`  — persist / restore ``ScanIndex`` +
+    ``CSRGraph`` through the atomic checkpoint manifest, with a content
+    fingerprint for cache invalidation;
+  * :mod:`repro.serve.sweep`  — vmapped batch-query engine: a whole grid
+    of (μ, ε) settings in one compiled device call, plus per-setting
+    quality stats for "explore settings" workloads;
+  * :mod:`repro.serve.cache`  — LRU result cache keyed on
+    (index fingerprint, μ, quantized ε);
+  * :mod:`repro.serve.engine` — async micro-batching request loop that
+    coalesces concurrent single queries into one vmapped device call.
+
+CLI: ``PYTHONPATH=src python -m repro.launch.scan_serve --help``.
+"""
+from repro.serve.store import IndexStore, index_fingerprint
+from repro.serve.sweep import SweepResult, sweep, grid_sweep, sweep_stats
+from repro.serve.cache import ResultCache, quantize_eps
+from repro.serve.engine import MicroBatchEngine, EngineConfig

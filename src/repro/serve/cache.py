@@ -1,0 +1,95 @@
+"""LRU result cache for SCAN queries.
+
+Key design: ``(index fingerprint, μ, quantized ε)``.
+
+* The **fingerprint** (see ``serve/store.py``) names the graph + similarity
+  content, so a rebuilt-but-identical index keeps its cache hits while any
+  real change invalidates everything at once — no TTLs, no manual flushes.
+* **ε is quantized** to a fixed grid (default step 1e-4) before keying.
+  σ values are float32 with ~7 significant digits; clients exploring
+  "ε = 0.6" vs "ε = 0.60000002" mean the same query, and SCAN results are
+  a step function of ε (they only change when ε crosses one of the O(m)
+  distinct σ values), so a 1e-4 grid aliases only hairline-different
+  queries. The quantized value is also what gets *executed* on a miss,
+  keeping cached and computed answers consistent.
+
+The cache stores host-side results (numpy), so hits never touch the device.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Hashable, Optional, Tuple
+
+DEFAULT_EPS_QUANTUM = 1e-4
+
+
+def quantize_eps(eps: float, quantum: float = DEFAULT_EPS_QUANTUM) -> float:
+    """Snap ε onto the cache grid (also the value actually executed)."""
+    return round(round(float(eps) / quantum) * quantum, 10)
+
+
+class ResultCache:
+    """Plain LRU over (fingerprint, μ, quantized ε) → result."""
+
+    def __init__(self, capacity: int = 1024,
+                 eps_quantum: float = DEFAULT_EPS_QUANTUM):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self.eps_quantum = eps_quantum
+        self._data: OrderedDict[Hashable, object] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def key(self, fingerprint: str, mu: int, eps: float
+            ) -> Tuple[str, int, float]:
+        return (fingerprint, int(mu), quantize_eps(eps, self.eps_quantum))
+
+    def get(self, fingerprint: str, mu: int, eps: float) -> Optional[object]:
+        k = self.key(fingerprint, mu, eps)
+        if k in self._data:
+            self._data.move_to_end(k)
+            self.hits += 1
+            return self._data[k]
+        self.misses += 1
+        return None
+
+    def peek(self, fingerprint: str, mu: int, eps: float) -> Optional[object]:
+        """Like ``get`` but without touching the hit/miss counters (for
+        internal re-checks that shouldn't distort the stats)."""
+        k = self.key(fingerprint, mu, eps)
+        if k in self._data:
+            self._data.move_to_end(k)
+            return self._data[k]
+        return None
+
+    def put(self, fingerprint: str, mu: int, eps: float, value) -> None:
+        k = self.key(fingerprint, mu, eps)
+        if k in self._data:
+            self._data.move_to_end(k)
+        self._data[k] = value
+        while len(self._data) > self.capacity:
+            self._data.popitem(last=False)
+            self.evictions += 1
+
+    def invalidate(self, fingerprint: Optional[str] = None) -> int:
+        """Drop entries for one fingerprint (or everything); → count."""
+        if fingerprint is None:
+            n = len(self._data)
+            self._data.clear()
+            return n
+        stale = [k for k in self._data if k[0] == fingerprint]
+        for k in stale:
+            del self._data[k]
+        return len(stale)
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {"size": len(self._data), "capacity": self.capacity,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "hit_rate": self.hits / total if total else 0.0}

@@ -1,0 +1,187 @@
+"""Async micro-batching query engine.
+
+Concurrent clients each want one (μ, ε) answer; the device wants one big
+vmapped call. The engine is the adapter: requests land on an asyncio queue,
+a collector coroutine drains them until either ``max_batch`` requests are
+waiting or ``flush_ms`` has elapsed since the first one (classic
+size-or-deadline micro-batching), then answers the whole batch with a
+single ``query_batch`` call.
+
+Throughput mechanics:
+
+* **dedup** — concurrent identical requests (after ε quantization) fold
+  into one batch slot; every waiter gets the same result object.
+* **cache** — answers are LRU-cached on (fingerprint, μ, quantized ε)
+  (``serve/cache.py``); hits resolve without touching the device.
+* **fixed batch shape** — the device call is always padded to
+  ``max_batch`` slots (unused slots repeat the first real request), so
+  exactly one XLA artifact serves every traffic pattern; no recompiles
+  mid-flight.
+
+The device call runs inline on the event loop: it is the serial resource
+being scheduled, and everything else the loop does (queueing, cache hits)
+is microseconds. Results are host-side numpy ``ClusterResult``s.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.graph import CSRGraph
+from repro.core.index import ScanIndex
+from repro.core.query import ClusterResult, query_batch
+from repro.serve.cache import DEFAULT_EPS_QUANTUM, ResultCache, quantize_eps
+from repro.serve.store import index_fingerprint
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_batch: int = 32          # device slots per micro-batch
+    flush_ms: float = 2.0        # max wait after the first queued request
+    cache_capacity: int = 4096
+    eps_quantum: float = DEFAULT_EPS_QUANTUM
+
+
+class MicroBatchEngine:
+    """Serve one index to many concurrent ``await engine.query(μ, ε)``."""
+
+    def __init__(self, index: ScanIndex, g: CSRGraph, *,
+                 fingerprint: Optional[str] = None,
+                 config: EngineConfig = EngineConfig(),
+                 cache: Optional[ResultCache] = None):
+        self.index = index
+        self.g = g
+        self.cfg = config
+        self.fingerprint = (fingerprint if fingerprint is not None
+                            else index_fingerprint(index, g))
+        self.cache = cache if cache is not None else ResultCache(
+            config.cache_capacity, config.eps_quantum)
+        self._queue: asyncio.Queue = asyncio.Queue()
+        self._task: Optional[asyncio.Task] = None
+        self.stats = {"requests": 0, "batches": 0, "device_queries": 0,
+                      "cache_hits": 0, "deduped": 0}
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    async def start(self) -> None:
+        if self._task is None:
+            self._task = asyncio.get_running_loop().create_task(self._loop())
+
+    async def stop(self) -> None:
+        if self._task is not None:
+            self._queue.put_nowait(None)
+            await self._task
+            self._task = None
+
+    async def __aenter__(self) -> "MicroBatchEngine":
+        await self.start()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    # ------------------------------------------------------------------
+    # client API
+    # ------------------------------------------------------------------
+    async def query(self, mu: int, eps: float) -> ClusterResult:
+        """One SCAN query; coalesced with whatever else is in flight."""
+        if self._task is None:
+            await self.start()
+        self.stats["requests"] += 1
+        mu = int(mu)
+        eps_q = quantize_eps(eps, self.cfg.eps_quantum)
+        hit = self.cache.get(self.fingerprint, mu, eps_q)
+        if hit is not None:
+            self.stats["cache_hits"] += 1
+            return hit
+        fut = asyncio.get_running_loop().create_future()
+        self._queue.put_nowait((mu, eps_q, fut))
+        return await fut
+
+    # ------------------------------------------------------------------
+    # collector loop
+    # ------------------------------------------------------------------
+    async def _loop(self) -> None:
+        while True:
+            first = await self._queue.get()
+            if first is None:
+                return
+            batch = [first]
+            deadline = asyncio.get_running_loop().time() + self.cfg.flush_ms / 1e3
+            while len(batch) < self.cfg.max_batch:
+                timeout = deadline - asyncio.get_running_loop().time()
+                if timeout <= 0:
+                    break
+                try:
+                    item = await asyncio.wait_for(self._queue.get(), timeout)
+                except asyncio.TimeoutError:
+                    break
+                if item is None:
+                    self._execute_safe(batch)
+                    return
+                batch.append(item)
+            self._execute_safe(batch)
+
+    def _execute_safe(self, batch) -> None:
+        """Run one batch; a failing device call rejects that batch's
+        futures instead of killing the collector (later requests must not
+        hang on a dead loop)."""
+        try:
+            self._execute(batch)
+        except Exception as e:  # noqa: BLE001
+            for _, _, fut in batch:
+                if not fut.done():
+                    fut.set_exception(e)
+
+    def _execute(self, batch) -> None:
+        waiters: dict[tuple, list] = {}
+        for mu, eps_q, fut in batch:
+            waiters.setdefault((mu, eps_q), []).append(fut)
+        self.stats["batches"] += 1
+        self.stats["deduped"] += len(batch) - len(waiters)
+
+        need, resolved = [], {}
+        for key in waiters:
+            # a twin request may have filled the cache while we queued
+            hit = self.cache.peek(self.fingerprint, *key)
+            if hit is not None:
+                self.stats["cache_hits"] += 1
+                resolved[key] = hit
+            else:
+                need.append(key)
+
+        if need:
+            # pad to the fixed slot count: one compiled artifact forever
+            slots = need + [need[0]] * (self.cfg.max_batch - len(need))
+            mus = np.asarray([k[0] for k in slots], np.int32)
+            epss = np.asarray([k[1] for k in slots], np.float32)
+            res = query_batch(self.index, self.g, mus, epss)
+            labels = np.asarray(res.labels)
+            is_core = np.asarray(res.is_core)
+            n_clusters = np.asarray(res.n_clusters)
+            self.stats["device_queries"] += 1
+            for i, key in enumerate(need):
+                # copy: row views would pin the whole padded batch array
+                # in the cache for as long as the entry lives
+                out = ClusterResult(labels=labels[i].copy(),
+                                    is_core=is_core[i].copy(),
+                                    n_clusters=int(n_clusters[i]))
+                self.cache.put(self.fingerprint, key[0], key[1], out)
+                resolved[key] = out
+
+        for key, futs in waiters.items():
+            for fut in futs:
+                if not fut.done():
+                    fut.set_result(resolved[key])
+
+    def batch_stats(self) -> dict:
+        """Engine + cache counters (for the CLI / bench report)."""
+        out = dict(self.stats)
+        b = max(out["batches"], 1)
+        out["avg_batch"] = (out["requests"] - out["cache_hits"]) / b
+        out.update({f"cache_{k}": v for k, v in self.cache.stats().items()})
+        return out

@@ -1,0 +1,127 @@
+"""Persist / restore the SCAN index as a servable artifact.
+
+Storage rides on :mod:`repro.ckpt.checkpoint` — the same atomic-rename
+manifest format used for model checkpoints — so an index directory has the
+identical crash-safety story: readers only ever see fully committed
+versions, and ``keep`` old versions are retained for rollback.
+
+Layout of one committed version (``<dir>/step_<k>/``)::
+
+    manifest.json       leaf paths, shapes, dtypes (self-describing)
+    arr_00000.npy ...   one file per array leaf
+
+The saved tree bundles the index arrays, the graph arrays, the static
+shape fields (as int32 scalars) and the content **fingerprint** (sha256
+over the graph structure and edge similarities, stored as a uint8 digest
+array). The fingerprint names the *content*, not the file: two indexes
+built from the same graph + similarity measure fingerprint identically, so
+cached query results keyed on it survive a process restart but are
+invalidated the moment the underlying graph changes.
+
+Restore is reference-free: the manifest is self-describing, so
+:meth:`IndexStore.load` reconstructs ``ScanIndex``/``CSRGraph`` without a
+template pytree (the static fields come out of the saved scalars).
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import checkpoint
+from repro.core.graph import CSRGraph
+from repro.core.index import ScanIndex
+
+_INDEX_FIELDS = ("offsets_c", "no_nbrs", "no_sims", "no_self", "co_offsets",
+                 "co_vertex", "co_theta", "cdeg", "edge_sims")
+_GRAPH_FIELDS = ("offsets", "nbrs", "wgts", "edge_u")
+
+
+def index_fingerprint(index: ScanIndex, g: CSRGraph) -> str:
+    """Content hash of (graph structure, edge similarities).
+
+    Everything else in the index is a deterministic function of these, so
+    this is the minimal key that invalidates cached results exactly when
+    query answers could change.
+    """
+    h = hashlib.sha256()
+    h.update(f"n={g.n};m2={g.m2}".encode())
+    for arr in (g.offsets, g.nbrs, g.wgts, index.edge_sims):
+        h.update(np.ascontiguousarray(np.asarray(arr)).tobytes())
+    return h.hexdigest()
+
+
+def _to_tree(index: ScanIndex, g: CSRGraph, fingerprint: str) -> dict:
+    return {
+        "index": {f: getattr(index, f) for f in _INDEX_FIELDS},
+        "graph": {f: getattr(g, f) for f in _GRAPH_FIELDS},
+        "static": {
+            "n": jnp.int32(index.n),
+            "m2": jnp.int32(g.m2),
+            "m2c": jnp.int32(index.m2c),
+            "max_cdeg": jnp.int32(index.max_cdeg),
+        },
+        "fingerprint": np.frombuffer(fingerprint.encode(), dtype=np.uint8),
+    }
+
+
+class IndexStore:
+    """Versioned on-disk home for one graph's SCAN index."""
+
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+
+    # -- write ---------------------------------------------------------
+    def save(self, index: ScanIndex, g: CSRGraph, *,
+             version: Optional[int] = None) -> str:
+        """Commit a new version; returns the committed path."""
+        latest = checkpoint.latest_step(self.directory)
+        if version is None:
+            version = 0 if latest is None else latest + 1
+        elif latest is not None and version <= latest:
+            # versions are monotone: a lower one would be garbage-collected
+            # by the keep-N sweep the moment it commits
+            raise ValueError(
+                f"version {version} <= latest committed {latest}")
+        fp = index_fingerprint(index, g)
+        return checkpoint.save(self.directory, version,
+                               _to_tree(index, g, fp), keep=self.keep)
+
+    # -- read ----------------------------------------------------------
+    def latest_version(self) -> Optional[int]:
+        return checkpoint.latest_step(self.directory)
+
+    def load(self, version: Optional[int] = None
+             ) -> Tuple[ScanIndex, CSRGraph, str]:
+        """→ (index, graph, fingerprint) for ``version`` (default latest)."""
+        if version is None:
+            version = self.latest_version()
+            if version is None:
+                raise FileNotFoundError(
+                    f"no committed index under {self.directory!r}")
+        by_path = checkpoint.load_leaves(self.directory, version)
+
+        def leaf(*parts):
+            return by_path[checkpoint.leaf_key(*parts)]
+
+        static = {k: int(leaf("static", k))
+                  for k in ("n", "m2", "m2c", "max_cdeg")}
+        g = CSRGraph(
+            offsets=jnp.asarray(leaf("graph", "offsets")),
+            nbrs=jnp.asarray(leaf("graph", "nbrs")),
+            wgts=jnp.asarray(leaf("graph", "wgts")),
+            edge_u=jnp.asarray(leaf("graph", "edge_u")),
+            n=static["n"],
+            m2=static["m2"],
+        )
+        index = ScanIndex(
+            **{f: jnp.asarray(leaf("index", f)) for f in _INDEX_FIELDS},
+            n=static["n"],
+            m2c=static["m2c"],
+            max_cdeg=static["max_cdeg"],
+        )
+        fp = bytes(leaf("fingerprint")).decode()
+        return index, g, fp

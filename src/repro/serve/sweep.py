@@ -1,0 +1,94 @@
+"""Vmapped (μ, ε) parameter sweeps over one index.
+
+``query`` keeps (μ, ε) as traced scalars, so a whole batch of settings is
+one ``vmap`` away: the index arrays broadcast, only the two parameter
+vectors carry a batch axis, and the entire sweep is a single compiled
+device call (``repro.core.query_batch``). This module adds the
+exploration-workload conveniences on top:
+
+  * :func:`sweep`       — batched queries for explicit (μ, ε) pairs;
+  * :func:`grid_sweep`  — the full μ × ε cartesian grid in one call;
+  * :func:`sweep_stats` — per-setting cluster count / coverage /
+    modularity, the table a "which parameters should I use?" user reads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.graph import CSRGraph
+from repro.core.index import ScanIndex
+from repro.core.query import ClusterResult, query_batch
+from repro.core.quality import modularity
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """One row per (μ, ε) setting; arrays are host-side numpy."""
+
+    mus: np.ndarray         # int32[B]
+    epss: np.ndarray        # float32[B]
+    labels: np.ndarray      # int32[B, n]
+    is_core: np.ndarray     # bool[B, n]
+    n_clusters: np.ndarray  # int32[B]
+
+    def __len__(self) -> int:
+        return len(self.mus)
+
+    def result(self, i: int) -> ClusterResult:
+        """The i-th setting's answer as a plain ClusterResult."""
+        return ClusterResult(labels=self.labels[i], is_core=self.is_core[i],
+                             n_clusters=self.n_clusters[i])
+
+
+def sweep(index: ScanIndex, g: CSRGraph,
+          mus: Sequence[int], epss: Sequence[float]) -> SweepResult:
+    """Batched queries for paired parameter vectors (one compiled call)."""
+    mus = np.asarray(mus, np.int32).reshape(-1)
+    epss = np.asarray(epss, np.float32).reshape(-1)
+    if mus.shape != epss.shape:
+        raise ValueError(f"mus {mus.shape} and epss {epss.shape} must match")
+    res = query_batch(index, g, mus, epss)
+    return SweepResult(
+        mus=mus, epss=epss,
+        labels=np.asarray(res.labels),
+        is_core=np.asarray(res.is_core),
+        n_clusters=np.asarray(res.n_clusters),
+    )
+
+
+def grid_sweep(index: ScanIndex, g: CSRGraph,
+               mu_values: Sequence[int],
+               eps_values: Sequence[float]) -> SweepResult:
+    """Full cartesian μ × ε grid, μ-major row order."""
+    mu_grid, eps_grid = np.meshgrid(
+        np.asarray(mu_values, np.int32),
+        np.asarray(eps_values, np.float32), indexing="ij")
+    return sweep(index, g, mu_grid.reshape(-1), eps_grid.reshape(-1))
+
+
+def sweep_stats(index: ScanIndex, g: CSRGraph,
+                mu_values: Sequence[int],
+                eps_values: Sequence[float]) -> list[dict]:
+    """Per-setting summary rows for parameter exploration.
+
+    Returns dicts with ``mu, eps, n_clusters, n_cores, coverage,
+    modularity`` (coverage = fraction of vertices assigned to a cluster;
+    modularity follows the paper's §7.3.4 singleton convention for
+    unclustered vertices).
+    """
+    res = grid_sweep(index, g, mu_values, eps_values)
+    rows = []
+    for i in range(len(res)):
+        labels = res.labels[i]
+        rows.append({
+            "mu": int(res.mus[i]),
+            "eps": float(res.epss[i]),
+            "n_clusters": int(res.n_clusters[i]),
+            "n_cores": int(res.is_core[i].sum()),
+            "coverage": float((labels >= 0).mean()) if g.n else 0.0,
+            "modularity": modularity(g, labels),
+        })
+    return rows

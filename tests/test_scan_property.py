@@ -1,6 +1,9 @@
 """Hypothesis property tests for SCAN invariants (paper §3.1 definitions)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
     build_index,
