@@ -1,12 +1,21 @@
-"""Serving-layer benchmark: batched-vs-sequential sweeps and the
-micro-batching engine under concurrent synthetic traffic.
+"""Serving-layer benchmark: batched-vs-sequential sweeps, sharded sweeps,
+the micro-batching engine, and the multi-index router.
 
-Three sections per graph:
+Sections per graph:
   * ``sweep_seq``    — G sequential ``query`` calls over a (μ, ε) grid;
   * ``sweep_batch``  — the same grid as ONE vmapped ``query_batch`` call
     (the amortization the serve layer is built on) + speedup;
+  * ``sweep_shard``  — the same grid through ``query_batch_sharded`` on a
+    mesh over every visible device (rows appear when >1 device is visible —
+    run via ``python -m benchmarks.run serve --shards 8``);
   * ``engine``       — queries/sec through the async micro-batching engine
     with cold cache, and again fully cached.
+
+Cross-graph sections:
+  * ``router``       — mixed-fingerprint traffic for two indexes through
+    ONE engine (per-index buckets + cache partitions);
+  * ``router_walk``  — grid-walking traffic, where sweep-ahead warming
+    turns neighbor requests into cache hits.
 """
 from __future__ import annotations
 
@@ -24,10 +33,14 @@ GRID_EPS = (0.2, 0.4, 0.6, 0.8)
 
 
 def run():
+    import jax
+
     lines = []
+    built = {}
     for gname in ("sparse-8k", "planted-4k"):
         g = load_graph(gname)
         idx = build_index(g, "cosine")
+        built[gname] = (idx, g)
         mus = np.asarray([m for m in GRID_MUS for _ in GRID_EPS], np.int32)
         epss = np.asarray(list(GRID_EPS) * len(GRID_MUS), np.float32)
         n_set = len(mus)
@@ -47,6 +60,24 @@ def run():
             f"serve/sweep_batch/{gname}/settings={n_set}", t_batch,
             f"per_query_s={t_batch / n_set:.4f};"
             f"speedup={t_seq / t_batch:.2f}x"))
+
+        # ---- sharded sweep (giant-graph posture; needs a multi-device
+        # host, e.g. benchmarks.run serve --shards 8) ----
+        n_dev = jax.device_count()
+        if n_dev > 1:
+            from repro.core import ShardedQueryPlan, query_mesh
+            # plan built once (pad + device_put), like the engine does —
+            # the timed loop measures the steady-state sharded call only
+            plan = ShardedQueryPlan(idx, g, query_mesh())
+
+            def sharded():
+                return plan(mus, epss)
+
+            t_shard = timeit(sharded, trials=2)
+            lines.append(emit(
+                f"serve/sweep_shard/{gname}/shards={n_dev}", t_shard,
+                f"per_query_s={t_shard / n_set:.4f};"
+                f"vs_batch={t_batch / t_shard:.2f}x"))
 
         # ---- micro-batching engine under concurrent clients ----
         cfg = EngineConfig(max_batch=16, flush_ms=2.0)
@@ -82,4 +113,68 @@ def run():
         lines.append(emit(
             f"serve/engine_cached/{gname}/clients={n_clients}", dt_hot / total,
             f"qps={total / dt_hot:.1f};hit_rate={st['cache_hit_rate']:.2f}"))
+
+    # ---- multi-index router: both indexes behind one engine ----
+    cfg = EngineConfig(max_batch=16, flush_ms=2.0)
+    engine = MicroBatchEngine(config=cfg)
+    fps = [engine.register(idx, g) for idx, g in built.values()]
+    pool = [(int(m), float(e)) for m in GRID_MUS for e in GRID_EPS]
+
+    async def router_traffic(n_clients: int, n_requests: int):
+        async with engine:
+            for fp in fps:                            # compile warmup
+                await engine.query(*pool[0], fingerprint=fp)
+            rng = np.random.default_rng(1)
+            t0 = time.time()
+
+            async def client():
+                for _ in range(n_requests):
+                    fp = fps[rng.integers(len(fps))]
+                    await engine.query(*pool[rng.integers(len(pool))],
+                                       fingerprint=fp)
+                    await asyncio.sleep(0)
+
+            await asyncio.gather(*[client() for _ in range(n_clients)])
+            return time.time() - t0, engine.batch_stats()
+
+    n_clients, n_requests = 8, 16
+    dt, st = asyncio.run(router_traffic(n_clients, n_requests))
+    total = n_clients * n_requests
+    lines.append(emit(
+        f"serve/router/indexes={len(fps)}/clients={n_clients}", dt / total,
+        f"qps={total / dt:.1f};device_calls={st['device_queries']};"
+        f"buckets={st['batches']};warmed={st['warmed']};"
+        f"partitions={st['cache_partitions']}"))
+
+    # ---- grid-walking clients: warming converts neighbors to hits ----
+    walk_engine = MicroBatchEngine(config=EngineConfig(
+        max_batch=16, flush_ms=2.0, warm_ahead=True, warm_eps_step=0.05))
+    wfps = [walk_engine.register(idx, g) for idx, g in built.values()]
+
+    async def walk_traffic(n_clients: int, n_steps: int):
+        async with walk_engine:
+            for fp in wfps:
+                await walk_engine.query(3, 0.5, fingerprint=fp)
+            rng = np.random.default_rng(2)
+            t0 = time.time()
+
+            async def client(i):
+                fp = wfps[i % len(wfps)]
+                mu, eps = 3, 0.5
+                for _ in range(n_steps):
+                    mu = max(2, mu + int(rng.integers(-1, 2)))
+                    eps = float(np.clip(
+                        eps + 0.05 * int(rng.integers(-1, 2)), 0.0, 1.0))
+                    await walk_engine.query(mu, eps, fingerprint=fp)
+                    await asyncio.sleep(0)
+
+            await asyncio.gather(*[client(i) for i in range(n_clients)])
+            return time.time() - t0, walk_engine.batch_stats()
+
+    dt, st = asyncio.run(walk_traffic(8, 16))
+    total = 8 * 16
+    lines.append(emit(
+        f"serve/router_walk/indexes={len(wfps)}/clients=8", dt / total,
+        f"qps={total / dt:.1f};hit_rate={st['cache_hit_rate']:.2f};"
+        f"warmed={st['warmed']};device_calls={st['device_queries']}"))
     return lines

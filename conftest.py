@@ -1,0 +1,54 @@
+"""Root pytest config: per-test timeout guard.
+
+CI installs ``pytest-timeout`` (requirements-dev.txt), which honors the
+``timeout`` value in pytest.ini so a hung XLA compile fails that test fast
+instead of eating the whole job. Containers without the plugin fall back to
+the SIGALRM shim below — same ini value, best-effort delivery (the alarm
+fires on the next Python bytecode boundary, which is good enough to kill a
+hung host-side loop or a subprocess wait, the common hang modes here).
+"""
+from __future__ import annotations
+
+import signal
+
+import pytest
+
+
+def pytest_addoption(parser):
+    # pytest-timeout owns the "timeout" ini key when present; only register
+    # the fallback definition if nobody else has, so pytest doesn't warn
+    # about an unknown option in plugin-less containers.
+    if "timeout" not in getattr(parser, "_inidict", {}):
+        parser.addini(
+            "timeout",
+            "per-test timeout in seconds (SIGALRM shim when pytest-timeout "
+            "is not installed)",
+            default="0")
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    config = item.config
+    if (config.pluginmanager.hasplugin("timeout")
+            or not hasattr(signal, "SIGALRM")):
+        yield
+        return
+    try:
+        limit = float(config.getini("timeout") or 0)
+    except (TypeError, ValueError):
+        limit = 0.0
+    if limit <= 0:
+        yield
+        return
+
+    def on_alarm(signum, frame):
+        raise TimeoutError(
+            f"{item.nodeid} exceeded {limit:.0f}s (conftest SIGALRM shim)")
+
+    old = signal.signal(signal.SIGALRM, on_alarm)
+    signal.setitimer(signal.ITIMER_REAL, limit)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0)
+        signal.signal(signal.SIGALRM, old)

@@ -23,4 +23,13 @@ from repro.core.lsh import (
     kpartition_edge_similarity,
 )
 from repro.core.quality import modularity, adjusted_rand_index
-from repro.core.connectivity import connected_components
+from repro.core.connectivity import (
+    connected_components,
+    connected_components_allreduce,
+)
+from repro.core.distributed import (
+    ShardedQueryPlan,
+    force_host_devices,
+    query_batch_sharded,
+    query_mesh,
+)

@@ -9,6 +9,15 @@ neighbor labels across the active edge set, then pointer-jumps
 constant number of gathers/scatters → O(log n) rounds w.h.p. on real graphs,
 matching the span target; a ``while_loop`` on the changed-flag guarantees
 exact convergence regardless.
+
+With ``axis_name`` the same loop runs with the edge set *sharded* over a
+mesh axis (inside ``shard_map``): each shard scatter-mins its local edges
+into a private proposal vector and an ``lax.pmin`` all-reduce merges the
+proposals. min is associative, so the merged proposal equals the
+single-device scatter over the full edge set and the per-round label
+sequence — hence the fixed point — is bit-identical to the unsharded path.
+The changed-flag is computed from replicated state, so every shard exits
+the while_loop on the same round.
 """
 from __future__ import annotations
 
@@ -22,6 +31,7 @@ def connected_components(
     ev: jax.Array,         # int32[E]
     edge_mask: jax.Array,  # bool[E] active edges
     vertex_mask: jax.Array | None = None,  # bool[n] active vertices
+    axis_name: str | None = None,  # set inside shard_map: edges are a shard
 ) -> jax.Array:
     """Labels int32[n]: min vertex id of the component (only meaningful where
     vertex_mask); inactive vertices keep label = own id."""
@@ -34,8 +44,10 @@ def connected_components(
     def body(state):
         labels, _ = state
         lv = jnp.where(edge_mask, labels[ev], big)
-        # propagate min neighbor label into u
-        prop = jnp.full((n,), big, dtype=jnp.int32).at[eu].min(lv)
+        # propagate min neighbor label into u (shard-local when sharded)
+        prop = jnp.full((n,), big, dtype=jnp.int32).at[eu].min(lv, mode="drop")
+        if axis_name is not None:
+            prop = jax.lax.pmin(prop, axis_name)
         new = jnp.where(vertex_mask, jnp.minimum(labels, prop), labels)
         # pointer jumping (path compression) — twice per round
         new = new[new]
@@ -48,3 +60,17 @@ def connected_components(
 
     labels, _ = jax.lax.while_loop(cond, body, (init, jnp.bool_(True)))
     return labels
+
+
+def connected_components_allreduce(
+    n: int,
+    eu: jax.Array,         # int32[E/k] local edge shard
+    ev: jax.Array,         # int32[E/k]
+    edge_mask: jax.Array,  # bool[E/k] active edges in this shard
+    vertex_mask: jax.Array,  # bool[n] active vertices (replicated)
+    axis_name: str,
+) -> jax.Array:
+    """Sharded-edge spelling of :func:`connected_components` (see module
+    docstring); must run inside ``shard_map`` over ``axis_name``."""
+    return connected_components(n, eu, ev, edge_mask, vertex_mask,
+                                axis_name=axis_name)

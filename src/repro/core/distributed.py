@@ -14,12 +14,15 @@ The global sorts for NO/CO lower to XLA's distributed sort under pjit.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.core.connectivity import connected_components_allreduce
 from repro.core.graph import CSRGraph
 from repro.core import lsh as lsh_mod
 
@@ -75,3 +78,224 @@ def sharded_simhash_edge_similarities(
         return lsh_mod.simhash_edge_similarity(sk, eu, ev, samples)
 
     return _shard(g.edge_u, g.nbrs, sketches)
+
+
+# ---------------------------------------------------------------------------
+# Sharded clustering queries (giant-graph serving path)
+# ---------------------------------------------------------------------------
+# The single-device ``core.query`` holds every O(m) array — half-edges,
+# similarities, the CO slot arrays — on one device. For giant graphs the
+# edge axis is the memory that runs out (GPUSCAN++'s observation), so the
+# sharded query path partitions *every* edge-sized array over the mesh
+# ``data`` axis and keeps only O(n) label/working vectors replicated:
+#
+#   * core extraction      — each shard scans its CO slot chunk for the
+#     θ ≥ ε prefix boundary; one pmin merges the boundary, one pmax merges
+#     the scattered core mask.
+#   * ε-similar filtering  — purely shard-local (each shard owns its edges).
+#   * connectivity         — all-reduced label propagation
+#     (:func:`connected_components_allreduce`): scatter-min locally,
+#     pmin-merge, pointer-jump on the replicated labels.
+#   * border attachment    — local scatter-max/min + pmax/pmin merges.
+#
+# Every merge is an associative min/max, so each round reproduces the
+# single-device scatter exactly → results are bit-identical to
+# ``core.query_batch`` (asserted in tests/test_distributed_query.py).
+
+
+def force_host_devices(k: int) -> None:
+    """Ask XLA for ``k`` host-platform devices (CLI/bench/demo helper).
+
+    Appends ``--xla_force_host_platform_device_count=k`` to ``XLA_FLAGS``
+    unless a count is already forced. Must run before jax's backend
+    initializes (the flag is read exactly once, at first device use) —
+    importing jax is fine, touching devices is not.
+    """
+    if k <= 1:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={k}").strip()
+
+
+def query_mesh(n_shards: int | None = None, axis: str = "data") -> Mesh:
+    """1-D device mesh for sharded queries (defaults to every device)."""
+    devs = jax.devices()
+    if n_shards is None:
+        n_shards = len(devs)
+    if n_shards > len(devs):
+        raise ValueError(
+            f"requested {n_shards} shards but only {len(devs)} devices are "
+            "visible (set XLA_FLAGS=--xla_force_host_platform_device_count=K "
+            "before importing jax to emulate K host devices)")
+    return Mesh(np.asarray(devs[:n_shards]), (axis,))
+
+
+def _pad_axis(arr, total: int, fill):
+    """Pad a 1-D array to ``total`` entries with ``fill`` (host-side)."""
+    pad = total - arr.shape[0]
+    if pad == 0:
+        return jnp.asarray(arr)
+    return jnp.concatenate(
+        [jnp.asarray(arr), jnp.full((pad,), fill, dtype=jnp.asarray(arr).dtype)]
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "max_cdeg", "mesh", "axis"))
+def _sharded_query_batch(
+    eu, ev, esim, emask,            # edge-sized, padded to k·⌈E/k⌉
+    co_vertex, co_theta, co_idx,    # CO-slot-sized, padded likewise
+    co_offsets, mus, epss,          # replicated (small / parameter vectors)
+    *, n: int, max_cdeg: int, mesh: Mesh, axis: str,
+):
+    big_idx = jnp.int32(2 ** 30)
+
+    def one(mu, eps, eu, ev, esim, emask, co_v, co_t, co_i, co_off):
+        mu = jnp.asarray(mu, jnp.int32)
+        eps = jnp.asarray(eps, jnp.float32)
+
+        # ---- cores: CO[μ] prefix with θ ≥ ε, slots sharded ----
+        lo = co_off[jnp.clip(mu, 0, max_cdeg)]
+        hi = co_off[jnp.clip(mu + 1, 0, max_cdeg + 1)]
+        in_seg = (co_i >= lo) & (co_i < hi)
+        below = in_seg & (co_t < eps)
+        local_first = jnp.min(jnp.where(below, co_i, big_idx))
+        first_below = jax.lax.pmin(local_first, axis)
+        first_below = jnp.where(first_below == big_idx, hi, first_below)
+        core_slots = in_seg & (co_i < first_below)
+        local_mask = (
+            jnp.zeros((n,), jnp.int32)
+            .at[co_v]
+            .max(core_slots.astype(jnp.int32), mode="drop")
+        )
+        is_core = jax.lax.pmax(local_mask, axis) > 0
+        is_core = is_core & (mu >= 2) & (mu <= max_cdeg)
+
+        # ---- ε-similar half-edges incident on cores (shard-local) ----
+        sim_ok = (esim >= eps) & emask
+        core_u = is_core[eu]
+        core_v = is_core[ev]
+        core_core = sim_ok & core_u & core_v
+
+        labels0 = connected_components_allreduce(
+            n, eu, ev, core_core, is_core, axis)
+        labels = jnp.where(is_core, labels0, jnp.int32(-1))
+
+        # ---- border attachment (scatter-max σ, tie to lower core id) ----
+        border_edge = sim_ok & core_u & ~core_v
+        neg = jnp.float32(-1.0)
+        local_best = (
+            jnp.full((n,), neg)
+            .at[ev]
+            .max(jnp.where(border_edge, esim, neg), mode="drop")
+        )
+        best_sim = jax.lax.pmax(local_best, axis)
+        tie = border_edge & (esim >= best_sim[ev]) & (best_sim[ev] > neg)
+        big = jnp.int32(n)
+        local_core = (
+            jnp.full((n,), big)
+            .at[ev]
+            .min(jnp.where(tie, eu, big), mode="drop")
+        )
+        best_core = jax.lax.pmin(local_core, axis)
+        has_border = best_core < big
+        border_label = labels0[jnp.clip(best_core, 0, n - 1)]
+        labels = jnp.where(~is_core & has_border, border_label, labels)
+
+        n_clusters = jnp.sum(is_core & (labels == jnp.arange(n)))
+        return labels, is_core, n_clusters
+
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis),
+                  P(axis), P(axis), P(axis),
+                  P(None), P(None), P(None)),
+        out_specs=(P(None), P(None), P(None)),
+        check_rep=False,
+    )
+    def _shard(eu, ev, esim, emask, co_v, co_t, co_i, co_off, mus, epss):
+        return jax.vmap(
+            lambda m, e: one(m, e, eu, ev, esim, emask, co_v, co_t, co_i,
+                             co_off)
+        )(mus, epss)
+
+    return _shard(eu, ev, esim, emask, co_vertex, co_theta, co_idx,
+                  co_offsets, mus, epss)
+
+
+class ShardedQueryPlan:
+    """Padded, device-placed operands for repeated sharded queries over one
+    (index, graph, mesh) triple.
+
+    Padding and concatenating the O(m) edge/CO-slot arrays is per-*plan*
+    work, not per-*query* work: the serve engine answers a flush every few
+    milliseconds against a fixed index, so it builds the plan once at
+    registration and every device call is just the jitted shard_map
+    computation over already-sharded arrays. ``query_batch_sharded`` builds
+    a throwaway plan for one-shot callers.
+
+    Ragged edge counts are padded host-side to a multiple of the axis size;
+    padding edges carry ``emask=False`` and padded CO slots sit outside
+    every [lo, hi) segment, so they never contribute.
+    """
+
+    def __init__(self, index, g: CSRGraph, mesh: Mesh, axis: str = "data"):
+        self.mesh = mesh
+        self.axis = axis
+        self.n = index.n
+        self.max_cdeg = index.max_cdeg
+        k = mesh.shape[axis]
+        shard = NamedSharding(mesh, P(axis))
+        repl = NamedSharding(mesh, P())
+
+        ep = max(-(-max(g.m2, 1) // k) * k, k)   # edge slots per full array
+        self.emask = jax.device_put(jnp.arange(ep) < g.m2, shard)
+        self.eu = jax.device_put(_pad_axis(g.edge_u, ep, 0), shard)
+        self.ev = jax.device_put(_pad_axis(g.nbrs, ep, 0), shard)
+        self.esim = jax.device_put(_pad_axis(index.edge_sims, ep, 0.0), shard)
+
+        m_co = index.co_vertex.shape[0]
+        cp = max(-(-max(m_co, 1) // k) * k, k)
+        self.co_v = jax.device_put(_pad_axis(index.co_vertex, cp, 0), shard)
+        self.co_t = jax.device_put(_pad_axis(index.co_theta, cp, 0.0), shard)
+        self.co_i = jax.device_put(
+            _pad_axis(jnp.arange(m_co, dtype=jnp.int32), cp, 2 ** 30), shard)
+        self.co_offsets = jax.device_put(index.co_offsets, repl)
+
+    def __call__(self, mus, epss):
+        from repro.core.query import ClusterResult
+
+        mus = jnp.atleast_1d(jnp.asarray(mus, jnp.int32))
+        epss = jnp.atleast_1d(jnp.asarray(epss, jnp.float32))
+        labels, is_core, n_clusters = _sharded_query_batch(
+            self.eu, self.ev, self.esim, self.emask,
+            self.co_v, self.co_t, self.co_i,
+            self.co_offsets, mus, epss,
+            n=self.n, max_cdeg=self.max_cdeg, mesh=self.mesh,
+            axis=self.axis)
+        return ClusterResult(labels=labels, is_core=is_core,
+                             n_clusters=n_clusters)
+
+
+def query_batch_sharded(
+    index,
+    g: CSRGraph,
+    mus,
+    epss,
+    *,
+    mesh: Mesh | None = None,
+    axis: str = "data",
+):
+    """Sharded twin of :func:`repro.core.query_batch`.
+
+    Partitions the half-edge arrays (endpoints, similarities) and the CO
+    slot arrays over ``mesh``'s ``axis``; returns the exact same
+    ``ClusterResult`` (leading batch axis) as the single-device path.
+    Repeated callers should build a :class:`ShardedQueryPlan` once instead.
+    """
+    if mesh is None:
+        mesh = query_mesh(axis=axis)
+    return ShardedQueryPlan(index, g, mesh, axis)(mus, epss)

@@ -1,17 +1,28 @@
 """SCAN query service launcher.
 
-Build (or load) a persistent SCAN index, then either print a (μ, ε)
-parameter-sweep table or run the micro-batching engine under synthetic
-concurrent traffic:
+Build (or load) persistent SCAN indexes, then either print a (μ, ε)
+parameter-sweep table — optionally sharded over a device mesh — or run the
+micro-batching engine under synthetic concurrent traffic, optionally
+routing several indexes through one engine:
 
     # build an index, persist it, sweep a parameter grid
     PYTHONPATH=src python -m repro.launch.scan_serve sweep \
         --n 8192 --avg-degree 16 --save /tmp/scan_idx \
         --mus 2,4,8 --epss 0.2:0.8:7
 
+    # the same sweep with the edge arrays sharded over 8 host devices
+    PYTHONPATH=src python -m repro.launch.scan_serve sweep --shards 8
+
     # reload the persisted index and serve concurrent clients
     PYTHONPATH=src python -m repro.launch.scan_serve serve \
         --load /tmp/scan_idx --clients 32 --requests 64 --max-batch 32
+
+    # one engine, three indexes, mixed-fingerprint traffic
+    PYTHONPATH=src python -m repro.launch.scan_serve serve --indexes 3
+
+``--shards K`` forces K host-platform devices itself when jax would
+otherwise see fewer (same effect as
+``XLA_FLAGS=--xla_force_host_platform_device_count=K``).
 """
 from __future__ import annotations
 
@@ -20,10 +31,6 @@ import asyncio
 import time
 
 import numpy as np
-
-from repro.core import build_index, random_graph
-from repro.serve import (EngineConfig, IndexStore, MicroBatchEngine,
-                         grid_sweep, index_fingerprint, sweep_stats)
 
 
 def parse_values(spec: str, kind):
@@ -34,21 +41,25 @@ def parse_values(spec: str, kind):
     return [kind(v) for v in spec.split(",")]
 
 
-def get_index(args):
+def get_index(args, *, seed=None):
+    from repro.core import build_index, random_graph
+    from repro.serve import IndexStore, index_fingerprint
+
     if args.load:
         store = IndexStore(args.load)
         index, g, fp = store.load()
         print(f"loaded index v{store.latest_version()} from {args.load} "
               f"(n={g.n}, m={g.m}, fingerprint={fp[:12]})")
         return index, g, fp
-    g = random_graph(args.n, args.avg_degree, seed=args.seed,
+    seed = args.seed if seed is None else seed
+    g = random_graph(args.n, args.avg_degree, seed=seed,
                      weighted=args.weighted,
                      planted_clusters=args.clusters)
     t0 = time.time()
     index = build_index(g, args.measure)
     fp = index_fingerprint(index, g)
     print(f"built index in {time.time() - t0:.2f}s "
-          f"(n={g.n}, m={g.m}, fingerprint={fp[:12]})")
+          f"(n={g.n}, m={g.m}, seed={seed}, fingerprint={fp[:12]})")
     if args.save:
         path = IndexStore(args.save).save(index, g)
         print(f"persisted to {path}")
@@ -56,14 +67,24 @@ def get_index(args):
 
 
 def cmd_sweep(args):
+    from repro.serve import sweep_stats
+
     index, g, _ = get_index(args)
     mus = parse_values(args.mus, int)
     epss = parse_values(args.epss, float)
+    mesh = None
+    if args.shards > 1:
+        import jax
+        from repro.core import query_mesh
+        mesh = query_mesh(args.shards)
+        print(f"sharded sweep: edge arrays over {args.shards} of "
+              f"{jax.device_count()} devices (axis 'data')")
     t0 = time.time()
-    rows = sweep_stats(index, g, mus, epss)
+    rows = sweep_stats(index, g, mus, epss, mesh=mesh)
     dt = time.time() - t0
+    shard_note = f", {args.shards} shards" if mesh is not None else ""
     print(f"\n{len(rows)} (μ, ε) settings in one vmapped call "
-          f"({dt:.2f}s incl. compile)")
+          f"({dt:.2f}s incl. compile{shard_note})")
     print(f"{'mu':>4} {'eps':>6} {'clusters':>9} {'cores':>7} "
           f"{'coverage':>9} {'modularity':>11}")
     for r in rows:
@@ -76,9 +97,30 @@ def cmd_sweep(args):
 
 
 def cmd_serve(args):
-    index, g, fp = get_index(args)
-    cfg = EngineConfig(max_batch=args.max_batch, flush_ms=args.flush_ms)
-    engine = MicroBatchEngine(index, g, fingerprint=fp, config=cfg)
+    from repro.serve import EngineConfig, MicroBatchEngine
+
+    if args.load and args.indexes > 1:
+        raise SystemExit(
+            "--indexes K>1 builds K distinct graphs and cannot be combined "
+            "with --load (a persisted directory holds one index)")
+    cfg = EngineConfig(max_batch=args.max_batch, flush_ms=args.flush_ms,
+                       warm_ahead=not args.no_warm,
+                       shards=args.shards if args.shards > 1 else None)
+    engine = MicroBatchEngine(config=cfg)
+    catalog = None
+    if args.indexes > 1 and args.save:
+        # K indexes need K named stores, not K versions of one store (only
+        # the last version would survive a --load); route through a catalog
+        from repro.serve import IndexCatalog
+        catalog = IndexCatalog(args.save)
+        args.save = None
+    fps = []
+    for k in range(max(args.indexes, 1)):
+        index, g, fp = get_index(args, seed=args.seed + k)
+        if catalog is not None:
+            path = catalog.save(f"idx{k}", index, g)
+            print(f"persisted to {path}")
+        fps.append(engine.register(index, g, fingerprint=fp))
     rng = np.random.default_rng(0)
     pool = [(int(m), float(e))
             for m in (2, 3, 4, 5, 8)
@@ -87,14 +129,16 @@ def cmd_serve(args):
     async def client(cid: int):
         for _ in range(args.requests):
             mu, eps = pool[rng.integers(len(pool))]
-            res = await engine.query(mu, eps)
+            fp = fps[rng.integers(len(fps))]
+            res = await engine.query(mu, eps, fingerprint=fp)
             del res
             await asyncio.sleep(0)
 
     async def main():
         async with engine:
-            # warm the single compiled batch shape before timing
-            await engine.query(*pool[0])
+            # warm every index's compiled batch shape before timing
+            for fp in fps:
+                await engine.query(*pool[0], fingerprint=fp)
             t0 = time.time()
             await asyncio.gather(*[client(i) for i in range(args.clients)])
             return time.time() - t0
@@ -102,11 +146,15 @@ def cmd_serve(args):
     dt = asyncio.run(main())
     total = args.clients * args.requests
     st = engine.batch_stats()
-    print(f"\n{total} queries from {args.clients} clients in {dt:.2f}s "
-          f"→ {total / dt:.1f} q/s")
-    print(f"device calls={st['device_queries']} avg_batch={st['avg_batch']:.1f} "
-          f"cache_hits={st['cache_hits']} deduped={st['deduped']} "
-          f"hit_rate={st['cache_hit_rate']:.2f}")
+    mode = f"{len(fps)} indexes" + (f", {args.shards} shards"
+                                    if cfg.shards else "")
+    print(f"\n{total} queries from {args.clients} clients ({mode}) "
+          f"in {dt:.2f}s → {total / dt:.1f} q/s")
+    print(f"device calls={st['device_queries']} buckets={st['batches']} "
+          f"avg_batch={st['avg_batch']:.1f} cache_hits={st['cache_hits']} "
+          f"deduped={st['deduped']} warmed={st['warmed']} "
+          f"hit_rate={st['cache_hit_rate']:.2f} "
+          f"partitions={st['cache_partitions']}")
 
 
 def main():
@@ -123,15 +171,26 @@ def main():
         p.add_argument("--clusters", type=int, default=0)
         p.add_argument("--weighted", action="store_true")
         p.add_argument("--measure", default="cosine")
+        p.add_argument("--shards", type=int, default=0,
+                       help="shard the query path over K devices")
         if name == "sweep":
             p.add_argument("--mus", default="2,4,8")
             p.add_argument("--epss", default="0.1:0.9:9")
         else:
+            p.add_argument("--indexes", type=int, default=1,
+                           help="serve K indexes through one engine")
             p.add_argument("--clients", type=int, default=16)
             p.add_argument("--requests", type=int, default=32)
             p.add_argument("--max-batch", type=int, default=32)
             p.add_argument("--flush-ms", type=float, default=2.0)
+            p.add_argument("--no-warm", action="store_true",
+                           help="disable sweep-ahead cache warming")
     args = ap.parse_args()
+    if getattr(args, "shards", 0) > 1:
+        # must happen before jax's backend initializes — which is why all
+        # heavier repro imports are deferred into the command functions
+        from repro.core.distributed import force_host_devices
+        force_host_devices(args.shards)
     args.fn(args)
 
 

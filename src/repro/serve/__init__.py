@@ -11,13 +11,19 @@ This package is the serving layer that completes that story:
     of (μ, ε) settings in one compiled device call, plus per-setting
     quality stats for "explore settings" workloads;
   * :mod:`repro.serve.cache`  — LRU result cache keyed on
-    (index fingerprint, μ, quantized ε);
+    (index fingerprint, μ, quantized ε), with per-index partitions for the
+    multi-index router and the sweep-ahead warming neighborhood;
   * :mod:`repro.serve.engine` — async micro-batching request loop that
-    coalesces concurrent single queries into one vmapped device call.
+    coalesces concurrent single queries into per-index vmapped device
+    calls: requests carry an index fingerprint, buckets flush per index,
+    failures isolate per bucket, and padding slots pre-warm the (μ, ε)
+    neighborhood of observed traffic. ``EngineConfig(shards=k)`` runs the
+    device calls sharded over a k-way mesh for giant graphs.
 
 CLI: ``PYTHONPATH=src python -m repro.launch.scan_serve --help``.
 """
-from repro.serve.store import IndexStore, index_fingerprint
+from repro.serve.store import IndexCatalog, IndexStore, index_fingerprint
 from repro.serve.sweep import SweepResult, sweep, grid_sweep, sweep_stats
-from repro.serve.cache import ResultCache, quantize_eps
+from repro.serve.cache import (PartitionedResultCache, ResultCache,
+                               neighborhood, quantize_eps)
 from repro.serve.engine import MicroBatchEngine, EngineConfig

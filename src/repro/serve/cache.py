@@ -93,3 +93,91 @@ class ResultCache:
                 "hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions,
                 "hit_rate": self.hits / total if total else 0.0}
+
+
+class PartitionedResultCache:
+    """Per-index LRU partitions behind the ``ResultCache`` interface.
+
+    One flat LRU shared by several indexes lets a hot index evict a cold
+    index's entries (capacity interference); the multi-index router instead
+    gives every fingerprint its own ``ResultCache`` of ``capacity`` entries,
+    created on first touch and dropped whole on
+    ``invalidate(fingerprint)`` — which is also what index unregistration
+    calls, so partitions never outlive their index.
+    """
+
+    def __init__(self, capacity: int = 1024,
+                 eps_quantum: float = DEFAULT_EPS_QUANTUM):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self.eps_quantum = eps_quantum
+        self._parts: dict[str, ResultCache] = {}
+        self._phantom_misses = 0   # get() misses on not-yet-created parts
+
+    def partition(self, fingerprint: str) -> ResultCache:
+        part = self._parts.get(fingerprint)
+        if part is None:
+            part = self._parts[fingerprint] = ResultCache(
+                self.capacity, self.eps_quantum)
+        return part
+
+    def get(self, fingerprint: str, mu: int, eps: float) -> Optional[object]:
+        # reads never create partitions — probing unknown fingerprints must
+        # not leak empty LRUs into _parts (only put() materializes one)
+        part = self._parts.get(fingerprint)
+        if part is None:
+            self._phantom_misses += 1   # still a miss for hit_rate purposes
+            return None
+        return part.get(fingerprint, mu, eps)
+
+    def peek(self, fingerprint: str, mu: int, eps: float) -> Optional[object]:
+        part = self._parts.get(fingerprint)
+        return part.peek(fingerprint, mu, eps) if part is not None else None
+
+    def put(self, fingerprint: str, mu: int, eps: float, value) -> None:
+        self.partition(fingerprint).put(fingerprint, mu, eps, value)
+
+    def invalidate(self, fingerprint: Optional[str] = None) -> int:
+        if fingerprint is None:
+            n = sum(len(p) for p in self._parts.values())
+            self._parts.clear()
+            return n
+        part = self._parts.pop(fingerprint, None)
+        return len(part) if part is not None else 0
+
+    def __len__(self) -> int:
+        return sum(len(p) for p in self._parts.values())
+
+    def stats(self) -> dict:
+        parts = self._parts.values()
+        hits = sum(p.hits for p in parts)
+        misses = sum(p.misses for p in parts) + self._phantom_misses
+        total = hits + misses
+        return {"size": len(self), "capacity": self.capacity,
+                "partitions": len(self._parts),
+                "hits": hits, "misses": misses,
+                "evictions": sum(p.evictions for p in parts),
+                "hit_rate": hits / total if total else 0.0}
+
+
+def neighborhood(mu: int, eps: float, *,
+                 eps_step: float = 0.05,
+                 quantum: float = DEFAULT_EPS_QUANTUM) -> list:
+    """Sweep-ahead candidates around one observed (μ, ε) setting.
+
+    Users exploring SCAN parameters walk the grid locally — the next request
+    after (μ, ε) is overwhelmingly (μ±1, ε) or (μ, ε±step). These are the
+    settings the engine pre-warms into otherwise-wasted padding slots of the
+    fixed-shape device batch. Candidates are quantized like real requests
+    and clipped to the valid domain (μ ≥ 2, ε ∈ [0, 1])."""
+    out = []
+    for cand_mu, cand_eps in ((mu + 1, eps), (mu - 1, eps),
+                              (mu, eps + eps_step), (mu, eps - eps_step)):
+        if cand_mu < 2:
+            continue
+        cand = (int(cand_mu),
+                quantize_eps(min(max(cand_eps, 0.0), 1.0), quantum))
+        if cand != (mu, quantize_eps(eps, quantum)) and cand not in out:
+            out.append(cand)
+    return out

@@ -1,22 +1,49 @@
-"""Async micro-batching query engine.
+"""Async micro-batching query engine with multi-index routing.
 
-Concurrent clients each want one (μ, ε) answer; the device wants one big
-vmapped call. The engine is the adapter: requests land on an asyncio queue,
-a collector coroutine drains them until either ``max_batch`` requests are
-waiting or ``flush_ms`` has elapsed since the first one (classic
-size-or-deadline micro-batching), then answers the whole batch with a
-single ``query_batch`` call.
+Concurrent clients each want one (μ, ε) answer — possibly against
+*different* graphs; the device wants one big fixed-shape vmapped call per
+index. The engine is the adapter: requests land on an asyncio queue tagged
+with the fingerprint of the index they address, a collector coroutine
+drains them until either ``max_batch`` requests are waiting or ``flush_ms``
+has elapsed since the first one (classic size-or-deadline micro-batching),
+then **buckets the batch by fingerprint** and answers each bucket with its
+own ``query_batch`` call against that bucket's index.
 
-Throughput mechanics:
+Routing mechanics (one engine process, many indexes):
+
+* **registration** — ``register(index, g)`` keys the index by its content
+  fingerprint (``serve/store.py``); ``query(μ, ε, fingerprint=...)``
+  routes to it. Engines constructed the classic way — one index — keep the
+  old single-index API: ``query(μ, ε)`` goes to the sole registered index.
+* **per-index cache partitions** — the default cache is a
+  ``PartitionedResultCache``: every fingerprint gets its own LRU, so one
+  hot index cannot evict another's entries, and unregistering an index
+  drops its partition wholesale.
+* **dedup never aliases across indexes** — the dedup/cache key is
+  (fingerprint, μ, quantized ε); identical (μ, ε) against two indexes are
+  distinct slots in distinct buckets.
+* **failure isolation per bucket** — a failing device call rejects only
+  that bucket's futures; other buckets in the same flush, and the
+  collector itself, are unaffected.
+
+Throughput mechanics (unchanged from the single-index engine):
 
 * **dedup** — concurrent identical requests (after ε quantization) fold
   into one batch slot; every waiter gets the same result object.
-* **cache** — answers are LRU-cached on (fingerprint, μ, quantized ε)
-  (``serve/cache.py``); hits resolve without touching the device.
-* **fixed batch shape** — the device call is always padded to
-  ``max_batch`` slots (unused slots repeat the first real request), so
-  exactly one XLA artifact serves every traffic pattern; no recompiles
-  mid-flight.
+* **cache** — answers are LRU-cached on (fingerprint, μ, quantized ε);
+  hits resolve without touching the device.
+* **fixed batch shape** — each bucket's device call is always padded to
+  ``max_batch`` slots, so exactly one XLA artifact per index serves every
+  traffic pattern; no recompiles mid-flight.
+* **sweep-ahead warming** — padding slots are filled with the (μ±1, ε±δ)
+  neighborhood of the bucket's real requests instead of dead repeats
+  (``serve.cache.neighborhood``): parameter-exploring clients walk the
+  grid locally, so the next request is usually already cached by the time
+  it arrives. Warming changes neither the batch shape nor the call count —
+  it rides slots that were previously wasted.
+* **sharded execution** — ``EngineConfig(shards=k)`` runs every device
+  call through :func:`repro.core.query_batch_sharded` on a k-way mesh
+  (giant-graph mode: edge arrays partitioned over the ``data`` axis).
 
 The device call runs inline on the event loop: it is the serial resource
 being scheduled, and everything else the loop does (queueing, cache hits)
@@ -33,7 +60,8 @@ import numpy as np
 from repro.core.graph import CSRGraph
 from repro.core.index import ScanIndex
 from repro.core.query import ClusterResult, query_batch
-from repro.serve.cache import DEFAULT_EPS_QUANTUM, ResultCache, quantize_eps
+from repro.serve.cache import (DEFAULT_EPS_QUANTUM, PartitionedResultCache,
+                               ResultCache, neighborhood, quantize_eps)
 from repro.serve.store import index_fingerprint
 
 
@@ -41,34 +69,94 @@ from repro.serve.store import index_fingerprint
 class EngineConfig:
     max_batch: int = 32          # device slots per micro-batch
     flush_ms: float = 2.0        # max wait after the first queued request
-    cache_capacity: int = 4096
+    cache_capacity: int = 4096   # per index partition
     eps_quantum: float = DEFAULT_EPS_QUANTUM
+    warm_ahead: bool = True      # fill padding slots with (μ, ε) neighbors
+    warm_eps_step: float = 0.05  # ε stride of the warmed neighborhood
+    shards: Optional[int] = None  # run device calls sharded over k devices
 
 
 class MicroBatchEngine:
-    """Serve one index to many concurrent ``await engine.query(μ, ε)``."""
+    """Serve one *or many* indexes to concurrent ``await engine.query(...)``.
 
-    def __init__(self, index: ScanIndex, g: CSRGraph, *,
+    Single-index (classic): ``MicroBatchEngine(index, g)``.
+    Multi-index (router):   ``MicroBatchEngine()`` then ``register(...)``
+    per index; pass ``fingerprint=`` to ``query`` to route.
+    """
+
+    def __init__(self, index: Optional[ScanIndex] = None,
+                 g: Optional[CSRGraph] = None, *,
                  fingerprint: Optional[str] = None,
                  config: EngineConfig = EngineConfig(),
-                 cache: Optional[ResultCache] = None):
-        self.index = index
-        self.g = g
+                 cache=None):
         self.cfg = config
-        self.fingerprint = (fingerprint if fingerprint is not None
-                            else index_fingerprint(index, g))
-        self.cache = cache if cache is not None else ResultCache(
+        self.cache = cache if cache is not None else PartitionedResultCache(
             config.cache_capacity, config.eps_quantum)
+        self._indexes: dict[str, tuple[ScanIndex, CSRGraph]] = {}
         self._queue: asyncio.Queue = asyncio.Queue()
         self._task: Optional[asyncio.Task] = None
+        self._mesh = None
+        self._shard_plans: dict = {}   # fingerprint → ShardedQueryPlan
         self.stats = {"requests": 0, "batches": 0, "device_queries": 0,
-                      "cache_hits": 0, "deduped": 0}
+                      "cache_hits": 0, "deduped": 0, "warmed": 0,
+                      "bucket_failures": 0}
+        self.fingerprint: Optional[str] = None
+        if index is not None:
+            if g is None:
+                raise ValueError("an index needs its graph")
+            self.fingerprint = self.register(index, g,
+                                             fingerprint=fingerprint)
+
+    # ------------------------------------------------------------------
+    # index registry
+    # ------------------------------------------------------------------
+    def register(self, index: ScanIndex, g: CSRGraph, *,
+                 fingerprint: Optional[str] = None) -> str:
+        """Add an index to the router; returns its routing fingerprint."""
+        fp = (fingerprint if fingerprint is not None
+              else index_fingerprint(index, g))
+        if fp in self._indexes:
+            # hot-swap under an explicit fingerprint: the old index's
+            # sharded plan and cached answers must not outlive it
+            self._shard_plans.pop(fp, None)
+            self.cache.invalidate(fp)
+        self._indexes[fp] = (index, g)
+        if self.fingerprint is None:
+            self.fingerprint = fp
+        return fp
+
+    def unregister(self, fingerprint: str) -> int:
+        """Drop an index and its cache partition; → evicted entry count."""
+        self._indexes.pop(fingerprint, None)
+        self._shard_plans.pop(fingerprint, None)
+        if self.fingerprint == fingerprint:
+            self.fingerprint = next(iter(self._indexes), None)
+        return self.cache.invalidate(fingerprint)
+
+    def fingerprints(self) -> list[str]:
+        return list(self._indexes)
+
+    @property
+    def index(self) -> Optional[ScanIndex]:
+        """Default-route index (single-index back-compat accessor)."""
+        pair = self._indexes.get(self.fingerprint)
+        return pair[0] if pair else None
+
+    @property
+    def g(self) -> Optional[CSRGraph]:
+        pair = self._indexes.get(self.fingerprint)
+        return pair[1] if pair else None
 
     # ------------------------------------------------------------------
     # lifecycle
     # ------------------------------------------------------------------
     async def start(self) -> None:
         if self._task is None:
+            # fresh queue per collector: asyncio.Queue binds to the event
+            # loop on first use, so an engine reused across a second
+            # asyncio.run() must not hand the new collector the old loop's
+            # queue (its first get() would die and strand every waiter)
+            self._queue = asyncio.Queue()
             self._task = asyncio.get_running_loop().create_task(self._loop())
 
     async def stop(self) -> None:
@@ -87,19 +175,27 @@ class MicroBatchEngine:
     # ------------------------------------------------------------------
     # client API
     # ------------------------------------------------------------------
-    async def query(self, mu: int, eps: float) -> ClusterResult:
-        """One SCAN query; coalesced with whatever else is in flight."""
+    async def query(self, mu: int, eps: float,
+                    fingerprint: Optional[str] = None) -> ClusterResult:
+        """One SCAN query; coalesced with whatever else is in flight.
+
+        ``fingerprint`` selects the target index; ``None`` routes to the
+        engine's default (the first registered index).
+        """
+        fp = fingerprint if fingerprint is not None else self.fingerprint
+        if fp not in self._indexes:
+            raise KeyError(f"no index registered for fingerprint {fp!r}")
         if self._task is None:
             await self.start()
         self.stats["requests"] += 1
         mu = int(mu)
         eps_q = quantize_eps(eps, self.cfg.eps_quantum)
-        hit = self.cache.get(self.fingerprint, mu, eps_q)
+        hit = self.cache.get(fp, mu, eps_q)
         if hit is not None:
             self.stats["cache_hits"] += 1
             return hit
         fut = asyncio.get_running_loop().create_future()
-        self._queue.put_nowait((mu, eps_q, fut))
+        self._queue.put_nowait((fp, mu, eps_q, fut))
         return await fut
 
     # ------------------------------------------------------------------
@@ -121,33 +217,59 @@ class MicroBatchEngine:
                 except asyncio.TimeoutError:
                     break
                 if item is None:
-                    self._execute_safe(batch)
+                    self._flush(batch)
                     return
                 batch.append(item)
-            self._execute_safe(batch)
+            self._flush(batch)
 
-    def _execute_safe(self, batch) -> None:
-        """Run one batch; a failing device call rejects that batch's
-        futures instead of killing the collector (later requests must not
-        hang on a dead loop)."""
-        try:
-            self._execute(batch)
-        except Exception as e:  # noqa: BLE001
-            for _, _, fut in batch:
-                if not fut.done():
-                    fut.set_exception(e)
+    def _flush(self, batch) -> None:
+        """Bucket one collected batch by fingerprint and execute each bucket
+        as its own device call. A failing bucket rejects only its own
+        waiters — sibling buckets and the collector keep running (later
+        requests must not hang on a dead loop)."""
+        buckets: dict[str, list] = {}
+        for item in batch:
+            buckets.setdefault(item[0], []).append(item)
+        for bucket in buckets.values():
+            try:
+                self._execute(bucket)
+            except Exception as e:  # noqa: BLE001
+                self.stats["bucket_failures"] += 1
+                for _, _, _, fut in bucket:
+                    if not fut.done():
+                        fut.set_exception(e)
 
-    def _execute(self, batch) -> None:
+    # ------------------------------------------------------------------
+    # per-bucket execution
+    # ------------------------------------------------------------------
+    def _device_call(self, fp: str, index: ScanIndex, g: CSRGraph,
+                     mus, epss):
+        if self.cfg.shards is not None and self.cfg.shards > 1:
+            from repro.core.distributed import ShardedQueryPlan, query_mesh
+            if self._mesh is None:
+                self._mesh = query_mesh(self.cfg.shards)
+            plan = self._shard_plans.get(fp)
+            if plan is None:
+                # pad + shard the O(m) operands once per index, not per flush
+                plan = self._shard_plans[fp] = ShardedQueryPlan(
+                    index, g, self._mesh)
+            return plan(mus, epss)
+        return query_batch(index, g, mus, epss)
+
+    def _execute(self, bucket) -> None:
+        """One fingerprint's requests → at most one fixed-shape device call."""
+        fp = bucket[0][0]
+        index, g = self._indexes[fp]
         waiters: dict[tuple, list] = {}
-        for mu, eps_q, fut in batch:
+        for _, mu, eps_q, fut in bucket:
             waiters.setdefault((mu, eps_q), []).append(fut)
         self.stats["batches"] += 1
-        self.stats["deduped"] += len(batch) - len(waiters)
+        self.stats["deduped"] += len(bucket) - len(waiters)
 
         need, resolved = [], {}
         for key in waiters:
             # a twin request may have filled the cache while we queued
-            hit = self.cache.peek(self.fingerprint, *key)
+            hit = self.cache.peek(fp, *key)
             if hit is not None:
                 self.stats["cache_hits"] += 1
                 resolved[key] = hit
@@ -155,33 +277,70 @@ class MicroBatchEngine:
                 need.append(key)
 
         if need:
-            # pad to the fixed slot count: one compiled artifact forever
-            slots = need + [need[0]] * (self.cfg.max_batch - len(need))
+            # pad to the fixed slot count: one compiled artifact forever.
+            # Padding slots carry the warm-ahead neighborhood of the real
+            # requests (already-cached neighbors excluded); any remainder
+            # repeats the first real request.
+            warm = []
+            if self.cfg.warm_ahead:
+                warm = self._warm_candidates(fp, need,
+                                             self.cfg.max_batch - len(need))
+            slots = need + warm
+            slots = slots + [need[0]] * (self.cfg.max_batch - len(slots))
             mus = np.asarray([k[0] for k in slots], np.int32)
             epss = np.asarray([k[1] for k in slots], np.float32)
-            res = query_batch(self.index, self.g, mus, epss)
+            res = self._device_call(fp, index, g, mus, epss)
             labels = np.asarray(res.labels)
             is_core = np.asarray(res.is_core)
             n_clusters = np.asarray(res.n_clusters)
             self.stats["device_queries"] += 1
-            for i, key in enumerate(need):
+            self.stats["warmed"] += len(warm)
+            for i, key in enumerate(need + warm):
                 # copy: row views would pin the whole padded batch array
                 # in the cache for as long as the entry lives
                 out = ClusterResult(labels=labels[i].copy(),
                                     is_core=is_core[i].copy(),
                                     n_clusters=int(n_clusters[i]))
-                self.cache.put(self.fingerprint, key[0], key[1], out)
-                resolved[key] = out
+                self.cache.put(fp, key[0], key[1], out)
+                if i < len(need):
+                    resolved[key] = out
 
         for key, futs in waiters.items():
             for fut in futs:
                 if not fut.done():
                     fut.set_result(resolved[key])
 
+    def _warm_candidates(self, fp: str, need, limit: int) -> list:
+        """Neighborhood settings worth pre-computing in this bucket's
+        padding slots: near an actual request, not requested themselves,
+        and not already cached."""
+        if limit <= 0:
+            return []
+        seen = set(need)
+        out = []
+        for mu, eps_q in need:
+            for cand in neighborhood(mu, eps_q,
+                                     eps_step=self.cfg.warm_eps_step,
+                                     quantum=self.cfg.eps_quantum):
+                if cand in seen:
+                    continue
+                seen.add(cand)
+                if self.cache.peek(fp, *cand) is not None:
+                    continue
+                out.append(cand)
+                if len(out) >= limit:
+                    return out
+        return out
+
     def batch_stats(self) -> dict:
         """Engine + cache counters (for the CLI / bench report)."""
         out = dict(self.stats)
         b = max(out["batches"], 1)
         out["avg_batch"] = (out["requests"] - out["cache_hits"]) / b
-        out.update({f"cache_{k}": v for k, v in self.cache.stats().items()})
+        out["indexes"] = len(self._indexes)
+        cache_stats = {f"cache_{k}": v for k, v in self.cache.stats().items()}
+        # the engine's own cache_hits (which also counts _execute peek
+        # re-checks) must not be clobbered by the store-side hits counter
+        cache_stats.pop("cache_hits", None)
+        out.update(cache_stats)
         return out

@@ -25,7 +25,8 @@ template pytree (the static fields come out of the saved scalars).
 from __future__ import annotations
 
 import hashlib
-from typing import Optional, Tuple
+import os
+from typing import Dict, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -125,3 +126,40 @@ class IndexStore:
         )
         fp = bytes(leaf("fingerprint")).decode()
         return index, g, fp
+
+
+class IndexCatalog:
+    """A directory of named ``IndexStore``s — the on-disk side of the
+    multi-index router.
+
+    Layout: ``<root>/<name>/step_<k>/…`` — every child directory is one
+    graph's versioned index store. ``load_all`` restores the latest
+    committed version of every named index, returning the
+    ``{fingerprint: (index, graph)}`` mapping an engine registers from
+    (fingerprints, not names, key routing — two names holding identical
+    content deliberately collapse to one route and one cache partition).
+    """
+
+    def __init__(self, root: str, *, keep: int = 3):
+        self.root = root
+        self.keep = keep
+
+    def store(self, name: str) -> IndexStore:
+        return IndexStore(os.path.join(self.root, name), keep=self.keep)
+
+    def names(self) -> list[str]:
+        if not os.path.isdir(self.root):
+            return []
+        return sorted(
+            d for d in os.listdir(self.root)
+            if self.store(d).latest_version() is not None)
+
+    def save(self, name: str, index: ScanIndex, g: CSRGraph) -> str:
+        return self.store(name).save(index, g)
+
+    def load_all(self) -> Dict[str, Tuple[ScanIndex, CSRGraph]]:
+        out: Dict[str, Tuple[ScanIndex, CSRGraph]] = {}
+        for name in self.names():
+            index, g, fp = self.store(name).load()
+            out[fp] = (index, g)
+        return out

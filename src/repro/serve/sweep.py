@@ -44,13 +44,23 @@ class SweepResult:
 
 
 def sweep(index: ScanIndex, g: CSRGraph,
-          mus: Sequence[int], epss: Sequence[float]) -> SweepResult:
-    """Batched queries for paired parameter vectors (one compiled call)."""
+          mus: Sequence[int], epss: Sequence[float],
+          *, mesh=None) -> SweepResult:
+    """Batched queries for paired parameter vectors (one compiled call).
+
+    ``mesh`` switches to the sharded query path
+    (:func:`repro.core.query_batch_sharded`): edge arrays partitioned over
+    the mesh's ``data`` axis, identical results — the giant-graph mode.
+    """
     mus = np.asarray(mus, np.int32).reshape(-1)
     epss = np.asarray(epss, np.float32).reshape(-1)
     if mus.shape != epss.shape:
         raise ValueError(f"mus {mus.shape} and epss {epss.shape} must match")
-    res = query_batch(index, g, mus, epss)
+    if mesh is not None:
+        from repro.core.distributed import query_batch_sharded
+        res = query_batch_sharded(index, g, mus, epss, mesh=mesh)
+    else:
+        res = query_batch(index, g, mus, epss)
     return SweepResult(
         mus=mus, epss=epss,
         labels=np.asarray(res.labels),
@@ -61,17 +71,20 @@ def sweep(index: ScanIndex, g: CSRGraph,
 
 def grid_sweep(index: ScanIndex, g: CSRGraph,
                mu_values: Sequence[int],
-               eps_values: Sequence[float]) -> SweepResult:
+               eps_values: Sequence[float],
+               *, mesh=None) -> SweepResult:
     """Full cartesian μ × ε grid, μ-major row order."""
     mu_grid, eps_grid = np.meshgrid(
         np.asarray(mu_values, np.int32),
         np.asarray(eps_values, np.float32), indexing="ij")
-    return sweep(index, g, mu_grid.reshape(-1), eps_grid.reshape(-1))
+    return sweep(index, g, mu_grid.reshape(-1), eps_grid.reshape(-1),
+                 mesh=mesh)
 
 
 def sweep_stats(index: ScanIndex, g: CSRGraph,
                 mu_values: Sequence[int],
-                eps_values: Sequence[float]) -> list[dict]:
+                eps_values: Sequence[float],
+                *, mesh=None) -> list[dict]:
     """Per-setting summary rows for parameter exploration.
 
     Returns dicts with ``mu, eps, n_clusters, n_cores, coverage,
@@ -79,7 +92,7 @@ def sweep_stats(index: ScanIndex, g: CSRGraph,
     modularity follows the paper's §7.3.4 singleton convention for
     unclustered vertices).
     """
-    res = grid_sweep(index, g, mu_values, eps_values)
+    res = grid_sweep(index, g, mu_values, eps_values, mesh=mesh)
     rows = []
     for i in range(len(res)):
         labels = res.labels[i]

@@ -142,6 +142,7 @@ _SUBPROCESS_PROG = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_ep_and_sharded_scan_multidevice():
     """shard_map EP MoE ≡ pjit MoE, and edge-sharded SCAN similarity ≡
     single-device — on an 8-device (2×4) host-platform mesh."""
@@ -154,6 +155,7 @@ def test_ep_and_sharded_scan_multidevice():
     assert "EP_OK" in r.stdout and "SCAN_SHARD_OK" in r.stdout
 
 
+@pytest.mark.slow
 def test_dryrun_one_cell_subprocess():
     """Integration: the actual dry-run driver on the cheapest cell (512
     host devices, single-pod mesh) — proves the assignment's entry point."""

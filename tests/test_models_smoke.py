@@ -13,6 +13,10 @@ from repro.models import model as mdl
 from repro.optim import adamw
 from repro.train.train_step import make_train_step, loss_fn
 
+# one forward + train step per architecture ≈ 2 minutes of XLA compiles:
+# slow lane (tier-1 runs `-m "not slow"`; CI has a dedicated slow job)
+pytestmark = pytest.mark.slow
+
 # reduced-config overrides per family: small layers/width/experts/tables
 REDUCE = dict(
     n_layers=2, d_model=64, d_ff=128, vocab=251, dtype="float32",

@@ -10,25 +10,38 @@ from repro.core import (
     compute_similarities,
     from_edge_list,
     query,
+    query_batch,
 )
 from repro.core.scan_ref import scan_ref
+from repro.serve import grid_sweep
 
 
 @st.composite
-def graphs(draw):
+def graphs(draw, weighted=False, isolate=False):
+    """Random small graphs. ``weighted`` draws per-edge weights;
+    ``isolate`` confines edges to the low half of the id space so the high
+    half is guaranteed-isolated vertices (degree 0)."""
     n = draw(st.integers(5, 28))
-    max_edges = n * (n - 1) // 2
-    m = draw(st.integers(1, min(max_edges, 3 * n)))
+    hi = max(1, n // 2 - 1) if isolate else n - 1
+    max_edges = (hi + 1) * hi // 2
+    m = draw(st.integers(1, max(1, min(max_edges, 3 * n))))
     pairs = draw(
         st.lists(
-            st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+            st.tuples(st.integers(0, hi), st.integers(0, hi)),
             min_size=m, max_size=m,
         )
     )
     pairs = [(u, v) for u, v in pairs if u != v]
     if not pairs:
-        pairs = [(0, 1 % n)] if n > 1 else []
-    return from_edge_list(n, np.asarray(pairs, dtype=np.int64))
+        pairs = [(0, 1 % (hi + 1))] if hi > 0 else [(0, 1)]
+    weights = None
+    if weighted:
+        weights = draw(
+            st.lists(st.floats(0.1, 1.0, allow_nan=False),
+                     min_size=len(pairs), max_size=len(pairs))
+        )
+        weights = np.asarray(weights, dtype=np.float32)
+    return from_edge_list(n, np.asarray(pairs, dtype=np.int64), weights)
 
 
 @settings(max_examples=25, deadline=None)
@@ -80,6 +93,90 @@ def test_structural_invariants(g, mu, eps):
             assert any(l == labels[v] for l, _ in nbr_core_sim)
         else:
             assert not nbr_core_sim
+
+
+def _assert_matches_oracle(g, sims, res_labels, res_core, mu, eps, tag=""):
+    ref = scan_ref(g, mu, eps, "cosine", sims=np.asarray(sims))
+    np.testing.assert_array_equal(
+        np.asarray(res_core), ref["is_core"], err_msg=f"{tag} is_core")
+    np.testing.assert_array_equal(
+        np.asarray(res_labels), ref["labels"], err_msg=f"{tag} labels")
+
+
+@settings(max_examples=10, deadline=None)
+@given(graphs(), st.data())
+def test_query_batch_matches_oracle_per_setting(g, data):
+    """Every row of one vmapped ``query_batch`` call equals the sequential
+    oracle for that (μ, ε) — including both ε extremes (0 admits every
+    edge, 1 only σ=1 edges) and a μ beyond every closed degree (no cores,
+    nothing clustered)."""
+    sims = compute_similarities(g, "cosine")
+    idx = build_index(g, "cosine", sims=sims)
+    settings_ = [
+        (data.draw(st.integers(2, 5)), data.draw(st.floats(0.05, 0.95))),
+        (2, 0.0),                       # ε = 0: σ ≥ 0 everywhere
+        (2, 1.0),                       # ε = 1: only exact-1 similarities
+        (idx.max_cdeg + 1 + data.draw(st.integers(0, 3)), 0.5),  # μ too big
+    ]
+    mus = np.asarray([m for m, _ in settings_], np.int32)
+    epss = np.asarray([e for _, e in settings_], np.float32)
+    res = query_batch(idx, g, mus, epss)
+    for i, (mu, eps) in enumerate(settings_):
+        _assert_matches_oracle(g, sims, res.labels[i], res.is_core[i],
+                               int(mu), float(eps), tag=f"setting {i}")
+    # μ > max closed degree ⇒ no cores, nothing clustered
+    assert not np.asarray(res.is_core[3]).any()
+    assert (np.asarray(res.labels[3]) == -1).all()
+    assert int(res.n_clusters[3]) == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(graphs(weighted=True), st.integers(2, 5), st.floats(0.05, 0.95))
+def test_weighted_query_batch_matches_oracle(g, mu, eps):
+    """Weighted graphs: the weighted-cosine σ flows through the index and
+    the batched query exactly as the oracle's explicit intersection."""
+    sims = compute_similarities(g, "cosine")
+    idx = build_index(g, "cosine", sims=sims)
+    res = query_batch(idx, g, [mu], [float(eps)])
+    _assert_matches_oracle(g, sims, res.labels[0], res.is_core[0],
+                           mu, float(eps))
+
+
+@settings(max_examples=10, deadline=None)
+@given(graphs(isolate=True), st.floats(0.05, 0.95))
+def test_isolated_vertices_stay_unclustered(g, eps):
+    """Isolated vertices (closed degree 1): never cores for μ ≥ 2, never
+    borders (no edges), always label -1 — and the oracle agrees."""
+    sims = compute_similarities(g, "cosine")
+    idx = build_index(g, "cosine", sims=sims)
+    res = query_batch(idx, g, [2], [float(eps)])
+    _assert_matches_oracle(g, sims, res.labels[0], res.is_core[0],
+                           2, float(eps))
+    deg = np.diff(np.asarray(g.offsets))
+    isolated = deg == 0
+    assert isolated.any(), "strategy must generate isolated vertices"
+    assert not np.asarray(res.is_core[0])[isolated].any()
+    assert (np.asarray(res.labels[0])[isolated] == -1).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(graphs(), st.lists(st.integers(2, 5), min_size=2, max_size=3,
+                          unique=True))
+def test_grid_sweep_matches_oracle(g, mu_values):
+    """grid_sweep (μ-major cartesian product) row-for-row equals the
+    oracle; covers the serve layer's batched entry point end to end."""
+    eps_values = [0.0, 0.45, 1.0]
+    sims = compute_similarities(g, "cosine")
+    idx = build_index(g, "cosine", sims=sims)
+    res = grid_sweep(idx, g, mu_values, eps_values)
+    assert len(res) == len(mu_values) * len(eps_values)
+    k = 0
+    for mu in mu_values:
+        for eps in eps_values:
+            assert (res.mus[k], res.epss[k]) == (mu, np.float32(eps))
+            _assert_matches_oracle(g, sims, res.labels[k], res.is_core[k],
+                                   int(mu), float(eps), tag=f"row {k}")
+            k += 1
 
 
 @settings(max_examples=15, deadline=None)

@@ -1,0 +1,302 @@
+"""Multi-index router stress tests: mixed-fingerprint traffic through one
+engine, dedup that never aliases across indexes, per-index cache
+partitions/invalidation, per-bucket failure isolation, and sweep-ahead
+warming of the (μ, ε) neighborhood."""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core import build_index, compute_similarities, query, random_graph
+from repro.serve import (EngineConfig, IndexCatalog, MicroBatchEngine,
+                         PartitionedResultCache, neighborhood)
+
+
+def _graph_and_index(n=80, deg=6.0, seed=0):
+    g = random_graph(n, deg, seed=seed)
+    sims = compute_similarities(g, "cosine")
+    return g, build_index(g, "cosine", sims=sims)
+
+
+def _two_index_engine(config=None, seeds=(1, 2), n=80):
+    """One engine serving two same-shaped but different graphs."""
+    cfg = config or EngineConfig(max_batch=8, flush_ms=20.0)
+    engine = MicroBatchEngine(config=cfg)
+    pairs = {}
+    for seed in seeds:
+        g, idx = _graph_and_index(n=n, seed=seed)
+        fp = engine.register(idx, g)
+        pairs[fp] = (idx, g)
+    return engine, pairs
+
+
+# --------------------------------------------------------------------------
+# routing correctness
+# --------------------------------------------------------------------------
+def test_mixed_fingerprint_traffic_routes_correctly():
+    """Concurrent traffic against two indexes through one engine: every
+    answer must match a direct query against the right index."""
+    engine, pairs = _two_index_engine()
+    fps = list(pairs)
+    pool = [(mu, eps) for mu in (2, 3, 4) for eps in (0.2, 0.5, 0.8)]
+    rng = np.random.default_rng(0)
+    reqs = [(fps[int(rng.integers(2))], *pool[int(rng.integers(len(pool)))])
+            for _ in range(40)]
+
+    async def main():
+        async with engine:
+            return await asyncio.gather(
+                *[engine.query(mu, eps, fingerprint=fp)
+                  for fp, mu, eps in reqs])
+
+    outs = asyncio.run(main())
+    for (fp, mu, eps), out in zip(reqs, outs):
+        idx, g = pairs[fp]
+        ref = query(idx, g, mu, eps)
+        np.testing.assert_array_equal(out.labels, np.asarray(ref.labels))
+        np.testing.assert_array_equal(out.is_core, np.asarray(ref.is_core))
+    st = engine.batch_stats()
+    assert st["requests"] == len(reqs)
+    assert st["indexes"] == 2
+    # coalescing still happens per bucket: far fewer device calls than
+    # requests, but at least one per fingerprint
+    assert 2 <= st["device_queries"] < len(reqs)
+
+
+def test_dedup_does_not_alias_across_indexes():
+    """The same (μ, ε) fired concurrently at two different indexes must
+    dedup within each index but never fold across them."""
+    engine, pairs = _two_index_engine()
+    (fp_a, (idx_a, g_a)), (fp_b, (idx_b, g_b)) = pairs.items()
+
+    async def main():
+        async with engine:
+            return await asyncio.gather(
+                engine.query(2, 0.5, fingerprint=fp_a),
+                engine.query(2, 0.5, fingerprint=fp_a),
+                engine.query(2, 0.5, fingerprint=fp_b),
+                engine.query(2, 0.5, fingerprint=fp_b),
+            )
+
+    a1, a2, b1, b2 = asyncio.run(main())
+    # within-index dedup: both waiters observed, one slot each
+    assert engine.stats["deduped"] == 2
+    assert engine.stats["device_queries"] == 2      # one call per bucket
+    np.testing.assert_array_equal(a1.labels, a2.labels)
+    np.testing.assert_array_equal(b1.labels, b2.labels)
+    # across indexes the answers are the *right* ones, not shared ones
+    np.testing.assert_array_equal(
+        a1.labels, np.asarray(query(idx_a, g_a, 2, 0.5).labels))
+    np.testing.assert_array_equal(
+        b1.labels, np.asarray(query(idx_b, g_b, 2, 0.5).labels))
+    assert not np.array_equal(a1.labels, b1.labels), \
+        "seed-1 and seed-2 graphs should cluster differently"
+
+
+# --------------------------------------------------------------------------
+# cache partitions
+# --------------------------------------------------------------------------
+def test_per_index_cache_invalidation_on_unregister():
+    engine, pairs = _two_index_engine()
+    fp_a, fp_b = pairs
+
+    async def main():
+        async with engine:
+            await engine.query(2, 0.5, fingerprint=fp_a)
+            await engine.query(2, 0.5, fingerprint=fp_b)
+
+    asyncio.run(main())
+    assert engine.unregister(fp_b) >= 1          # partition dropped whole
+
+    async def after():
+        async with engine:
+            hits0 = engine.stats["cache_hits"]
+            await engine.query(2, 0.5, fingerprint=fp_a)   # still cached
+            assert engine.stats["cache_hits"] == hits0 + 1
+            with pytest.raises(KeyError):
+                await engine.query(2, 0.5, fingerprint=fp_b)
+
+    asyncio.run(after())
+
+
+def test_partitioned_cache_isolates_eviction_pressure():
+    """A hot index hammering its partition must not evict a cold index's
+    entries (the failure mode of one flat LRU)."""
+    c = PartitionedResultCache(capacity=4)
+    c.put("cold", 2, 0.5, "keep-me")
+    for i in range(100):                 # 25× the capacity, all one index
+        c.put("hot", 2 + i, 0.5, i)
+    assert c.peek("cold", 2, 0.5) == "keep-me"
+    assert len(c) == 4 + 1
+    st = c.stats()
+    assert st["partitions"] == 2
+    assert st["evictions"] == 96
+    assert c.invalidate("hot") == 4
+    assert c.peek("cold", 2, 0.5) == "keep-me"
+
+
+# --------------------------------------------------------------------------
+# failure isolation
+# --------------------------------------------------------------------------
+def test_bucket_failure_isolated_per_index():
+    """A device failure for one index's bucket rejects only that bucket's
+    waiters; the sibling bucket in the same flush succeeds and the
+    collector answers later traffic for *both* indexes."""
+    engine, pairs = _two_index_engine()
+    fp_ok, fp_bad = pairs
+    idx_bad = pairs[fp_bad][0]
+    real_call = engine._device_call
+    state = {"armed": True}
+
+    def flaky(fp, index, g, mus, epss):
+        if state["armed"] and index is idx_bad:
+            raise RuntimeError("injected device failure")
+        return real_call(fp, index, g, mus, epss)
+
+    engine._device_call = flaky
+
+    async def main():
+        async with engine:
+            good, bad = await asyncio.gather(
+                engine.query(2, 0.5, fingerprint=fp_ok),
+                engine.query(2, 0.5, fingerprint=fp_bad),
+                return_exceptions=True)
+            assert isinstance(bad, RuntimeError) and "injected" in str(bad)
+            assert not isinstance(good, Exception)
+            idx, g = pairs[fp_ok]
+            np.testing.assert_array_equal(
+                good.labels, np.asarray(query(idx, g, 2, 0.5).labels))
+            # collector survives; the failed index recovers once healthy
+            state["armed"] = False
+            retry = await engine.query(2, 0.5, fingerprint=fp_bad)
+            return retry
+
+    retry = asyncio.run(main())
+    idx, g = pairs[fp_bad]
+    np.testing.assert_array_equal(
+        retry.labels, np.asarray(query(idx, g, 2, 0.5).labels))
+    assert engine.stats["bucket_failures"] == 1
+
+
+def test_register_hot_swap_drops_stale_state():
+    """Re-registering under an existing fingerprint (hot-swap) must drop
+    the old index's cached answers — otherwise the swapped-in index keeps
+    serving its predecessor's clusters."""
+    g1, idx1 = _graph_and_index(n=50, deg=5.0, seed=1)
+    g2, idx2 = _graph_and_index(n=50, deg=5.0, seed=2)
+    engine = MicroBatchEngine(config=EngineConfig(max_batch=4, flush_ms=5.0))
+    engine.register(idx1, g1, fingerprint="route")
+
+    async def ask():
+        async with engine:
+            return await engine.query(2, 0.5, fingerprint="route")
+
+    before = asyncio.run(ask())
+    engine.register(idx2, g2, fingerprint="route")
+    after = asyncio.run(ask())
+    np.testing.assert_array_equal(
+        before.labels, np.asarray(query(idx1, g1, 2, 0.5).labels))
+    np.testing.assert_array_equal(
+        after.labels, np.asarray(query(idx2, g2, 2, 0.5).labels))
+    assert not np.array_equal(before.labels, after.labels)
+
+
+def test_engine_survives_second_event_loop():
+    """An engine reused across two asyncio.run() calls must serve cache
+    *misses* in the second loop: the collector's queue is per-loop
+    (asyncio.Queue binds to the loop that first awaits it), so a stale
+    queue would silently kill the new collector and strand every waiter."""
+    g, idx = _graph_and_index(n=40, deg=4.0, seed=3)
+    engine = MicroBatchEngine(idx, g, config=EngineConfig(
+        max_batch=4, flush_ms=5.0, warm_ahead=False))
+
+    async def one(mu, eps):
+        async with engine:
+            return await engine.query(mu, eps)
+
+    first = asyncio.run(one(2, 0.5))
+    second = asyncio.run(one(3, 0.7))      # distinct setting: a real miss
+    assert engine.stats["device_queries"] == 2
+    for (mu, eps), out in (((2, 0.5), first), ((3, 0.7), second)):
+        np.testing.assert_array_equal(
+            out.labels, np.asarray(query(idx, g, mu, eps).labels))
+
+
+# --------------------------------------------------------------------------
+# sweep-ahead warming
+# --------------------------------------------------------------------------
+def test_neighborhood_candidates():
+    cands = neighborhood(3, 0.5, eps_step=0.05)
+    assert (4, 0.5) in cands and (2, 0.5) in cands
+    assert (3, 0.55) in cands and (3, 0.45) in cands
+    # μ < 2 and ε outside [0, 1] never proposed
+    assert all(mu >= 2 for mu, _ in neighborhood(2, 0.0))
+    assert all(0.0 <= e <= 1.0 for _, e in neighborhood(2, 1.0))
+
+
+def test_warming_turns_neighbor_queries_into_cache_hits():
+    """Padding slots precompute the (μ±1, ε±δ) neighborhood, so a client
+    walking the parameter grid gets its next answer without a device call."""
+    g, idx = _graph_and_index(seed=5)
+    engine = MicroBatchEngine(idx, g, config=EngineConfig(
+        max_batch=8, flush_ms=5.0, warm_ahead=True, warm_eps_step=0.05))
+
+    async def main():
+        async with engine:
+            await engine.query(3, 0.5)
+            assert engine.stats["device_queries"] == 1
+            assert engine.stats["warmed"] >= 4
+            # grid-walk: all four neighbors are already cached
+            for mu, eps in ((4, 0.5), (2, 0.5), (3, 0.55), (3, 0.45)):
+                out = await engine.query(mu, eps)
+                ref = query(idx, g, mu, eps)
+                np.testing.assert_array_equal(out.labels,
+                                              np.asarray(ref.labels))
+            assert engine.stats["device_queries"] == 1
+            assert engine.stats["cache_hits"] == 4
+
+    asyncio.run(main())
+
+
+def test_warming_disabled_pads_with_repeats():
+    g, idx = _graph_and_index(seed=5)
+    engine = MicroBatchEngine(idx, g, config=EngineConfig(
+        max_batch=8, flush_ms=5.0, warm_ahead=False))
+
+    async def main():
+        async with engine:
+            await engine.query(3, 0.5)
+            assert engine.stats["warmed"] == 0
+            await engine.query(4, 0.5)           # neighbor NOT prewarmed
+            assert engine.stats["device_queries"] == 2
+
+    asyncio.run(main())
+
+
+# --------------------------------------------------------------------------
+# catalog → router wiring
+# --------------------------------------------------------------------------
+def test_index_catalog_feeds_router(tmp_path):
+    cat = IndexCatalog(str(tmp_path))
+    built = {}
+    for name, seed in (("web", 1), ("social", 2)):
+        g, idx = _graph_and_index(n=40, deg=4.0, seed=seed)
+        cat.save(name, idx, g)
+        built[name] = (idx, g)
+    assert cat.names() == ["social", "web"]
+
+    engine = MicroBatchEngine(config=EngineConfig(max_batch=4, flush_ms=5.0))
+    loaded = cat.load_all()
+    assert len(loaded) == 2
+    for fp, (idx, g) in loaded.items():
+        assert engine.register(idx, g, fingerprint=fp) == fp
+
+    async def main():
+        async with engine:
+            for fp, (idx, g) in loaded.items():
+                out = await engine.query(2, 0.4, fingerprint=fp)
+                ref = query(idx, g, 2, 0.4)
+                np.testing.assert_array_equal(out.labels,
+                                              np.asarray(ref.labels))
+
+    asyncio.run(main())
