@@ -1,0 +1,56 @@
+"""Incremental-vs-rebuild crossover: maintenance cost by edit-batch size.
+
+For each graph, an existing index absorbs one :class:`EdgeDelta` of K
+edits (half inserts of fresh edges, half deletes of existing ones) two
+ways:
+
+  * ``incremental`` — ``apply_delta``: frontier-only σ recompute + local
+    NO re-sort + CO merge (the live-serve maintenance path);
+  * ``rebuild``     — ``build_index`` from scratch on the post-edit graph
+    (graph assembly excluded, i.e. the rebuild is measured generously).
+
+The ``crossover`` row reports the batch size where rebuilding becomes
+cheaper — the number a ``LiveIndexService`` operator uses to pick between
+applying a burst as deltas or scheduling a rebuild/compaction.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import build_index, random_graph
+from repro.core.update import apply_delta, random_delta
+from benchmarks.common import timeit, emit
+
+BATCH_SIZES = (4, 16, 64, 256, 1024)
+UPDATE_GRAPHS = {
+    "sparse-8k": dict(n=8192, avg_degree=16.0, weighted=False, seed=1),
+    "dense-1k": dict(n=1024, avg_degree=96.0, weighted=True, seed=3),
+}
+
+
+def run():
+    lines = []
+    for gname, spec in UPDATE_GRAPHS.items():
+        g = random_graph(**spec)
+        idx = build_index(g, "cosine")
+        rng = np.random.default_rng(0)
+        crossover = None
+        for k in BATCH_SIZES:
+            delta = random_delta(g, k, rng)
+            # post-edit graph assembled once; rebuild timing excludes it
+            _, g2, info = apply_delta(idx, g, delta)
+
+            t_inc = timeit(lambda: apply_delta(idx, g, delta)[0], trials=2)
+            t_reb = timeit(lambda: build_index(g2, "cosine"), trials=2)
+            speedup = t_reb / t_inc
+            if crossover is None and speedup < 1.0:
+                crossover = k
+            lines.append(emit(
+                f"update/incremental/{gname}/batch={k}", t_inc,
+                f"rebuild_s={t_reb:.4f};speedup={speedup:.2f}x;"
+                f"frontier={info.n_frontier};touched={info.n_touched}"))
+        lines.append(emit(
+            f"update/crossover/{gname}/m={g.m}", 0.0,
+            f"batch={crossover if crossover is not None else 'none'};"
+            f"max_tested={BATCH_SIZES[-1]}"))
+    return lines

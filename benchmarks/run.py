@@ -2,7 +2,7 @@
 
 Usage: PYTHONPATH=src python -m benchmarks.run [section ...] \
            [--json out.json] [--shards K]
-Sections: fig5 fig6 fig8 fig9 serve roofline (default: all).
+Sections: fig5 fig6 fig8 fig9 serve update roofline (default: all).
 Output: ``name,us_per_call,derived`` CSV lines on stdout; ``--json`` also
 writes the same rows as structured JSON (the artifact CI uploads per run,
 so regressions are diffable across commits). ``--shards K`` forces K host
@@ -19,7 +19,7 @@ import argparse
 import json
 import sys
 
-SECTIONS = ("fig5", "fig6", "fig8", "fig9", "serve", "roofline")
+SECTIONS = ("fig5", "fig6", "fig8", "fig9", "serve", "update", "roofline")
 ALIASES = {"fig7": "fig6", "fig10": "fig9"}
 
 
@@ -85,6 +85,9 @@ def main() -> None:
     if "serve" in sections:
         from benchmarks import bench_serve
         lines += bench_serve.run()
+    if "update" in sections:
+        from benchmarks import bench_update
+        lines += bench_update.run()
     if "roofline" in sections:
         from benchmarks import roofline
         lines += roofline.run()

@@ -38,11 +38,36 @@ def _leaf_paths(tree):
     return paths, leaves, treedef
 
 
+def step_dir(directory: str, step: int, shard_suffix: str = "") -> str:
+    """The committed directory for one step — the single home of the
+    ``step_<k>`` naming convention (external chains like the serve-layer
+    DeltaLog build on it instead of re-parsing)."""
+    return os.path.join(directory, f"step_{step:08d}{shard_suffix}")
+
+
+def steps(directory: str, shard_suffix: str = "") -> list:
+    """All committed step numbers under ``directory``, ascending
+    (``.tmp`` wreckage from interrupted writes is ignored)."""
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            core = name[len("step_"):]
+            if shard_suffix:
+                if not core.endswith(shard_suffix):
+                    continue
+                core = core[: -len(shard_suffix)]
+            if core.isdigit():
+                out.append(int(core))
+    return sorted(out)
+
+
 def save(directory: str, step: int, tree: Any, *, keep: int = 3,
          shard_suffix: str = "") -> str:
     """Write a checkpoint; returns the committed path."""
     os.makedirs(directory, exist_ok=True)
-    final = os.path.join(directory, f"step_{step:08d}{shard_suffix}")
+    final = step_dir(directory, step, shard_suffix)
     tmp = final + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
@@ -72,19 +97,8 @@ def save(directory: str, step: int, tree: Any, *, keep: int = 3,
 
 
 def latest_step(directory: str, shard_suffix: str = "") -> Optional[int]:
-    if not os.path.isdir(directory):
-        return None
-    steps = []
-    for name in os.listdir(directory):
-        if name.startswith("step_") and not name.endswith(".tmp"):
-            core = name[len("step_"):]
-            if shard_suffix:
-                if not core.endswith(shard_suffix):
-                    continue
-                core = core[: -len(shard_suffix)]
-            if core.isdigit():
-                steps.append(int(core))
-    return max(steps) if steps else None
+    committed = steps(directory, shard_suffix)
+    return committed[-1] if committed else None
 
 
 def leaf_key(*parts: str) -> str:
@@ -99,7 +113,7 @@ def load_leaves(directory: str, step: int,
     """Reference-free restore: the manifest is self-describing, so return
     ``{leaf path string: numpy array}`` without a template pytree. Callers
     that know their tree's keys rebuild structures via :func:`leaf_key`."""
-    path = os.path.join(directory, f"step_{step:08d}{shard_suffix}")
+    path = step_dir(directory, step, shard_suffix)
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     return {e["path"]: np.load(os.path.join(path, e["file"]))
@@ -112,7 +126,7 @@ def restore(directory: str, step: int, like: Any, *, shardings=None,
 
     ``shardings``: optional matching pytree of NamedSharding — leaves are
     device_put with them (elastic re-mesh path)."""
-    path = os.path.join(directory, f"step_{step:08d}{shard_suffix}")
+    path = step_dir(directory, step, shard_suffix)
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     paths, leaves, treedef = _leaf_paths(like)
@@ -132,12 +146,6 @@ def restore(directory: str, step: int, like: Any, *, shardings=None,
 
 
 def _gc(directory: str, keep: int, shard_suffix: str):
-    steps = sorted(
-        int(n[len("step_"):].replace(shard_suffix, ""))
-        for n in os.listdir(directory)
-        if n.startswith("step_") and not n.endswith(".tmp")
-        and n[len("step_"):].replace(shard_suffix, "").isdigit()
-    )
-    for s in steps[:-keep]:
-        shutil.rmtree(os.path.join(directory, f"step_{s:08d}{shard_suffix}"),
+    for s in steps(directory, shard_suffix)[:-keep]:
+        shutil.rmtree(step_dir(directory, s, shard_suffix),
                       ignore_errors=True)

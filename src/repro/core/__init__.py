@@ -22,6 +22,7 @@ from repro.core.lsh import (
     kpartition_sketches,
     kpartition_edge_similarity,
 )
+from repro.core.update import EdgeDelta, UpdateInfo, apply_delta
 from repro.core.quality import modularity, adjusted_rand_index
 from repro.core.connectivity import (
     connected_components,

@@ -14,6 +14,7 @@ The global sorts for NO/CO lower to XLA's distributed sort under pjit.
 from __future__ import annotations
 
 import functools
+import hashlib
 import os
 
 import jax
@@ -132,16 +133,6 @@ def query_mesh(n_shards: int | None = None, axis: str = "data") -> Mesh:
     return Mesh(np.asarray(devs[:n_shards]), (axis,))
 
 
-def _pad_axis(arr, total: int, fill):
-    """Pad a 1-D array to ``total`` entries with ``fill`` (host-side)."""
-    pad = total - arr.shape[0]
-    if pad == 0:
-        return jnp.asarray(arr)
-    return jnp.concatenate(
-        [jnp.asarray(arr), jnp.full((pad,), fill, dtype=jnp.asarray(arr).dtype)]
-    )
-
-
 @functools.partial(
     jax.jit, static_argnames=("n", "max_cdeg", "mesh", "axis"))
 def _sharded_query_batch(
@@ -226,6 +217,16 @@ def _sharded_query_batch(
                   co_offsets, mus, epss)
 
 
+def _pad_host(arr, total: int, fill, dtype) -> np.ndarray:
+    """Pad a 1-D array to ``total`` entries with ``fill`` (host numpy, so
+    per-shard chunks can be diffed against a predecessor plan)."""
+    arr = np.asarray(arr, dtype=dtype)
+    pad = total - arr.shape[0]
+    if pad == 0:
+        return arr
+    return np.concatenate([arr, np.full((pad,), fill, dtype=dtype)])
+
+
 class ShardedQueryPlan:
     """Padded, device-placed operands for repeated sharded queries over one
     (index, graph, mesh) triple.
@@ -240,30 +241,93 @@ class ShardedQueryPlan:
     Ragged edge counts are padded host-side to a multiple of the axis size;
     padding edges carry ``emask=False`` and padded CO slots sit outside
     every [lo, hi) segment, so they never contribute.
+
+    :meth:`refresh` derives a successor plan after an incremental index
+    update: per-shard chunks of each O(m) operand are compared host-side
+    (sha256 content digests — 32 bytes per chunk retained, not the O(m)
+    padded arrays themselves) and only *mutated* partitions are re-placed
+    on device; unchanged shards adopt the old plan's buffers (an
+    incremental edit batch typically touches a handful of partitions, not
+    all k).
     """
 
-    def __init__(self, index, g: CSRGraph, mesh: Mesh, axis: str = "data"):
+    _SHARDED = ("emask", "eu", "ev", "esim", "co_v", "co_t", "co_i")
+
+    def __init__(self, index, g: CSRGraph, mesh: Mesh, axis: str = "data",
+                 *, _reuse_from: "ShardedQueryPlan | None" = None):
         self.mesh = mesh
         self.axis = axis
         self.n = index.n
         self.max_cdeg = index.max_cdeg
         k = mesh.shape[axis]
-        shard = NamedSharding(mesh, P(axis))
+        self._shard = NamedSharding(mesh, P(axis))
         repl = NamedSharding(mesh, P())
 
         ep = max(-(-max(g.m2, 1) // k) * k, k)   # edge slots per full array
-        self.emask = jax.device_put(jnp.arange(ep) < g.m2, shard)
-        self.eu = jax.device_put(_pad_axis(g.edge_u, ep, 0), shard)
-        self.ev = jax.device_put(_pad_axis(g.nbrs, ep, 0), shard)
-        self.esim = jax.device_put(_pad_axis(index.edge_sims, ep, 0.0), shard)
-
         m_co = index.co_vertex.shape[0]
         cp = max(-(-max(m_co, 1) // k) * k, k)
-        self.co_v = jax.device_put(_pad_axis(index.co_vertex, cp, 0), shard)
-        self.co_t = jax.device_put(_pad_axis(index.co_theta, cp, 0.0), shard)
-        self.co_i = jax.device_put(
-            _pad_axis(jnp.arange(m_co, dtype=jnp.int32), cp, 2 ** 30), shard)
+        host = {   # transient: placed on device, digested, then dropped
+            "emask": np.arange(ep) < g.m2,
+            "eu": _pad_host(g.edge_u, ep, 0, np.int32),
+            "ev": _pad_host(g.nbrs, ep, 0, np.int32),
+            "esim": _pad_host(index.edge_sims, ep, 0.0, np.float32),
+            "co_v": _pad_host(index.co_vertex, cp, 0, np.int32),
+            "co_t": _pad_host(index.co_theta, cp, 0.0, np.float32),
+            "co_i": _pad_host(np.arange(m_co, dtype=np.int32), cp, 2 ** 30,
+                              np.int32),
+        }
+        self._chunk_digests: dict = {}
+        stats = {"chunks": k * len(self._SHARDED), "reused": 0, "placed": 0}
+        for name in self._SHARDED:
+            arr, reused = self._place(name, host[name], _reuse_from)
+            setattr(self, name, arr)
+            stats["reused"] += reused
+            stats["placed"] += k - reused
         self.co_offsets = jax.device_put(index.co_offsets, repl)
+        self.last_refresh = stats
+
+    def _place(self, name: str, host: np.ndarray,
+               prev: "ShardedQueryPlan | None"):
+        """Device-place one sharded operand, adopting the predecessor's
+        per-shard buffers wherever the chunk content digest is unchanged.
+        Returns (global array, number of reused chunks)."""
+        k = self.mesh.shape[self.axis]
+        chunk = host.shape[0] // k
+        digests = [
+            hashlib.sha256(
+                np.ascontiguousarray(host[i * chunk:(i + 1) * chunk])
+                .tobytes()).digest()
+            for i in range(k)]
+        self._chunk_digests[name] = (host.shape, digests)
+        if (prev is None or prev.mesh is not self.mesh
+                or prev._chunk_digests[name][0] != host.shape):
+            return jax.device_put(jnp.asarray(host), self._shard), 0
+        old_digests = prev._chunk_digests[name][1]
+        old_arr = getattr(prev, name)
+        by_start = {(s.index[0].start or 0): s.data
+                    for s in old_arr.addressable_shards}
+        devices = list(self.mesh.devices.flat)
+        bufs, reused = [], 0
+        for i in range(k):
+            lo = i * chunk
+            if old_digests[i] == digests[i]:
+                bufs.append(by_start[lo])
+                reused += 1
+            else:
+                bufs.append(jax.device_put(
+                    jnp.asarray(host[lo: lo + chunk]), devices[i]))
+        arr = jax.make_array_from_single_device_arrays(
+            host.shape, self._shard, bufs)
+        return arr, reused
+
+    def refresh(self, index, g: CSRGraph) -> "ShardedQueryPlan":
+        """Successor plan for an updated (index, graph): re-shards only
+        the mutated partitions of the O(m) operands (see
+        ``plan.last_refresh`` for the reuse/placed chunk counts). The old
+        plan is left untouched, so an engine can serve in-flight traffic
+        against it until the hot-swap completes."""
+        return ShardedQueryPlan(index, g, self.mesh, self.axis,
+                                _reuse_from=self)
 
     def __call__(self, mus, epss):
         from repro.core.query import ClusterResult

@@ -32,23 +32,40 @@ from repro.core.graph import CSRGraph, to_dense
 MEASURES = ("cosine", "jaccard")
 
 
-def padded_neighbors(g: CSRGraph) -> Tuple[jax.Array, jax.Array, int]:
-    """Dense padded (nbr_mat[n, M], wgt_mat[n, M], M). Pad id = n (sorts last).
+PAD_WIDTH_QUANTUM = 8
 
-    Host-side helper (concrete offsets required to derive the static M).
+
+def padded_width(g: CSRGraph) -> int:
+    """Static padded row width M for :func:`padded_neighbors`.
+
+    M is the max open degree rounded up to a multiple of
+    ``PAD_WIDTH_QUANTUM``. The rounding keeps M (and therefore every
+    compiled similarity kernel *and* every σ bit pattern, which depends on
+    the reduction width) stable under small degree changes — the property
+    the incremental-update path (:mod:`repro.core.update`) relies on to
+    carry σ values over unchanged edges bit-identically.
     """
     deg = np.asarray(g.degrees())
     m = int(deg.max()) if len(deg) else 1
     m = max(m, 1)
+    return -(-m // PAD_WIDTH_QUANTUM) * PAD_WIDTH_QUANTUM
+
+
+def padded_neighbors(g: CSRGraph) -> Tuple[jax.Array, jax.Array, int]:
+    """Dense padded (nbr_mat[n, M], wgt_mat[n, M], M). Pad id = n (sorts last).
+
+    Host-side helper (concrete offsets required to derive the static M);
+    fully vectorized — one scatter per matrix, no per-vertex loop.
+    """
+    m = padded_width(g)
     offsets = np.asarray(g.offsets)
     nbr_mat = np.full((g.n, m), g.n, dtype=np.int32)
     wgt_mat = np.zeros((g.n, m), dtype=np.float32)
-    nbrs = np.asarray(g.nbrs)
-    wgts = np.asarray(g.wgts)
-    for v in range(g.n):
-        s, e = offsets[v], offsets[v + 1]
-        nbr_mat[v, : e - s] = nbrs[s:e]
-        wgt_mat[v, : e - s] = wgts[s:e]
+    if g.m2:
+        eu = np.asarray(g.edge_u)
+        pos = np.arange(g.m2, dtype=np.int64) - offsets[eu]
+        nbr_mat[eu, pos] = np.asarray(g.nbrs)
+        wgt_mat[eu, pos] = np.asarray(g.wgts)
     return jnp.asarray(nbr_mat), jnp.asarray(wgt_mat), m
 
 
@@ -95,6 +112,15 @@ def _edge_sims_chunk(
     raise ValueError(f"unknown measure {measure!r}")
 
 
+def _pow2_bucket(total: int, floor: int = 64) -> int:
+    """Smallest power-of-two ≥ ``total`` (≥ ``floor``) — the fixed chunk
+    shapes that let repeated subset passes share compiled kernels."""
+    b = floor
+    while b < total:
+        b <<= 1
+    return b
+
+
 def edge_similarities_subset(
     g: CSRGraph,
     eu: jax.Array,
@@ -105,8 +131,10 @@ def edge_similarities_subset(
 ) -> jax.Array:
     """Exact σ for an arbitrary subset of edges (endpoint arrays).
 
-    Used both for the full-graph pass and for the §6.3 degree-heuristic
-    compacted exact pass under LSH.
+    Used for the full-graph pass, the §6.3 degree-heuristic compacted
+    exact pass under LSH, and the incremental-update frontier recompute.
+    Chunks are padded to power-of-two buckets so calls with similar subset
+    sizes (e.g. repeated update batches) reuse one compiled kernel.
     """
     if measure not in MEASURES:
         raise ValueError(f"measure must be one of {MEASURES}")
@@ -114,7 +142,9 @@ def edge_similarities_subset(
     norms = closed_norms(g)
     cdeg = g.closed_degrees()
     total = int(eu.shape[0])
-    chunk = min(chunk, max(total, 1))
+    if total == 0:
+        return jnp.zeros((0,), jnp.float32)
+    chunk = min(chunk, _pow2_bucket(total))
     out = []
     for s in range(0, total, chunk):
         e = min(s + chunk, total)

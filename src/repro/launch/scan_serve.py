@@ -20,6 +20,11 @@ routing several indexes through one engine:
     # one engine, three indexes, mixed-fingerprint traffic
     PYTHONPATH=src python -m repro.launch.scan_serve serve --indexes 3
 
+    # resident live-update process: a synthetic edit stream mutates the
+    # graph while concurrent clients keep querying it
+    PYTHONPATH=src python -m repro.launch.scan_serve update \
+        --n 4096 --updates 16 --update-batch 8 --clients 8
+
 ``--shards K`` forces K host-platform devices itself when jax would
 otherwise see fewer (same effect as
 ``XLA_FLAGS=--xla_force_host_platform_device_count=K``).
@@ -61,7 +66,7 @@ def get_index(args, *, seed=None):
     print(f"built index in {time.time() - t0:.2f}s "
           f"(n={g.n}, m={g.m}, seed={seed}, fingerprint={fp[:12]})")
     if args.save:
-        path = IndexStore(args.save).save(index, g)
+        path = IndexStore(args.save).save(index, g, measure=args.measure)
         print(f"persisted to {path}")
     return index, g, fp
 
@@ -118,7 +123,7 @@ def cmd_serve(args):
     for k in range(max(args.indexes, 1)):
         index, g, fp = get_index(args, seed=args.seed + k)
         if catalog is not None:
-            path = catalog.save(f"idx{k}", index, g)
+            path = catalog.save(f"idx{k}", index, g, measure=args.measure)
             print(f"persisted to {path}")
         fps.append(engine.register(index, g, fingerprint=fp))
     rng = np.random.default_rng(0)
@@ -157,10 +162,96 @@ def cmd_serve(args):
           f"partitions={st['cache_partitions']}")
 
 
+def cmd_update(args):
+    """Resident live-update demo: apply an edit stream while serving."""
+    import tempfile
+
+    from repro.core import random_graph
+    from repro.core.update import random_delta
+    from repro.serve import EngineConfig, IndexStore, LiveIndexService
+
+    if args.save:
+        raise SystemExit(
+            "the update service persists snapshots + delta chains under "
+            "its own catalog root; use --root DIR instead of --save")
+    cfg = EngineConfig(max_batch=args.max_batch, flush_ms=args.flush_ms,
+                       warm_ahead=not args.no_warm,
+                       shards=args.shards if args.shards > 1 else None)
+    root = args.root or tempfile.mkdtemp(prefix="scan_live_")
+    svc = LiveIndexService(root, config=cfg, measure=args.measure,
+                           compact_every=args.compact_every)
+    t0 = time.time()
+    if args.load:
+        store = IndexStore(args.load)
+        stored = store.measure()
+        if stored is not None and stored != args.measure:
+            raise SystemExit(
+                f"{args.load} was built with --measure {stored}; "
+                f"updating it with --measure {args.measure} would mix "
+                "similarity measures (pass the matching --measure)")
+        index, g, _ = store.load()
+        fp = svc.create("live", g, index=index)
+        verb = f"adopted from {args.load}"
+    else:
+        g = random_graph(args.n, args.avg_degree, seed=args.seed,
+                         weighted=args.weighted,
+                         planted_clusters=args.clusters)
+        fp = svc.create("live", g)
+        verb = "built"
+    print(f"live index {verb} in {time.time() - t0:.2f}s "
+          f"(n={g.n}, m={g.m}, fingerprint={fp[:12]}) → {root}")
+
+    rng = np.random.default_rng(args.seed + 1)
+    pool = [(int(m), float(e))
+            for m in (2, 3, 4, 5)
+            for e in np.round(np.linspace(0.1, 0.9, 9), 3)]
+    apply_times, frontier_sizes = [], []
+
+    async def editor():
+        for _ in range(args.updates):
+            delta = random_delta(svc.graph("live"), args.update_batch, rng)
+            t0 = time.time()
+            info = await svc.apply("live", delta)
+            apply_times.append(time.time() - t0)
+            frontier_sizes.append(info.n_frontier)
+            await asyncio.sleep(0)
+
+    async def client(cid: int):
+        for _ in range(args.requests):
+            mu, eps = pool[rng.integers(len(pool))]
+            await svc.query("live", mu, eps)
+            await asyncio.sleep(0)
+
+    async def main_():
+        async with svc:
+            await svc.query("live", *pool[0])     # compile warmup
+            t0 = time.time()
+            await asyncio.gather(
+                editor(), *[client(i) for i in range(args.clients)])
+            return time.time() - t0
+
+    dt = asyncio.run(main_())
+    total = args.clients * args.requests
+    st = svc.stats()
+    status = svc.status("live")
+    print(f"\n{total} queries under {args.updates} live update batches "
+          f"(size {args.update_batch}) in {dt:.2f}s → {total / dt:.1f} q/s")
+    print(f"updates: mean apply={np.mean(apply_times) * 1e3:.1f}ms "
+          f"mean frontier={np.mean(frontier_sizes):.0f} half-edges; "
+          f"final seq={status['seq']} "
+          f"snapshot_seq={status['snapshot_seq']} "
+          f"fingerprint={status['fingerprint'][:12]}")
+    print(f"engine: device calls={st['device_queries']} "
+          f"cache_hits={st['cache_hits']} warmed={st['warmed']} "
+          f"hit_rate={st['cache_hit_rate']:.2f} "
+          f"partitions={st['cache_partitions']}")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     sub = ap.add_subparsers(dest="cmd", required=True)
-    for name, fn in (("sweep", cmd_sweep), ("serve", cmd_serve)):
+    for name, fn in (("sweep", cmd_sweep), ("serve", cmd_serve),
+                     ("update", cmd_update)):
         p = sub.add_parser(name)
         p.set_defaults(fn=fn)
         p.add_argument("--load", help="load a persisted index directory")
@@ -177,14 +268,24 @@ def main():
             p.add_argument("--mus", default="2,4,8")
             p.add_argument("--epss", default="0.1:0.9:9")
         else:
-            p.add_argument("--indexes", type=int, default=1,
-                           help="serve K indexes through one engine")
             p.add_argument("--clients", type=int, default=16)
             p.add_argument("--requests", type=int, default=32)
             p.add_argument("--max-batch", type=int, default=32)
             p.add_argument("--flush-ms", type=float, default=2.0)
             p.add_argument("--no-warm", action="store_true",
                            help="disable sweep-ahead cache warming")
+        if name == "serve":
+            p.add_argument("--indexes", type=int, default=1,
+                           help="serve K indexes through one engine")
+        if name == "update":
+            p.add_argument("--root", help="service catalog root "
+                           "(snapshots + delta chains; default: tempdir)")
+            p.add_argument("--updates", type=int, default=16,
+                           help="number of edit batches to apply")
+            p.add_argument("--update-batch", type=int, default=8,
+                           help="edits per batch (half ins, half del)")
+            p.add_argument("--compact-every", type=int, default=8,
+                           help="snapshot + prune after this many deltas")
     args = ap.parse_args()
     if getattr(args, "shards", 0) > 1:
         # must happen before jax's backend initializes — which is why all

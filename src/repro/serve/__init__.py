@@ -18,12 +18,19 @@ This package is the serving layer that completes that story:
     calls: requests carry an index fingerprint, buckets flush per index,
     failures isolate per bucket, and padding slots pre-warm the (μ, ε)
     neighborhood of observed traffic. ``EngineConfig(shards=k)`` runs the
-    device calls sharded over a k-way mesh for giant graphs.
+    device calls sharded over a k-way mesh for giant graphs;
+  * :mod:`repro.serve.live`  — resident update+query process:
+    ``LiveIndexService`` applies ``EdgeDelta`` batches to its indexes
+    incrementally (``repro.core.update``), hot-swaps them atomically into
+    the router, persists the edit stream as a delta chain with periodic
+    compaction, and re-warms observed traffic after every swap.
 
 CLI: ``PYTHONPATH=src python -m repro.launch.scan_serve --help``.
 """
-from repro.serve.store import IndexCatalog, IndexStore, index_fingerprint
+from repro.serve.store import (DeltaLog, IndexCatalog, IndexStore,
+                               index_fingerprint)
 from repro.serve.sweep import SweepResult, sweep, grid_sweep, sweep_stats
 from repro.serve.cache import (PartitionedResultCache, ResultCache,
                                neighborhood, quantize_eps)
 from repro.serve.engine import MicroBatchEngine, EngineConfig
+from repro.serve.live import LiveIndexService

@@ -65,6 +65,11 @@ from repro.serve.cache import (DEFAULT_EPS_QUANTUM, PartitionedResultCache,
 from repro.serve.store import index_fingerprint
 
 
+# queue marker for drain() barriers — compared by identity, so no real
+# fingerprint string can collide with it
+_DRAIN = object()
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     max_batch: int = 32          # device slots per micro-batch
@@ -111,8 +116,15 @@ class MicroBatchEngine:
     # index registry
     # ------------------------------------------------------------------
     def register(self, index: ScanIndex, g: CSRGraph, *,
-                 fingerprint: Optional[str] = None) -> str:
-        """Add an index to the router; returns its routing fingerprint."""
+                 fingerprint: Optional[str] = None,
+                 shard_plan=None) -> str:
+        """Add an index to the router; returns its routing fingerprint.
+
+        ``shard_plan`` seeds the sharded-execution plan for this index
+        (``EngineConfig(shards=k)`` mode) — the live-update hot-swap path
+        hands over a plan refreshed from its predecessor so only mutated
+        partitions of the O(m) operands were re-placed on device.
+        """
         fp = (fingerprint if fingerprint is not None
               else index_fingerprint(index, g))
         if fp in self._indexes:
@@ -121,6 +133,8 @@ class MicroBatchEngine:
             self._shard_plans.pop(fp, None)
             self.cache.invalidate(fp)
         self._indexes[fp] = (index, g)
+        if shard_plan is not None:
+            self._shard_plans[fp] = shard_plan
         if self.fingerprint is None:
             self.fingerprint = fp
         return fp
@@ -164,6 +178,19 @@ class MicroBatchEngine:
             self._queue.put_nowait(None)
             await self._task
             self._task = None
+
+    async def drain(self) -> None:
+        """Resolve once every request enqueued *before* this call has been
+        flushed. The queue is FIFO and the collector flushes strictly in
+        order, so a marker item acts as a barrier — this is what lets a
+        hot-swap retire an old index only after all in-flight traffic
+        against it has been answered (readers see old or new, never a
+        mix, and never a KeyError on a half-retired route)."""
+        if self._task is None:
+            return
+        fut = asyncio.get_running_loop().create_future()
+        self._queue.put_nowait((_DRAIN, 0, 0.0, fut))
+        await fut
 
     async def __aenter__(self) -> "MicroBatchEngine":
         await self.start()
@@ -229,6 +256,16 @@ class MicroBatchEngine:
         requests must not hang on a dead loop)."""
         buckets: dict[str, list] = {}
         for item in batch:
+            if item[0] is _DRAIN:
+                # barrier marker: everything queued before it is in this
+                # or an earlier (already flushed) batch; real items in
+                # *this* batch flush below, before any awaiter of the
+                # barrier future runs (the loop is single-threaded).
+                # A cancelled waiter (wait_for timeout) must not kill the
+                # collector with InvalidStateError.
+                if not item[3].done():
+                    item[3].set_result(None)
+                continue
             buckets.setdefault(item[0], []).append(item)
         for bucket in buckets.values():
             try:

@@ -1,0 +1,262 @@
+"""Resident index construction + update + query process.
+
+``LiveIndexService`` completes the serve story for *evolving* graphs: one
+process owns the named indexes (an :class:`~repro.serve.store.IndexCatalog`
+on disk), serves (μ, ε) queries through the micro-batching router, and
+applies :class:`~repro.core.update.EdgeDelta` batches between engine
+flushes — no cold rebuilds, no process restarts.
+
+Update protocol (per named index):
+
+  1. ``apply_delta`` maintains the index incrementally (bit-identical to a
+     rebuild — see ``repro.core.update``); the old (index, graph) pair is
+     untouched.
+  2. The delta is appended to the on-disk chain
+     (:class:`~repro.serve.store.DeltaLog`) *before* the swap — a crash
+     after the append replays the delta on restart; a crash during it
+     leaves an ignorable ``.tmp`` and the previous version restorable.
+  3. The new index registers with the engine under its new content
+     fingerprint (in sharded mode, via ``ShardedQueryPlan.refresh`` so
+     only mutated partitions of the O(m) operands are re-placed on
+     device), then the name's route flips in one assignment — queries
+     that already resolved the old fingerprint keep hitting the old
+     index, new queries hit the new one, and *nobody* sees a mix.
+  4. ``engine.drain()`` barriers until every in-flight request has been
+     answered, then the old fingerprint unregisters — which also drops
+     exactly its cache partition (sibling indexes keep their hit rates;
+     that is the whole point of fingerprint-keyed invalidation).
+  5. Recently observed (μ, ε) settings are re-issued against the new
+     index, which re-warms their (μ±1, ε±δ) neighborhood through the
+     engine's padding-slot warming.
+  6. Every ``compact_every`` deltas the live index is saved as a full
+     snapshot (version = delta seq) and the covered chain prefix is
+     pruned; restore = latest snapshot + replay of the strictly-newer
+     tail, fingerprint-verified step by step.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional
+
+from repro.core.graph import CSRGraph
+from repro.core.index import ScanIndex, build_index
+from repro.core.query import ClusterResult
+from repro.core.update import EdgeDelta, UpdateInfo, apply_delta
+from repro.serve.cache import quantize_eps
+from repro.serve.engine import EngineConfig, MicroBatchEngine
+from repro.serve.store import DeltaLog, IndexCatalog, index_fingerprint
+
+
+@dataclasses.dataclass(frozen=True)
+class _Live:
+    """One name's resident state (replaced wholesale on every swap)."""
+
+    index: ScanIndex
+    g: CSRGraph
+    fp: str
+    seq: int            # last applied delta sequence number
+    snapshot_seq: int   # delta seq covered by the newest full snapshot
+
+
+class LiveIndexService:
+    """Named live indexes behind one micro-batching engine.
+
+    ``measure`` is the structural-similarity measure every index in this
+    service is built and maintained with.
+    """
+
+    def __init__(self, root: str, *,
+                 config: EngineConfig = EngineConfig(),
+                 measure: str = "cosine",
+                 compact_every: int = 8,
+                 keep_snapshots: int = 3,
+                 rewarm_recent: int = 4):
+        self.catalog = IndexCatalog(root, keep=keep_snapshots)
+        self.engine = MicroBatchEngine(config=config)
+        self.measure = measure
+        self.compact_every = compact_every
+        self.rewarm_recent = rewarm_recent
+        self._live: Dict[str, _Live] = {}
+        self._observed: Dict[str, OrderedDict] = {}
+        self._locks: Dict[str, asyncio.Lock] = {}
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    async def __aenter__(self) -> "LiveIndexService":
+        await self.engine.start()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.engine.stop()
+
+    def names(self) -> List[str]:
+        return sorted(self._live)
+
+    def fingerprint(self, name: str) -> str:
+        return self._live[name].fp
+
+    def index(self, name: str) -> ScanIndex:
+        """The currently live index for ``name``."""
+        return self._live[name].index
+
+    def graph(self, name: str) -> CSRGraph:
+        """The currently live graph for ``name``."""
+        return self._live[name].g
+
+    def status(self, name: str) -> dict:
+        """Version/routing state for ``name`` (fp, seq, snapshot_seq)."""
+        live = self._live[name]
+        return {"fingerprint": live.fp, "seq": live.seq,
+                "snapshot_seq": live.snapshot_seq,
+                "n": live.g.n, "m": live.g.m}
+
+    def stats(self) -> dict:
+        out = self.engine.batch_stats()
+        out["live_indexes"] = len(self._live)
+        out["live_seqs"] = {n: l.seq for n, l in self._live.items()}
+        return out
+
+    # ------------------------------------------------------------------
+    # index creation / restore
+    # ------------------------------------------------------------------
+    def create(self, name: str, g: CSRGraph, *,
+               index: Optional[ScanIndex] = None) -> str:
+        """Build (or adopt) an index for ``name``, persist snapshot v0,
+        register it with the engine; → fingerprint."""
+        if name in self._live:
+            raise ValueError(f"index {name!r} already live")
+        if index is None:
+            index = build_index(g, self.measure)
+        fp = index_fingerprint(index, g)
+        self.catalog.store(name).save(index, g, version=0,
+                                      measure=self.measure)
+        self.engine.register(index, g, fingerprint=fp)
+        self._live[name] = _Live(index=index, g=g, fp=fp, seq=0,
+                                 snapshot_seq=0)
+        return fp
+
+    def load(self, name: str) -> str:
+        """Restore ``name`` from disk: latest snapshot + delta-chain tail
+        (each replayed step fingerprint-verified); → fingerprint."""
+        if name in self._live:
+            raise ValueError(f"index {name!r} already live")
+        store = self.catalog.store(name)
+        index, g, fp = store.load()
+        stored_measure = store.measure()
+        if stored_measure is not None and stored_measure != self.measure:
+            raise ValueError(
+                f"index {name!r} was built with measure "
+                f"{stored_measure!r}; this service maintains "
+                f"{self.measure!r} — frontier σ recomputes would silently "
+                "mix measures")
+        snap_seq = store.latest_version()
+        log = DeltaLog(store.directory)
+        seq = snap_seq
+        for s in log.sequences():
+            if s <= snap_seq:
+                continue
+            if s != seq + 1:
+                raise ValueError(
+                    f"delta chain for {name!r} has a gap: snapshot at "
+                    f"{snap_seq}, next delta {s} after {seq}")
+            delta, want_fp = log.load(s)
+            index, g, _ = apply_delta(index, g, delta, self.measure)
+            fp = index_fingerprint(index, g)
+            if fp != want_fp:
+                raise ValueError(
+                    f"delta {s} for {name!r} replayed to fingerprint "
+                    f"{fp[:12]}… but the chain recorded {want_fp[:12]}…")
+            seq = s
+        self.engine.register(index, g, fingerprint=fp)
+        self._live[name] = _Live(index=index, g=g, fp=fp, seq=seq,
+                                 snapshot_seq=snap_seq)
+        return fp
+
+    def load_all(self) -> List[str]:
+        for name in self.catalog.names():
+            if name not in self._live:
+                self.load(name)
+        return self.names()
+
+    # ------------------------------------------------------------------
+    # queries
+    # ------------------------------------------------------------------
+    async def query(self, name: str, mu: int, eps: float) -> ClusterResult:
+        """One SCAN query by *name*; the route resolves atomically here,
+        so a concurrent hot-swap gives this query entirely the old or
+        entirely the new index."""
+        live = self._live[name]
+        self._note(name, mu, eps)
+        return await self.engine.query(mu, eps, fingerprint=live.fp)
+
+    def _note(self, name: str, mu: int, eps: float) -> None:
+        obs = self._observed.setdefault(name, OrderedDict())
+        key = (int(mu), quantize_eps(eps, self.engine.cfg.eps_quantum))
+        obs.pop(key, None)
+        obs[key] = True
+        while len(obs) > self.rewarm_recent:
+            obs.popitem(last=False)
+
+    # ------------------------------------------------------------------
+    # updates
+    # ------------------------------------------------------------------
+    async def apply(self, name: str, delta: EdgeDelta) -> UpdateInfo:
+        """Apply one edit batch to ``name`` and hot-swap the result in."""
+        lock = self._locks.setdefault(name, asyncio.Lock())
+        async with lock:
+            live = self._live[name]
+            new_index, new_g, info = apply_delta(
+                live.index, live.g, delta, self.measure)
+            new_fp = index_fingerprint(new_index, new_g)
+            seq = live.seq + 1
+            DeltaLog(self.catalog.store(name).directory).append(
+                seq, delta, new_fp)
+
+            if new_fp != live.fp:
+                shard_plan = None
+                old_plan = self.engine._shard_plans.get(live.fp)
+                if old_plan is not None:
+                    # re-shard only the mutated partitions; the old plan
+                    # stays intact for in-flight traffic until the drain
+                    shard_plan = old_plan.refresh(new_index, new_g)
+                self.engine.register(new_index, new_g, fingerprint=new_fp,
+                                     shard_plan=shard_plan)
+            self._live[name] = dataclasses.replace(
+                live, index=new_index, g=new_g, fp=new_fp, seq=seq)
+
+            if new_fp != live.fp:
+                await self.engine.drain()
+                if live.fp not in {l.fp for l in self._live.values()}:
+                    self.engine.unregister(live.fp)
+                await self._rewarm(name)
+            if seq - self._live[name].snapshot_seq >= self.compact_every:
+                self.compact(name)
+            return info
+
+    async def _rewarm(self, name: str) -> None:
+        """Re-issue the recently observed settings against the fresh
+        index — the engine's padding-slot warming re-warms their
+        (μ±1, ε±δ) neighborhood as a side effect."""
+        fp = self._live[name].fp
+        obs = list(self._observed.get(name, ()))
+        if obs:
+            await asyncio.gather(
+                *[self.engine.query(mu, eps, fingerprint=fp)
+                  for mu, eps in obs])
+
+    # ------------------------------------------------------------------
+    # compaction
+    # ------------------------------------------------------------------
+    def compact(self, name: str) -> int:
+        """Save the live index as a full snapshot (version = delta seq)
+        and prune the covered chain prefix; → pruned delta count."""
+        live = self._live[name]
+        store = self.catalog.store(name)
+        store.save(live.index, live.g, version=live.seq,
+                   measure=self.measure)
+        dropped = DeltaLog(store.directory).prune_through(live.seq)
+        self._live[name] = dataclasses.replace(live, snapshot_seq=live.seq)
+        return dropped

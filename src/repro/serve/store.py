@@ -26,7 +26,8 @@ from __future__ import annotations
 
 import hashlib
 import os
-from typing import Dict, Optional, Tuple
+import shutil
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -34,6 +35,7 @@ import numpy as np
 from repro.ckpt import checkpoint
 from repro.core.graph import CSRGraph
 from repro.core.index import ScanIndex
+from repro.core.update import EdgeDelta
 
 _INDEX_FIELDS = ("offsets_c", "no_nbrs", "no_sims", "no_self", "co_offsets",
                  "co_vertex", "co_theta", "cdeg", "edge_sims")
@@ -54,7 +56,8 @@ def index_fingerprint(index: ScanIndex, g: CSRGraph) -> str:
     return h.hexdigest()
 
 
-def _to_tree(index: ScanIndex, g: CSRGraph, fingerprint: str) -> dict:
+def _to_tree(index: ScanIndex, g: CSRGraph, fingerprint: str,
+             measure: str) -> dict:
     return {
         "index": {f: getattr(index, f) for f in _INDEX_FIELDS},
         "graph": {f: getattr(g, f) for f in _GRAPH_FIELDS},
@@ -65,6 +68,7 @@ def _to_tree(index: ScanIndex, g: CSRGraph, fingerprint: str) -> dict:
             "max_cdeg": jnp.int32(index.max_cdeg),
         },
         "fingerprint": np.frombuffer(fingerprint.encode(), dtype=np.uint8),
+        "measure": np.frombuffer(measure.encode(), dtype=np.uint8),
     }
 
 
@@ -77,8 +81,12 @@ class IndexStore:
 
     # -- write ---------------------------------------------------------
     def save(self, index: ScanIndex, g: CSRGraph, *,
-             version: Optional[int] = None) -> str:
-        """Commit a new version; returns the committed path."""
+             version: Optional[int] = None,
+             measure: str = "cosine") -> str:
+        """Commit a new version; returns the committed path. ``measure``
+        records the similarity measure the index was built with, so a
+        consumer that will *maintain* the index (incremental updates
+        recompute frontier σ) can refuse a mismatched adoption."""
         latest = checkpoint.latest_step(self.directory)
         if version is None:
             version = 0 if latest is None else latest + 1
@@ -89,7 +97,8 @@ class IndexStore:
                 f"version {version} <= latest committed {latest}")
         fp = index_fingerprint(index, g)
         return checkpoint.save(self.directory, version,
-                               _to_tree(index, g, fp), keep=self.keep)
+                               _to_tree(index, g, fp, measure),
+                               keep=self.keep)
 
     # -- read ----------------------------------------------------------
     def latest_version(self) -> Optional[int]:
@@ -127,6 +136,83 @@ class IndexStore:
         fp = bytes(leaf("fingerprint")).decode()
         return index, g, fp
 
+    def measure(self, version: Optional[int] = None) -> Optional[str]:
+        """The similarity measure recorded at save time, or ``None`` for
+        checkpoints predating the measure leaf."""
+        if version is None:
+            version = self.latest_version()
+            if version is None:
+                raise FileNotFoundError(
+                    f"no committed index under {self.directory!r}")
+        by_path = checkpoint.load_leaves(self.directory, version)
+        raw = by_path.get(checkpoint.leaf_key("measure"))
+        return bytes(raw).decode() if raw is not None else None
+
+
+class DeltaLog:
+    """Versioned chain of edit batches rooted next to an index store.
+
+    Layout: ``<index dir>/deltas/step_<seq>/…`` — one atomic checkpoint
+    (same tmp-dir + rename commit as every other artifact) per applied
+    :class:`~repro.core.update.EdgeDelta`. Each entry also records the
+    content fingerprint the live index had *after* the delta, so restore
+    can verify chain integrity step by step.
+
+    The chain composes with the snapshot store: a compaction saves the
+    live index as snapshot version ``seq`` and prunes deltas ≤ ``seq``,
+    so restore = load latest snapshot + replay the (strictly newer) tail.
+    A crash mid-append leaves only an ignorable ``.tmp`` directory — the
+    manifest stays restorable to the last committed version.
+    """
+
+    SUBDIR = "deltas"
+
+    def __init__(self, directory: str):
+        self.directory = os.path.join(directory, self.SUBDIR)
+
+    def append(self, seq: int, delta: EdgeDelta, fingerprint: str) -> str:
+        tree = {
+            "ins": {"u": delta.ins_u, "v": delta.ins_v, "w": delta.ins_w},
+            "del": {"u": delta.del_u, "v": delta.del_v},
+            "meta": {
+                "seq": np.int64(seq),
+                "fingerprint": np.frombuffer(fingerprint.encode(),
+                                             dtype=np.uint8),
+            },
+        }
+        # keep=everything: chain entries are pruned by compaction, not age
+        return checkpoint.save(self.directory, seq, tree, keep=1 << 30)
+
+    def sequences(self) -> List[int]:
+        """Committed delta seqs, ascending (``.tmp`` wreckage ignored)."""
+        return checkpoint.steps(self.directory)
+
+    def load(self, seq: int) -> Tuple[EdgeDelta, str]:
+        """→ (delta, post-application fingerprint) for one chain entry."""
+        by_path = checkpoint.load_leaves(self.directory, seq)
+
+        def leaf(*parts):
+            return by_path[checkpoint.leaf_key(*parts)]
+
+        delta = EdgeDelta(
+            ins_u=np.asarray(leaf("ins", "u"), np.int64),
+            ins_v=np.asarray(leaf("ins", "v"), np.int64),
+            ins_w=np.asarray(leaf("ins", "w"), np.float32),
+            del_u=np.asarray(leaf("del", "u"), np.int64),
+            del_v=np.asarray(leaf("del", "v"), np.int64),
+        )
+        return delta, bytes(leaf("meta", "fingerprint")).decode()
+
+    def prune_through(self, seq: int) -> int:
+        """Drop chain entries ≤ ``seq`` (they are covered by a snapshot)."""
+        dropped = 0
+        for s in self.sequences():
+            if s <= seq:
+                shutil.rmtree(checkpoint.step_dir(self.directory, s),
+                              ignore_errors=True)
+                dropped += 1
+        return dropped
+
 
 class IndexCatalog:
     """A directory of named ``IndexStore``s — the on-disk side of the
@@ -154,8 +240,9 @@ class IndexCatalog:
             d for d in os.listdir(self.root)
             if self.store(d).latest_version() is not None)
 
-    def save(self, name: str, index: ScanIndex, g: CSRGraph) -> str:
-        return self.store(name).save(index, g)
+    def save(self, name: str, index: ScanIndex, g: CSRGraph, *,
+             measure: str = "cosine") -> str:
+        return self.store(name).save(index, g, measure=measure)
 
     def load_all(self) -> Dict[str, Tuple[ScanIndex, CSRGraph]]:
         out: Dict[str, Tuple[ScanIndex, CSRGraph]] = {}

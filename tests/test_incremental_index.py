@@ -1,0 +1,306 @@
+"""Edit-script oracle for incremental GS*-Index maintenance.
+
+The invariant under test: after ANY sequence of edge insert/delete batches,
+the incrementally maintained index (``repro.core.update.apply_delta``) is
+**bit-identical** to ``build_index`` run from scratch on the resulting edge
+set — every array, every dtype, every static — and ``query_batch`` answers
+are identical across a (μ, ε) grid.
+
+Two generators drive the oracle:
+
+  * deterministic seeded scripts (always run, no external deps) covering
+    the adversarial edit classes: weighted edges, weight overwrites,
+    isolated-vertex creation (deleting a vertex's last edge) and removal
+    (re-attaching it), re-inserting a deleted edge, delete+insert of the
+    same edge in one batch, emptying the graph, and repopulating it;
+  * hypothesis-generated random scripts (run when hypothesis is installed
+    — CI's fast lane, with the seed-pinned profile from conftest).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (EdgeDelta, apply_delta, build_index, from_edge_list,
+                        query_batch, random_graph)
+
+try:
+    import hypothesis
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # pragma: no cover
+    hypothesis = None
+
+INDEX_FIELDS = ("offsets_c", "no_nbrs", "no_sims", "no_self", "co_offsets",
+                "co_vertex", "co_theta", "cdeg", "edge_sims")
+GRAPH_FIELDS = ("offsets", "nbrs", "wgts", "edge_u")
+
+
+def canonical_edges(g):
+    eu, ev, w = np.asarray(g.edge_u), np.asarray(g.nbrs), np.asarray(g.wgts)
+    m = eu < ev
+    return np.stack([eu[m], ev[m]], axis=1), w[m]
+
+
+def rebuild(g, measure="cosine"):
+    """From-scratch reference: new graph + new index off the edge list."""
+    edges, w = canonical_edges(g)
+    g_ref = from_edge_list(g.n, edges, w)
+    return build_index(g_ref, measure), g_ref
+
+
+def assert_bit_identical(idx, g, idx_ref, g_ref, tag=""):
+    for f in GRAPH_FIELDS:
+        a, b = np.asarray(getattr(g, f)), np.asarray(getattr(g_ref, f))
+        assert a.dtype == b.dtype, (tag, f)
+        np.testing.assert_array_equal(a, b, err_msg=f"{tag} graph.{f}")
+    assert (g.n, g.m2) == (g_ref.n, g_ref.m2), tag
+    for f in INDEX_FIELDS:
+        a, b = np.asarray(getattr(idx, f)), np.asarray(getattr(idx_ref, f))
+        assert a.dtype == b.dtype, (tag, f, a.dtype, b.dtype)
+        assert a.shape == b.shape, (tag, f, a.shape, b.shape)
+        np.testing.assert_array_equal(a, b, err_msg=f"{tag} index.{f}")
+    assert (idx.n, idx.m2c, idx.max_cdeg) == \
+        (idx_ref.n, idx_ref.m2c, idx_ref.max_cdeg), tag
+
+
+def assert_queries_identical(idx, g, idx_ref, g_ref, tag=""):
+    mus = np.asarray([2, 2, 3, 4, 5], np.int32)
+    epss = np.asarray([0.05, 0.5, 0.3, 0.7, 0.95], np.float32)
+    got = query_batch(idx, g, mus, epss)
+    ref = query_batch(idx_ref, g_ref, mus, epss)
+    for f in ("labels", "is_core", "n_clusters"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, f)), np.asarray(getattr(ref, f)),
+            err_msg=f"{tag} query.{f}")
+
+
+# --------------------------------------------------------------------------
+# deterministic edit-script oracle (always runs)
+# --------------------------------------------------------------------------
+def test_scripted_edit_classes_bit_identical():
+    """One long script through every adversarial edit class, asserting
+    bit-identity after every step and query equality at checkpoints."""
+    g = random_graph(48, 5.0, seed=2, weighted=True)
+    idx = build_index(g, "cosine")
+
+    def step(delta, tag, queries=False):
+        nonlocal idx, g
+        idx, g, info = apply_delta(idx, g, delta)
+        idx_ref, g_ref = rebuild(g)
+        assert_bit_identical(idx, g, idx_ref, g_ref, tag)
+        if queries:
+            assert_queries_identical(idx, g, idx_ref, g_ref, tag)
+        return info
+
+    # weighted inserts (incl. one weight overwrite of an existing edge)
+    eu0, ev0 = int(np.asarray(g.edge_u)[0]), int(np.asarray(g.nbrs)[0])
+    info = step(EdgeDelta.make(
+        inserts=[(1, 40), (2, 33), (min(eu0, ev0), max(eu0, ev0))],
+        weights=[0.25, 0.75, 0.5]), "weighted-insert", queries=True)
+    assert info.n_inserted == 3 and info.n_deleted == 0
+
+    # delete a vertex's last edges → isolated-vertex creation
+    eu, ev = np.asarray(g.edge_u), np.asarray(g.nbrs)
+    v_iso = int(eu[0])
+    last = [(int(u), int(v)) for u, v in zip(eu, ev) if u == v_iso]
+    info = step(EdgeDelta.make(deletes=last), "isolate")
+    assert np.asarray(g.degrees())[v_iso] == 0
+    assert info.n_deleted == len(last)
+
+    # re-attach the isolated vertex (isolated-vertex removal) and
+    # re-insert one previously deleted edge
+    back = last[0]
+    info = step(EdgeDelta.make(inserts=[(v_iso, (v_iso + 7) % g.n), back],
+                               weights=[1.0, 0.9]),
+                "reattach", queries=True)
+    assert info.n_inserted == 2
+
+    # delete + insert the same edge in one batch (reinsert-with-new-weight)
+    info = step(EdgeDelta.make(inserts=[back], weights=[0.1],
+                               deletes=[back]), "del+ins-same-batch")
+    assert info.n_deleted == 1 and info.n_inserted == 1
+
+    # no-op batch: delete an absent edge, re-insert an identical edge
+    w_now = None
+    eu, ev, wn = (np.asarray(g.edge_u), np.asarray(g.nbrs),
+                  np.asarray(g.wgts))
+    for u, v, w in zip(eu, ev, wn):
+        if u < v:
+            w_now = (int(u), int(v), float(w))
+            break
+    info = step(EdgeDelta.make(inserts=[w_now[:2]], weights=[w_now[2]],
+                               deletes=[(0, g.n - 1)
+                                        if not _has_edge(g, 0, g.n - 1)
+                                        else (1, g.n - 1)]), "noop")
+    assert info.n_inserted == 0 and info.n_deleted == 0
+    assert info.n_frontier == 0 and info.n_affected_rows == 0
+
+    # empty the graph entirely, then repopulate from nothing
+    edges, _ = canonical_edges(g)
+    step(EdgeDelta.make(deletes=edges), "empty")
+    assert g.m2 == 0
+    step(EdgeDelta.make(inserts=[(0, 1), (1, 2), (0, 2), (5, 9)],
+                        weights=[0.3, 0.6, 0.9, 1.0]),
+         "repopulate", queries=True)
+
+
+def _has_edge(g, u, v):
+    eu, ev = np.asarray(g.edge_u), np.asarray(g.nbrs)
+    return bool(np.any((eu == u) & (ev == v)))
+
+
+def test_random_scripts_bit_identical():
+    """Seeded random scripts over a few graph shapes: every step must stay
+    bit-identical; queries checked on the final state of each script."""
+    for seed, n, deg, weighted in ((0, 30, 4.0, False), (1, 44, 6.0, True)):
+        rng = np.random.default_rng(seed)
+        g = random_graph(n, deg, seed=seed, weighted=weighted)
+        idx = build_index(g, "cosine")
+        for step in range(4):
+            k_ins = int(rng.integers(0, 6))
+            k_del = int(rng.integers(0, 6))
+            ins = rng.integers(0, n, size=(k_ins, 2))
+            w = rng.uniform(0.1, 1.0, size=k_ins).astype(np.float32)
+            edges, _ = canonical_edges(g)
+            if len(edges) and k_del:
+                dels = edges[rng.integers(0, len(edges), size=k_del)]
+            else:
+                dels = rng.integers(0, n, size=(k_del, 2))
+            idx, g, _ = apply_delta(
+                idx, g, EdgeDelta.make(inserts=ins, weights=w, deletes=dels))
+            idx_ref, g_ref = rebuild(g)
+            assert_bit_identical(idx, g, idx_ref, g_ref,
+                                 f"seed={seed} step={step}")
+        assert_queries_identical(idx, g, idx_ref, g_ref, f"seed={seed}")
+
+
+@pytest.mark.slow
+def test_random_scripts_thorough():
+    """Slow-lane soak: bigger graphs, longer scripts, larger batches, and
+    query-grid equality after EVERY step (the fast lane checks queries at
+    script checkpoints only)."""
+    for seed in range(3):
+        n = 80 + 40 * seed
+        rng = np.random.default_rng(100 + seed)
+        g = random_graph(n, 8.0, seed=seed, weighted=(seed % 2 == 0))
+        idx = build_index(g, "cosine")
+        for step in range(6):
+            k_ins = int(rng.integers(0, 16))
+            k_del = int(rng.integers(0, 16))
+            ins = rng.integers(0, n, size=(k_ins, 2))
+            w = rng.uniform(0.1, 1.0, size=k_ins).astype(np.float32)
+            edges, _ = canonical_edges(g)
+            dels = (edges[rng.integers(0, len(edges), size=k_del)]
+                    if len(edges) and k_del
+                    else rng.integers(0, n, size=(k_del, 2)))
+            idx, g, _ = apply_delta(
+                idx, g, EdgeDelta.make(inserts=ins, weights=w, deletes=dels))
+            idx_ref, g_ref = rebuild(g)
+            tag = f"thorough seed={seed} step={step}"
+            assert_bit_identical(idx, g, idx_ref, g_ref, tag)
+            assert_queries_identical(idx, g, idx_ref, g_ref, tag)
+
+
+def test_degree_growth_triggers_full_resim_and_stays_identical():
+    """Pushing one vertex's degree across the padded-width quantum forces
+    the full-σ fallback; the result must still be bit-identical."""
+    g = random_graph(40, 3.0, seed=4)
+    idx = build_index(g, "cosine")
+    hub = 7
+    deg0 = int(np.asarray(g.degrees())[hub])
+    targets = [v for v in range(g.n)
+               if v != hub and not _has_edge(g, hub, v)]
+    full_seen = False
+    for chunk in range(0, len(targets), 6):
+        ins = [(hub, v) for v in targets[chunk: chunk + 6]]
+        idx, g, info = apply_delta(idx, g, EdgeDelta.make(inserts=ins))
+        full_seen = full_seen or info.full_resim
+        idx_ref, g_ref = rebuild(g)
+        assert_bit_identical(idx, g, idx_ref, g_ref, f"hub-chunk {chunk}")
+    assert full_seen, "degree growth must cross a padded-width bucket"
+    assert int(np.asarray(g.degrees())[hub]) == deg0 + len(targets)
+    assert_queries_identical(idx, g, idx_ref, g_ref, "hub-final")
+
+
+def test_delta_canonicalization():
+    d = EdgeDelta.make(inserts=[(3, 1), (1, 3), (2, 2), (4, 5)],
+                       weights=[0.2, 0.9, 0.5, 0.4],
+                       deletes=[(7, 6), (6, 7), (8, 8)])
+    # self-loops dropped, duplicates collapsed (last insert weight wins)
+    assert len(d.ins_u) == 2 and len(d.del_u) == 1
+    i = int(np.flatnonzero((d.ins_u == 1) & (d.ins_v == 3))[0])
+    assert d.ins_w[i] == np.float32(0.9)
+    assert (int(d.del_u[0]), int(d.del_v[0])) == (6, 7)
+    assert len(d) == 3
+
+
+def test_out_of_range_endpoints_rejected():
+    g = random_graph(10, 2.0, seed=0)
+    idx = build_index(g, "cosine")
+    with pytest.raises(ValueError):
+        apply_delta(idx, g, EdgeDelta.make(inserts=[(0, 10)]))
+    with pytest.raises(ValueError):
+        apply_delta(idx, g, EdgeDelta.make(deletes=[(3, 99)]))
+    # negative ids must raise up front, not crash deep inside a kernel
+    with pytest.raises(ValueError):
+        apply_delta(idx, g, EdgeDelta.make(inserts=[(-1, 5)]))
+    with pytest.raises(ValueError):
+        apply_delta(idx, g, EdgeDelta.make(deletes=[(-2, 4)]))
+
+
+# --------------------------------------------------------------------------
+# hypothesis edit-script oracle (CI fast lane; seed-pinned profile)
+# --------------------------------------------------------------------------
+if hypothesis is not None:
+
+    @st.composite
+    def edit_scripts(draw):
+        """(initial graph, [EdgeDelta, ...]) with ops biased toward the
+        nasty cases: deleting existing edges (incl. a vertex's last edge)
+        and re-inserting recently deleted ones."""
+        n = draw(st.integers(6, 20))
+        m = draw(st.integers(1, 2 * n))
+        pairs = draw(st.lists(
+            st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+            min_size=m, max_size=m))
+        pairs = [(u, v) for u, v in pairs if u != v] or [(0, 1)]
+        weighted = draw(st.booleans())
+        weights = (draw(st.lists(st.floats(0.1, 1.0, allow_nan=False),
+                                 min_size=len(pairs), max_size=len(pairs)))
+                   if weighted else None)
+        g0 = from_edge_list(n, np.asarray(pairs, np.int64),
+                            np.asarray(weights, np.float32)
+                            if weights else None)
+        n_steps = draw(st.integers(1, 3))
+        steps = []
+        for _ in range(n_steps):
+            k_ins = draw(st.integers(0, 4))
+            k_del = draw(st.integers(0, 4))
+            ins = draw(st.lists(
+                st.tuples(st.integers(0, n - 1), st.integers(0, n - 1),
+                          st.floats(0.1, 1.0, allow_nan=False)),
+                min_size=k_ins, max_size=k_ins))
+            dels = draw(st.lists(
+                st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+                min_size=k_del, max_size=k_del))
+            steps.append((ins, dels))
+        return g0, steps
+
+    @settings(max_examples=12, deadline=None)
+    @given(edit_scripts())
+    def test_hypothesis_scripts_bit_identical(script):
+        g0, steps = script
+        idx, g = build_index(g0, "cosine"), g0
+        for i, (ins, dels) in enumerate(steps):
+            # bias deletions toward edges that actually exist
+            edges, _ = canonical_edges(g)
+            real_dels = list(dels)
+            if len(edges) and dels:
+                real_dels += [tuple(edges[(u * 7 + v) % len(edges)])
+                              for u, v in dels[:2]]
+            delta = EdgeDelta.make(
+                inserts=[(u, v) for u, v, _ in ins],
+                weights=[w for _, _, w in ins],
+                deletes=real_dels)
+            idx, g, _ = apply_delta(idx, g, delta)
+            idx_ref, g_ref = rebuild(g)
+            assert_bit_identical(idx, g, idx_ref, g_ref, f"step {i}")
+        assert_queries_identical(idx, g, idx_ref, g_ref, "final")

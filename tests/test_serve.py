@@ -154,6 +154,64 @@ def test_cache_eps_quantization_aliases_near_identical():
     assert quantize_eps(0.6001) == 0.6001
 
 
+def test_eps_quantization_grid_edge_aliasing():
+    """Regression for the ε-boundary bug class: values straddling a 1e-4
+    grid edge within half a quantum alias to the same cell (round-half-even
+    at exact midpoints); values a full quantum away never do. Documented in
+    serve/cache.py."""
+    # both sides of the 0.3 grid edge, within half a quantum → alias
+    assert quantize_eps(0.29995) == 0.3      # midpoint rounds to even cell
+    assert quantize_eps(0.29996) == 0.3
+    assert quantize_eps(0.30004) == 0.3
+    c = ResultCache(capacity=8)
+    c.put("fp", 2, 0.29995, "cell-0.3")
+    assert c.get("fp", 2, 0.30004) == "cell-0.3"
+    assert c.get("fp", 2, 0.3) == "cell-0.3"
+    # one full quantum away → distinct cells, no aliasing
+    assert quantize_eps(0.2999) == 0.2999
+    assert quantize_eps(0.3001) == 0.3001
+    assert c.get("fp", 2, 0.2999) is None
+    assert c.get("fp", 2, 0.3001) is None
+    # the snap never moves ε by more than half a quantum (+ float slack),
+    # and re-quantizing is a fixed point (grid values snap to themselves)
+    for e in (0.0, 0.00005, 0.00015, 0.123456, 0.29995, 0.5, 0.99995, 1.0):
+        q = quantize_eps(e)
+        assert abs(q - e) <= 0.5e-4 + 1e-12, e
+        assert quantize_eps(q) == q, e
+
+
+def test_engine_executes_quantized_eps_not_raw():
+    """Quantization must gate *execution*, not just the cache key: the
+    device call receives the snapped ε, so a cached answer and a computed
+    answer for the same cell can never disagree."""
+    g, idx, _ = _graph_and_index(n=50, deg=5.0, seed=6)
+    engine = MicroBatchEngine(idx, g, config=EngineConfig(
+        max_batch=4, flush_ms=5.0, warm_ahead=False))
+    seen = []
+    real_call = engine._device_call
+
+    def spy(fp, index, graph, mus, epss):
+        seen.append(np.asarray(epss).copy())
+        return real_call(fp, index, graph, mus, epss)
+
+    engine._device_call = spy
+
+    async def main():
+        async with engine:
+            a, b = await asyncio.gather(engine.query(2, 0.29995),
+                                        engine.query(2, 0.30004))
+            return a, b
+
+    a, b = asyncio.run(main())
+    # both straddling requests fold into ONE executed slot at exactly 0.3
+    assert engine.stats["deduped"] == 1
+    assert engine.stats["device_queries"] == 1
+    assert all(np.all(e == np.float32(0.3)) for e in seen)
+    ref = query(idx, g, 2, 0.3)
+    np.testing.assert_array_equal(a.labels, np.asarray(ref.labels))
+    np.testing.assert_array_equal(b.labels, np.asarray(ref.labels))
+
+
 def test_cache_fingerprint_invalidation():
     c = ResultCache(capacity=8)
     c.put("fp1", 2, 0.5, "a")

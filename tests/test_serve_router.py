@@ -1,15 +1,20 @@
 """Multi-index router stress tests: mixed-fingerprint traffic through one
 engine, dedup that never aliases across indexes, per-index cache
-partitions/invalidation, per-bucket failure isolation, and sweep-ahead
-warming of the (μ, ε) neighborhood."""
+partitions/invalidation, per-bucket failure isolation, sweep-ahead warming
+of the (μ, ε) neighborhood, and live-update integration (an update batch
+invalidates exactly the mutated index's partition and re-warms observed
+traffic post-swap; the old-or-new-never-a-mix hot-swap property itself is
+covered in tests/test_live_service.py)."""
 import asyncio
 
 import numpy as np
 import pytest
 
-from repro.core import build_index, compute_similarities, query, random_graph
-from repro.serve import (EngineConfig, IndexCatalog, MicroBatchEngine,
-                         PartitionedResultCache, neighborhood)
+from repro.core import (EdgeDelta, build_index, compute_similarities, query,
+                        random_graph)
+from repro.serve import (EngineConfig, IndexCatalog, LiveIndexService,
+                         MicroBatchEngine, PartitionedResultCache,
+                         neighborhood)
 
 
 def _graph_and_index(n=80, deg=6.0, seed=0):
@@ -269,6 +274,76 @@ def test_warming_disabled_pads_with_repeats():
             assert engine.stats["warmed"] == 0
             await engine.query(4, 0.5)           # neighbor NOT prewarmed
             assert engine.stats["device_queries"] == 2
+
+    asyncio.run(main())
+
+
+# --------------------------------------------------------------------------
+# live updates through the router
+# --------------------------------------------------------------------------
+def test_update_invalidates_only_mutated_index_partition(tmp_path):
+    """An update batch against index A must drop exactly A's cache
+    partition: B's partition keeps its entries and hit counters, while A
+    re-answers from the *new* index (never the stale cache)."""
+    svc = LiveIndexService(str(tmp_path), config=EngineConfig(
+        max_batch=8, flush_ms=5.0, warm_ahead=False))
+    svc.create("a", random_graph(60, 6.0, seed=1, weighted=True))
+    svc.create("b", random_graph(60, 6.0, seed=2, weighted=True))
+    fp_b = svc.fingerprint("b")
+
+    async def main():
+        async with svc:
+            await svc.query("a", 2, 0.5)
+            await svc.query("b", 2, 0.5)
+            part_b = svc.engine.cache.partition(fp_b)
+            hits_b0 = part_b.hits
+
+            old_fp_a = svc.fingerprint("a")
+            await svc.apply("a", EdgeDelta.make(
+                inserts=[(0, 30), (1, 40)], weights=[0.9, 0.8]))
+            new_fp_a = svc.fingerprint("a")
+            assert new_fp_a != old_fp_a
+            # A's old partition is gone with its fingerprint
+            assert old_fp_a not in svc.engine.fingerprints()
+            assert svc.engine.cache.peek(old_fp_a, 2, 0.5) is None
+
+            # B survives untouched: same partition object, a real hit
+            assert svc.engine.cache.partition(fp_b) is part_b
+            await svc.query("b", 2, 0.5)
+            assert part_b.hits == hits_b0 + 1
+
+            # A's answer now comes from the new index
+            out = await svc.query("a", 2, 0.5)
+            live = svc._live["a"]
+            ref = query(live.index, live.g, 2, 0.5)
+            np.testing.assert_array_equal(out.labels, np.asarray(ref.labels))
+
+    asyncio.run(main())
+
+
+def test_observed_neighborhood_rewarmed_after_swap(tmp_path):
+    """Post-swap, the service re-issues recently observed settings, whose
+    padding-slot warming re-warms the (μ±1, ε±δ) neighborhood — so a
+    grid-walking client's next step is a cache hit on the NEW index."""
+    svc = LiveIndexService(str(tmp_path), config=EngineConfig(
+        max_batch=8, flush_ms=5.0, warm_ahead=True, warm_eps_step=0.05))
+    svc.create("a", random_graph(70, 6.0, seed=3, weighted=True))
+
+    async def main():
+        async with svc:
+            await svc.query("a", 3, 0.5)
+            await svc.apply("a", EdgeDelta.make(
+                inserts=[(0, 35), (2, 44)], weights=[0.7, 0.6]))
+            calls = svc.engine.stats["device_queries"]
+            live = svc._live["a"]
+            # the observed setting and its whole neighborhood are warm
+            for mu, eps in ((3, 0.5), (4, 0.5), (2, 0.5),
+                            (3, 0.55), (3, 0.45)):
+                out = await svc.query("a", mu, eps)
+                ref = query(live.index, live.g, mu, eps)
+                np.testing.assert_array_equal(out.labels,
+                                              np.asarray(ref.labels))
+            assert svc.engine.stats["device_queries"] == calls
 
     asyncio.run(main())
 
