@@ -1,15 +1,38 @@
 """Paper Figure 5 — index construction time (exact similarities).
 
-Reports seconds and edges/sec for cosine and jaccard on each suite graph,
-plus the similarity-pass / order-pass split (the paper's two phases).
+Two sections:
+
+* the uniform suite (fig5 continuity): seconds and edges/sec for cosine
+  and jaccard on each suite graph, plus the similarity-pass / order-pass
+  split (the paper's two phases) — all on the degree-bucketed engine;
+* the skewed suite: bucketed vs the legacy dense-padded layout on
+  power-law / hub-ring graphs, where one hub used to inflate the dense
+  operand to O(n·Δ). Rows report the similarity-pass and end-to-end
+  construction speedups and the peak similarity-operand-memory ratio.
+
+Every run also snapshots its rows to ``BENCH_construction.json`` at the
+repo root — the construction perf trajectory that CI uploads per commit
+(same pattern as the serve/update artifacts).
 """
 from __future__ import annotations
 
+import json
+import pathlib
+import time
+
+import numpy as np
+
 from repro.core import build_index, compute_similarities
-from benchmarks.common import GRAPHS, load_graph, timeit, emit
+from repro.core.similarity import (compute_similarities_densepad,
+                                   densepad_operand_bytes, plan_for)
+from benchmarks.common import (GRAPHS, SKEWED_GRAPHS, load_graph, timeit,
+                               emit)
+
+SNAPSHOT = pathlib.Path(__file__).resolve().parents[1] / \
+    "BENCH_construction.json"
 
 
-def run():
+def _uniform_rows():
     lines = []
     for gname in GRAPHS:
         g = load_graph(gname)
@@ -24,4 +47,57 @@ def run():
                 f"fig5/index_construction/{gname}/{measure}", t_full,
                 f"edges_per_s={eps:.0f};sim_pass_s={t_sim:.3f};"
                 f"order_pass_s={t_idx:.3f};m={g.m}"))
+    return lines
+
+
+def _skew_rows():
+    """Bucketed vs dense-padded on skewed graphs (cosine; jaccard runs the
+    same kernels with different epilogue math)."""
+    lines = []
+    for gname in SKEWED_GRAPHS:
+        g = load_graph(gname)
+        plan = plan_for(g)
+        mem_bucket = plan.operand_bytes()
+        mem_dense = densepad_operand_bytes(g)
+        t_bucket = timeit(lambda: compute_similarities(g, "cosine"),
+                          trials=2)
+        t_dense = timeit(lambda: compute_similarities_densepad(g, "cosine"),
+                         trials=2)
+        sims = compute_similarities(g, "cosine")
+        t_order = timeit(lambda: build_index(g, "cosine", sims=sims),
+                         trials=2)
+        t_build = timeit(lambda: build_index(g, "cosine"), trials=2)
+        speedup_sim = t_dense / t_bucket
+        speedup_build = (t_dense + t_order) / t_build
+        max_deg = int(np.asarray(g.degrees()).max())
+        lines.append(emit(
+            f"fig5/skew_construction/{gname}/cosine", t_build,
+            f"m={g.m};max_deg={max_deg};"
+            f"sim_bucketed_s={t_bucket:.3f};sim_densepad_s={t_dense:.3f};"
+            f"sim_speedup={speedup_sim:.2f}x;"
+            f"construction_speedup={speedup_build:.2f}x;"
+            f"mem_bucketed_bytes={mem_bucket};mem_densepad_bytes={mem_dense};"
+            f"mem_ratio={mem_dense / mem_bucket:.1f}x"))
+    return lines
+
+
+def _write_snapshot(lines):
+    from benchmarks.run import _parse_line
+
+    payload = {
+        "meta": {
+            "bench": "index_construction",
+            "unix_time": int(time.time()),
+            "graphs": {**{k: dict(v) for k, v in GRAPHS.items()},
+                       **{k: dict(v) for k, v in SKEWED_GRAPHS.items()}},
+        },
+        "rows": [_parse_line(ln) for ln in lines],
+    }
+    SNAPSHOT.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {len(lines)} rows to {SNAPSHOT}", flush=True)
+
+
+def run():
+    lines = _uniform_rows() + _skew_rows()
+    _write_snapshot(lines)
     return lines

@@ -3,15 +3,21 @@ from repro.core.graph import (
     CSRGraph,
     from_edge_list,
     graph_from_dense,
+    hub_ring_graph,
+    power_law_graph,
     random_graph,
     to_dense,
 )
 from repro.core.similarity import (
+    SimilarityPlan,
     compute_similarities,
     compute_similarities_dense,
+    compute_similarities_densepad,
     edge_similarities_subset,
+    plan_for,
+    triangle_counts,
 )
-from repro.core.index import ScanIndex, build_index, get_cores
+from repro.core.index import ScanIndex, build_index, co_core_prefix, get_cores
 from repro.core.query import ClusterResult, query, query_batch, hubs_outliers
 from repro.core.lsh import (
     approximate_similarities,

@@ -2,12 +2,15 @@
 
 The paper targets one shared-memory node. At pod scale the natural
 decomposition keeps the similarity pass *edge-parallel*: half-edges are
-sharded across the ``data`` axis of the mesh with ``shard_map``; the padded
-neighbor matrix (or, for dense graphs, the packed LSH sketches — 32× smaller)
-is replicated/all-gathered. The LSH sketches double as a *communication
-compressor*: a k-bit sketch per vertex replaces the full neighbor row, which
-is exactly the paper's "LSH wins on dense graphs" insight re-applied to the
-network instead of the cache.
+sharded across the ``data`` axis of the mesh with ``shard_map``; the
+degree-bucketed neighbor blocks (or, for dense graphs, the packed LSH
+sketches — 32× smaller) are replicated/all-gathered. Bucketing shrinks the
+replicated operand from the old O(n·Δ) dense padded matrix to O(m + n)
+class blocks — on skewed graphs that is the difference between replicating
+gigabytes and megabytes per device. The LSH sketches double as a further
+*communication compressor*: a k-bit sketch per vertex replaces the full
+neighbor row, which is exactly the paper's "LSH wins on dense graphs"
+insight re-applied to the network instead of the cache.
 
 The global sorts for NO/CO lower to XLA's distributed sort under pjit.
 """
@@ -28,35 +31,94 @@ from repro.core.graph import CSRGraph
 from repro.core import lsh as lsh_mod
 
 
+@functools.partial(
+    jax.jit, static_argnames=("sp", "st", "measure", "mesh", "axis"))
+def _sharded_bucket_group(p0, pt, t0, tt, eu, ev, ew,
+                          p_nbr, p_wgt, t_nbr, t_wgt, norms, cdeg,
+                          *, sp, st, measure, mesh, axis):
+    from repro.core.similarity import _bucket_sims_core
+
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(axis),) * 7 + (P(None, None),) * 4 + (P(None), P(None)),
+        out_specs=P(axis),
+        check_rep=False,
+    )
+    def _shard(p0, pt, t0, tt, eu, ev, ew, p_n, p_w, t_n, t_w, nrm, cd):
+        return _bucket_sims_core(p0, pt, t0, tt, eu, ev, ew,
+                                 p_n, p_w, t_n, t_w, nrm, cd,
+                                 sp, st, measure)
+
+    return _shard(p0, pt, t0, tt, eu, ev, ew,
+                  p_nbr, p_wgt, t_nbr, t_wgt, norms, cdeg)
+
+
 def sharded_edge_similarities(
     g: CSRGraph,
-    nbr_mat: jax.Array,
-    wgt_mat: jax.Array,
-    norms: jax.Array,
-    mesh: Mesh,
+    plan=None,
+    mesh: Mesh | None = None,
     axis: str = "data",
     measure: str = "cosine",
 ) -> jax.Array:
     """σ per half-edge with the edge axis sharded over ``axis``.
 
-    Edge arrays must be padded to a multiple of the axis size by the caller
-    (pad with edge (0,0) — results for padding are discarded).
+    Degree-bucketed twin of :func:`repro.core.similarity.compute_similarities`:
+    edges are routed host-side to (probe class, target class) groups, each
+    group is padded to a multiple of the axis size and runs as one
+    ``shard_map`` over its sharded edge chunk, with the two class blocks
+    (O(m + n) total, not the old O(n·Δ) padded matrix) replicated.
     """
-    cdeg = g.closed_degrees()
+    from repro.core import similarity as sim_mod
 
-    @functools.partial(
-        shard_map,
-        mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(None, None), P(None, None), P(None), P(None)),
-        out_specs=P(axis),
-        check_rep=False,
-    )
-    def _shard(eu, ev, ew, nbr_m, wgt_m, nrm, cd):
-        from repro.core.similarity import _edge_sims_chunk
+    if plan is None:
+        plan = sim_mod.plan_for(g)
+    if mesh is None:
+        mesh = query_mesh(axis=axis)
+    k = mesh.shape[axis]
+    eu = np.asarray(g.edge_u, np.int64)
+    ev = np.asarray(g.nbrs, np.int64)
+    ew = np.asarray(g.wgts, np.float32)
+    if g.m2 == 0:
+        return jnp.zeros((0,), jnp.float32)
 
-        return _edge_sims_chunk(eu, ev, ew, nbr_m, wgt_m, nrm, cd, measure)
-
-    return _shard(g.edge_u, g.nbrs, g.wgts, nbr_mat, wgt_mat, norms, cdeg)
+    pu, pv, keys = plan.route(eu, ev)
+    order = np.argsort(keys, kind="stable")
+    bounds = np.flatnonzero(np.diff(keys[order])) + 1
+    out = np.empty(g.m2, np.float32)
+    for idx in np.split(order, bounds):
+        cp = int(plan.vclass[pu[idx[0]]])
+        ct = int(plan.vclass[pv[idx[0]]])
+        sp = sim_mod._pow2ceil(int(plan.vtiles[pu[idx[0]]]))
+        st = sim_mod._pow2ceil(int(plan.vtiles[pv[idx[0]]]))
+        # same transient-working-set bound as the local engine, rounded up
+        # to a k-multiple pow2-bucketed chunk so hub groups stream instead
+        # of gathering one unbounded row matrix per device, and so repeated
+        # graphs hit the same compiled shard_map shapes
+        pe = sp * plan.widths[cp]
+        te = st * plan.widths[ct]
+        cap = max(sim_mod.CHUNK_ELEMS // max(pe + te, 1), 1)
+        cap = 1 << (cap.bit_length() - 1)
+        csize = -(-min(sim_mod._pow2_bucket(len(idx)), max(cap, 1)) // k) * k
+        sent_p = plan.nbr_blocks[cp].shape[0] - 1
+        sent_t = plan.nbr_blocks[ct].shape[0] - 1
+        for s in range(0, len(idx), csize):
+            sub = idx[s: s + csize]
+            pad = csize - len(sub)
+            res = _sharded_bucket_group(
+                jnp.asarray(sim_mod._pad1(plan.vrow[pu[sub]], pad, sent_p)),
+                jnp.asarray(sim_mod._pad1(plan.vtiles[pu[sub]], pad, 0)),
+                jnp.asarray(sim_mod._pad1(plan.vrow[pv[sub]], pad, sent_t)),
+                jnp.asarray(sim_mod._pad1(plan.vtiles[pv[sub]], pad, 0)),
+                jnp.asarray(sim_mod._pad1(eu[sub].astype(np.int32), pad, 0)),
+                jnp.asarray(sim_mod._pad1(ev[sub].astype(np.int32), pad, 0)),
+                jnp.asarray(sim_mod._pad1(ew[sub], pad, 0.0)),
+                plan.nbr_blocks[cp], plan.wgt_blocks[cp],
+                plan.nbr_blocks[ct], plan.wgt_blocks[ct],
+                plan.norms, plan.cdeg,
+                sp=sp, st=st, measure=measure, mesh=mesh, axis=axis)
+            out[sub] = np.asarray(res)[: len(sub)]
+    return jnp.asarray(out)
 
 
 def sharded_simhash_edge_similarities(

@@ -161,6 +161,65 @@ def random_graph(
     return from_edge_list(n, e, w)
 
 
+def power_law_graph(
+    n: int,
+    alpha: float = 2.1,
+    *,
+    avg_degree: float = 8.0,
+    seed: int = 0,
+    weighted: bool = False,
+    hub_degree: int = 0,
+) -> CSRGraph:
+    """Chung–Lu-style power-law graph (host-side numpy).
+
+    Vertex attachment weights follow w_i ∝ (i+1)^(-1/(α-1)) — the expected
+    degree sequence of a power-law graph with exponent α — and edge
+    endpoints are drawn ∝ w. ``hub_degree > 0`` additionally wires vertex 0
+    to that many distinct random vertices, forcing one hub with
+    deg ≫ median (the skew case the degree-bucketed similarity engine
+    exists for; a dense-padded layout would pay O(n·hub_degree)).
+    """
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    w = ranks ** (-1.0 / (alpha - 1.0))
+    p = w / w.sum()
+    target_m = int(n * avg_degree / 2)
+    u = rng.choice(n, size=3 * target_m, p=p)
+    v = rng.choice(n, size=3 * target_m, p=p)
+    e = np.stack([u, v], axis=1)
+    e = e[e[:, 0] != e[:, 1]][: 2 * target_m]
+    if hub_degree > 0:
+        others = rng.permutation(np.arange(1, n))[: min(hub_degree, n - 1)]
+        hub_e = np.stack([np.zeros(len(others), np.int64), others], axis=1)
+        e = np.concatenate([e, hub_e])
+    wgt = (rng.uniform(0.1, 1.0, size=len(e)).astype(np.float32)
+           if weighted else None)
+    return from_edge_list(n, e, wgt)
+
+
+def hub_ring_graph(
+    n: int,
+    hub_degree: int,
+    *,
+    seed: int = 0,
+    weighted: bool = False,
+) -> CSRGraph:
+    """Star-with-ring: vertex 0 is a hub wired to ``hub_degree`` spokes,
+    all other vertices form a ring (so every non-hub degree is 2–3 while
+    the hub dominates — the adversarial case for any global-width padded
+    layout: Δ = hub_degree, median degree ≈ 2).
+    """
+    rng = np.random.default_rng(seed)
+    ring = np.stack([np.arange(1, n), np.concatenate(
+        [np.arange(2, n), [1]])], axis=1)
+    spokes = rng.permutation(np.arange(1, n))[: min(hub_degree, n - 1)]
+    star = np.stack([np.zeros(len(spokes), np.int64), spokes], axis=1)
+    e = np.concatenate([ring, star])
+    w = (rng.uniform(0.1, 1.0, size=len(e)).astype(np.float32)
+         if weighted else None)
+    return from_edge_list(n, e, w)
+
+
 def graph_from_dense(a: np.ndarray, weighted: bool = True) -> CSRGraph:
     """Build from a dense symmetric adjacency (testing convenience)."""
     a = np.asarray(a)

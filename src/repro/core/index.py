@@ -21,7 +21,7 @@ around jit-compiled kernels; every array op is a bulk-parallel primitive
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -150,24 +150,52 @@ def build_index(
     )
 
 
-def get_cores(index: ScanIndex, mu: int, eps: float) -> jax.Array:
-    """bool[n] core mask via the CO[μ] prefix (paper Algorithm 3).
+def co_core_prefix(index: ScanIndex, mu, eps) -> Tuple[jax.Array, jax.Array]:
+    """(lo, end): the CO[μ] slot range [lo, end) holding every core for
+    (μ, ε), found in **O(log m)** per query.
 
-    CO[μ] is θ-descending, so cores are the prefix with θ ≥ ε — located with
-    binary search (the vectorized stand-in for the paper's doubling search).
+    The CO slot arrays are globally sorted by the packed key (μ asc,
+    −θ asc, v asc); ``co_offsets`` resolves the μ component exactly, so the
+    prefix boundary is a searchsorted for −ε over the −θ component inside
+    [lo, hi) — implemented as a branchless traced-bound binary search
+    (``jnp.searchsorted`` cannot take traced slice bounds). This replaces
+    the old masked arange-argmax, which scanned all m2 CO slots per query.
     """
     mu = jnp.asarray(mu, jnp.int32)
     eps = jnp.asarray(eps, jnp.float32)
-    lo = index.co_offsets[jnp.clip(mu, 0, index.max_cdeg)]
-    hi = index.co_offsets[jnp.clip(mu + 1, 0, index.max_cdeg + 1)]
-    # prefix end = first position in [lo, hi) with θ < ε (θ descending).
-    # Traced segment bounds preclude jnp.searchsorted on a slice; the masked
-    # argmax below is the same O(log)-span binary-search stand-in.
+    lo = index.co_offsets[jnp.clip(mu, 0, index.max_cdeg)].astype(jnp.int32)
+    hi = index.co_offsets[jnp.clip(mu + 1, 0, index.max_cdeg + 1)].astype(
+        jnp.int32)
+    m_co = index.co_theta.shape[0]
+    if m_co == 0:                       # edgeless graph: CO is empty
+        return lo, lo
+
+    def body(_, lohi):
+        lo_, hi_ = lohi
+        mid = (lo_ + hi_) // 2
+        theta = index.co_theta[jnp.clip(mid, 0, max(m_co - 1, 0))]
+        keep_hi = (mid < hi_) & (theta >= eps)     # mid in the θ ≥ ε prefix
+        return (jnp.where(keep_hi, mid + 1, lo_), jnp.where(keep_hi, hi_, mid))
+
+    steps = max(int(m_co).bit_length(), 1)
+    lo_f, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    return lo, lo_f
+
+
+def get_cores(index: ScanIndex, mu: int, eps: float) -> jax.Array:
+    """bool[n] core mask via the CO[μ] prefix (paper Algorithm 3).
+
+    CO[μ] is θ-descending, so cores are the prefix with θ ≥ ε — the
+    boundary comes from :func:`co_core_prefix`'s O(log m) packed-key
+    search; scattering the prefix slots to a vertex mask is O(m2)
+    elementwise work with no reductions (the old path burned three full
+    masked reductions — any/argmax — per query, per vmap lane).
+    """
+    mu = jnp.asarray(mu, jnp.int32)
+    eps = jnp.asarray(eps, jnp.float32)
+    lo, first_below = co_core_prefix(index, mu, eps)
     idx = jnp.arange(index.co_vertex.shape[0], dtype=jnp.int32)
-    in_seg = (idx >= lo) & (idx < hi)
-    below = in_seg & (index.co_theta < eps)
-    first_below = jnp.where(jnp.any(below), jnp.argmax(below), hi)
-    core_slots = in_seg & (idx < first_below)
+    core_slots = (idx >= lo) & (idx < first_below)
     mask = (
         jnp.zeros((index.n,), jnp.int32)
         .at[index.co_vertex]

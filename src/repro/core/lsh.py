@@ -19,7 +19,11 @@
 
 Degree heuristic (§6.3): approximate only edges whose *both* endpoints have
 closed degree above a threshold (k for cosine, 3k/2 for Jaccard); all other
-edges get exact similarities, computed only on that compacted subset.
+edges get exact similarities, computed only on that compacted subset via
+the degree-bucketed engine (:class:`repro.core.similarity.SimilarityPlan`).
+The heuristic and the bucketed layout compose naturally: every exact edge
+has a low-degree endpoint, so its probe routes to a small degree class —
+the exact pass never touches a hub-width kernel.
 """
 from __future__ import annotations
 
@@ -186,19 +190,20 @@ def approximate_similarities(
         return jnp.clip(approx, 0.0, 1.0)
 
     # §6.3: exact σ for edges where either endpoint is low-degree; the exact
-    # pass runs only on the compacted subset (real work saving, not a mask).
+    # pass runs only on the compacted subset (real work saving, not a mask)
+    # through the bucketed plan — each exact edge probes its low-degree side,
+    # so the subset routes to the small degree-class kernels only.
     cdeg = np.asarray(g.closed_degrees())
     eu_h, ev_h = np.asarray(g.edge_u), np.asarray(g.nbrs)
     high = cdeg > thr
     use_exact = ~(high[eu_h] & high[ev_h])
     idx = np.nonzero(use_exact)[0]
     if len(idx) == 0:
-        return jnp.clip(approx, 0.0, 1.0)
-    exact_subset = sim_mod.edge_similarities_subset(
-        g,
-        jnp.asarray(eu_h[idx]),
-        jnp.asarray(ev_h[idx]),
-        jnp.asarray(np.asarray(g.wgts)[idx]),
+        return jnp.clip(approx, 0.0, 1.0)   # pure-LSH path: no plan needed
+    exact_subset = sim_mod.plan_for(g).edge_sims(
+        eu_h[idx],
+        ev_h[idx],
+        np.asarray(g.wgts)[idx],
         measure=measure,
     )
     out = np.asarray(approx, dtype=np.float32).copy()

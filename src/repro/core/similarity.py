@@ -1,17 +1,69 @@
 """Exact structural-similarity computation (paper §4.1.1, Algorithm 1).
 
-σ(u,v) is computed for every half-edge. Two execution paths:
+σ(u,v) is computed for every half-edge by a **degree-bucketed similarity
+engine**. Real-world graphs are power-law: one hub vertex used to inflate
+the single dense ``[n, Δ]`` padded neighbor matrix to O(n·Δ) memory and
+every edge probe to O(Δ) work. The bucketed layout kills that skew
+pathology (the GPUSCAN++ work-partitioning insight, applied to the padded
+operand layout):
 
-* ``compute_similarities`` — the production path: vectorized sorted-CSR
-  intersection. For each half-edge (u→v) we binary-search u's (padded)
-  neighbor row inside v's row. This is the TPU-native analogue of the
-  paper's merge-based triangle counting (§6.1): sorted-array probes instead
-  of hash probes, fully data-parallel, chunked so the working set is bounded.
+* **Degree classes** — vertices are partitioned into power-of-two
+  *open-degree* classes (widths 8, 16, 32, …, capped at ``HUB_TILE``):
+  the class width is the padded width of the vertex's open neighbor row,
+  the operand the probe kernels actually scan (closed-neighborhood terms
+  are added analytically in the epilogue). Each class materializes one
+  fixed-shape padded block ``[K_c, w_c]`` whose row width is the *class*
+  width, not the global max. Total operand memory is
+  Σ_v pow2(deg v) ≤ 2·m2 + n·``BUCKET_FLOOR`` = **O(m + n)**.
 
+* **Hub-row splitting** — a vertex wider than ``HUB_TILE`` (the storage
+  tile width) occupies ⌈deg/``HUB_TILE``⌉ consecutive *tile rows* of the
+  top block instead of forcing one giant row: a degree-10⁶ hub streams
+  through the engine in 2048-wide tiles. Tiles are contiguous slices of
+  the sorted neighbor row, so a per-chunk gather + reshape reassembles a
+  sorted full-width row transiently (bounded by the chunk budget), never
+  as a persistent giant block.
+
+* **Edge routing** — each edge probes its **min-degree side** into its
+  max-degree side: the probe row (width = the smaller class) is binary
+  searched inside the target row (sorted ascending). Edges are grouped by
+  (probe class, target class, tile counts) and each group runs through one
+  fixed-shape jit kernel, so total similarity work is
+  O(Σ_e min-side-degree · log max-side-degree). Kernel shapes are pure
+  powers of two — the jit cache is shared across graphs, construction,
+  the LSH exact-edge pass, and every incremental ``apply_delta`` batch.
+
+* **σ bit-stability** — σ(u,v) depends only on the two endpoint rows,
+  their class widths/tile counts, the endpoint norms and closed degrees.
+  All of those are local: an edit batch perturbs them exactly for edges
+  with a touched endpoint, so the incremental-update path
+  (:mod:`repro.core.update`) carries every other σ bit-for-bit with *no*
+  global-width fallback (the old "padded width changed → full re-sim"
+  escape hatch is gone; only the affected degree classes re-run).
+
+Entry points:
+
+* ``compute_similarities`` — σ for every half-edge (production path).
+* ``edge_similarities_subset`` — σ for an arbitrary edge subset (the §6.3
+  degree-heuristic exact pass under LSH, and the incremental-update
+  frontier recompute). Group chunks are padded to power-of-two shapes so
+  repeated calls reuse one compiled kernel per (class pair).
+* ``SimilarityPlan`` — the bucketed operands for one graph (blocks, vertex
+  routing tables, norms); build once via :func:`plan_for` and reuse.
 * ``compute_similarities_dense`` — small-graph oracle: σ from the closed
-  weighted adjacency product (W̄·W̄ᵀ) gathered at edges. The Pallas triangle
-  kernel (repro.kernels.triangle_count) reproduces this product with blocked
-  MXU tiles; its ``ref.py`` delegates here.
+  weighted adjacency product (W̄·W̄ᵀ) gathered at edges. The Pallas
+  triangle kernel (repro.kernels.triangle_count) reproduces this product
+  with blocked MXU tiles. For *unweighted* graphs every intermediate is a
+  small integer, exact in float32 under any reduction order, so the
+  bucketed engine is **bit-identical** to this oracle; weighted sums are
+  order-sensitive at the ULP level (asserted in tests).
+* ``compute_similarities_densepad`` — the legacy O(n·Δ) dense-padded path,
+  kept as the benchmark baseline (``benchmarks/bench_index_construction``
+  measures bucketed vs dense-padded on skewed graphs).
+
+On TPU the heaviest groups can dispatch to the Pallas sorted-probe kernel
+(:mod:`repro.kernels.bucket_probe`, the masked-gram pattern extended with
+target-tile streaming); the jnp path below is the CPU/reference engine.
 
 Supported measures (paper §2.1/§4.1.1):
   * ``cosine``  — weighted cosine over closed neighborhoods (w(x,x)=1);
@@ -20,8 +72,10 @@ Supported measures (paper §2.1/§4.1.1):
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Tuple
+import weakref
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,85 +85,21 @@ from repro.core.graph import CSRGraph, to_dense
 
 MEASURES = ("cosine", "jaccard")
 
+# smallest degree-class width: classes are 8, 16, 32, … (pow2)
+BUCKET_FLOOR = 8
+# storage tile width: rows wider than this split into HUB_TILE-wide tiles
+HUB_TILE = 2048
+# per-chunk element budget for the transient gathered row matrices
+CHUNK_ELEMS = 1 << 22
 
+# legacy dense-padded quantum (kept for the benchmark baseline path)
 PAD_WIDTH_QUANTUM = 8
 
 
-def padded_width(g: CSRGraph) -> int:
-    """Static padded row width M for :func:`padded_neighbors`.
-
-    M is the max open degree rounded up to a multiple of
-    ``PAD_WIDTH_QUANTUM``. The rounding keeps M (and therefore every
-    compiled similarity kernel *and* every σ bit pattern, which depends on
-    the reduction width) stable under small degree changes — the property
-    the incremental-update path (:mod:`repro.core.update`) relies on to
-    carry σ values over unchanged edges bit-identically.
-    """
-    deg = np.asarray(g.degrees())
-    m = int(deg.max()) if len(deg) else 1
-    m = max(m, 1)
-    return -(-m // PAD_WIDTH_QUANTUM) * PAD_WIDTH_QUANTUM
-
-
-def padded_neighbors(g: CSRGraph) -> Tuple[jax.Array, jax.Array, int]:
-    """Dense padded (nbr_mat[n, M], wgt_mat[n, M], M). Pad id = n (sorts last).
-
-    Host-side helper (concrete offsets required to derive the static M);
-    fully vectorized — one scatter per matrix, no per-vertex loop.
-    """
-    m = padded_width(g)
-    offsets = np.asarray(g.offsets)
-    nbr_mat = np.full((g.n, m), g.n, dtype=np.int32)
-    wgt_mat = np.zeros((g.n, m), dtype=np.float32)
-    if g.m2:
-        eu = np.asarray(g.edge_u)
-        pos = np.arange(g.m2, dtype=np.int64) - offsets[eu]
-        nbr_mat[eu, pos] = np.asarray(g.nbrs)
-        wgt_mat[eu, pos] = np.asarray(g.wgts)
-    return jnp.asarray(nbr_mat), jnp.asarray(wgt_mat), m
-
-
-def closed_norms(g: CSRGraph) -> jax.Array:
-    """sqrt(Σ_{x∈N̄(v)} w(v,x)²) with w(v,v)=1, float32[n]."""
-    sq = jax.ops.segment_sum(g.wgts**2, g.edge_u, num_segments=g.n)
-    return jnp.sqrt(sq + 1.0)
-
-
-@functools.partial(jax.jit, static_argnames=("measure",))
-def _edge_sims_chunk(
-    eu: jax.Array,        # int32[c] chunk of half-edge sources
-    ev: jax.Array,        # int32[c] chunk of half-edge targets
-    ew: jax.Array,        # float32[c] chunk of half-edge weights
-    nbr_mat: jax.Array,   # int32[n, M]
-    wgt_mat: jax.Array,   # float32[n, M]
-    norms: jax.Array,     # float32[n]
-    cdeg: jax.Array,      # int32[n] closed degrees
-    measure: str,
-) -> jax.Array:
-    """σ for one chunk of half-edges via vectorized binary search."""
-    rows_u = nbr_mat[eu]                      # [c, M] probe row
-    w_u = wgt_mat[eu]                         # [c, M]
-    rows_v = nbr_mat[ev]                      # [c, M] target row (sorted)
-    w_v = wgt_mat[ev]                         # [c, M]
-
-    # position of each of u's neighbors inside v's sorted row
-    pos = jax.vmap(jnp.searchsorted)(rows_v, rows_u)       # [c, M]
-    pos_c = jnp.minimum(pos, rows_v.shape[1] - 1)
-    hit = jnp.take_along_axis(rows_v, pos_c, axis=1) == rows_u
-    hit &= rows_u < nbr_mat.shape[0]                        # mask row padding
-    w_match = jnp.take_along_axis(w_v, pos_c, axis=1)
-    shared_dot = jnp.sum(jnp.where(hit, w_u * w_match, 0.0), axis=1)
-    shared_cnt = jnp.sum(hit, axis=1)
-
-    if measure == "cosine":
-        # closed-neighborhood dot: open shared dot + x=u and x=v terms
-        closed_dot = shared_dot + 2.0 * ew
-        return closed_dot / (norms[eu] * norms[ev])
-    elif measure == "jaccard":
-        c = shared_cnt.astype(jnp.float32) + 2.0            # + {u, v}
-        union = cdeg[eu].astype(jnp.float32) + cdeg[ev].astype(jnp.float32) - c
-        return c / union
-    raise ValueError(f"unknown measure {measure!r}")
+def _pow2ceil(x: int, floor: int = 1) -> int:
+    """Smallest power of two ≥ max(x, floor)."""
+    v = max(int(x), floor, 1)
+    return 1 << (v - 1).bit_length()
 
 
 def _pow2_bucket(total: int, floor: int = 64) -> int:
@@ -121,6 +111,293 @@ def _pow2_bucket(total: int, floor: int = 64) -> int:
     return b
 
 
+def closed_norms(g: CSRGraph) -> jax.Array:
+    """sqrt(Σ_{x∈N̄(v)} w(v,x)²) with w(v,v)=1, float32[n]."""
+    sq = jax.ops.segment_sum(g.wgts**2, g.edge_u, num_segments=g.n)
+    return jnp.sqrt(sq + 1.0)
+
+
+# ---------------------------------------------------------------------------
+# degree-bucketed plan
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SimilarityPlan:
+    """Bucketed similarity operands for one graph.
+
+    Per degree class ``c``: a padded block ``nbr_blocks[c]`` int32[K_c, w_c]
+    / ``wgt_blocks[c]`` float32[K_c, w_c] whose rows are `HUB_TILE`-capped
+    tiles of sorted open-neighbor rows (pad id = n, sorts last; the final
+    block row is an all-pad sentinel and K_c is rounded up to a power of
+    two so block shapes — and therefore compiled kernels — are stable
+    under small graph edits). Vertex routing tables (host numpy):
+    ``vclass`` (class id), ``vrow`` (first tile row), ``vtiles`` (tile
+    count; 1 unless the vertex is a hub).
+    """
+
+    n: int
+    m2: int
+    hub_tile: int
+    widths: Tuple[int, ...]
+    nbr_blocks: Tuple[jax.Array, ...]
+    wgt_blocks: Tuple[jax.Array, ...]
+    vclass: np.ndarray   # int32[n]
+    vrow: np.ndarray     # int32[n]
+    vtiles: np.ndarray   # int32[n]
+    deg: np.ndarray      # int64[n] open degrees (host routing key)
+    norms: jax.Array     # float32[n]
+    cdeg: jax.Array      # int32[n]
+    # observability: kernel groups the most recent edge_sims call routed to
+    # (stat slot, not identity; written via object.__setattr__)
+    last_groups: int = 0
+
+    # -- construction -------------------------------------------------------
+    @staticmethod
+    def build(g: CSRGraph, hub_tile: int = HUB_TILE) -> "SimilarityPlan":
+        deg = np.diff(np.asarray(g.offsets)).astype(np.int64)
+        n = g.n
+        w_full = np.ones(max(n, 1), dtype=np.int64)
+        if n:
+            w_full = 1 << np.ceil(
+                np.log2(np.maximum(deg, 1))).astype(np.int64)
+            w_full = np.maximum(w_full, BUCKET_FLOOR)
+        w_cap = np.minimum(w_full, hub_tile)
+        vtiles = np.where(w_full > hub_tile,
+                          -(-deg // hub_tile), 1).astype(np.int32)
+
+        widths = tuple(int(w) for w in np.unique(w_cap[:n])) if n else ()
+        cls_of_width = {w: i for i, w in enumerate(widths)}
+        vclass = np.array([cls_of_width[w] for w in w_cap[:n]],
+                          dtype=np.int32) if n else np.zeros(0, np.int32)
+
+        offsets = np.asarray(g.offsets)
+        eu = np.asarray(g.edge_u) if g.m2 else np.zeros(0, np.int64)
+        nbrs = np.asarray(g.nbrs) if g.m2 else np.zeros(0, np.int32)
+        wgts = np.asarray(g.wgts) if g.m2 else np.zeros(0, np.float32)
+        pos = (np.arange(g.m2, dtype=np.int64) - offsets[eu]) if g.m2 \
+            else np.zeros(0, np.int64)
+
+        vrow = np.zeros(n, dtype=np.int32)
+        nbr_blocks: List[jax.Array] = []
+        wgt_blocks: List[jax.Array] = []
+        for ci, w in enumerate(widths):
+            members = np.flatnonzero(vclass == ci)
+            tiles = vtiles[members].astype(np.int64)
+            starts = np.concatenate([[0], np.cumsum(tiles)[:-1]])
+            vrow[members] = starts
+            k_rows = int(tiles.sum())
+            # sentinel pad row at the end; round rows to pow2 for jit-cache
+            # stability across incremental graph edits
+            k_pad = _pow2ceil(k_rows + 1)
+            nb = np.full((k_pad, w), n, dtype=np.int32)
+            wb = np.zeros((k_pad, w), dtype=np.float32)
+            if g.m2:
+                sel = np.flatnonzero(vclass[eu] == ci)
+                if len(sel):
+                    p = pos[sel]
+                    r = vrow[eu[sel]] + (p // w)
+                    c = p % w
+                    nb[r, c] = nbrs[sel]
+                    wb[r, c] = wgts[sel]
+            nbr_blocks.append(jnp.asarray(nb))
+            wgt_blocks.append(jnp.asarray(wb))
+
+        return SimilarityPlan(
+            n=n, m2=g.m2, hub_tile=hub_tile, widths=widths,
+            nbr_blocks=tuple(nbr_blocks), wgt_blocks=tuple(wgt_blocks),
+            vclass=vclass, vrow=vrow, vtiles=vtiles, deg=deg,
+            norms=closed_norms(g), cdeg=g.closed_degrees())
+
+    # -- introspection ------------------------------------------------------
+    def operand_bytes(self) -> int:
+        """Persistent similarity-operand footprint (neighbor + weight
+        blocks + norms + closed degrees) in bytes — O(m + n)."""
+        total = sum(int(np.prod(b.shape)) * (4 + 4) for b in self.nbr_blocks)
+        return total + 8 * self.n
+
+    def route(self, eu: np.ndarray, ev: np.ndarray):
+        """Host-side routing: probe side (min (deg, id)) per edge and the
+        per-edge group key (probe class, probe tiles^, target class,
+        target tiles^). Returns (pu, pv, keys) with keys int64[m]."""
+        du, dv = self.deg[eu], self.deg[ev]
+        swap = (dv < du) | ((dv == du) & (ev < eu))
+        pu = np.where(swap, ev, eu)
+        pv = np.where(swap, eu, ev)
+        sp = _np_pow2ceil(self.vtiles[pu])
+        st = _np_pow2ceil(self.vtiles[pv])
+        keys = (((self.vclass[pu].astype(np.int64) * 64
+                  + _np_log2(sp)) * 64
+                 + self.vclass[pv]) * 64 + _np_log2(st))
+        return pu, pv, keys
+
+    def group_count(self, eu: np.ndarray, ev: np.ndarray) -> int:
+        """Number of distinct (class-pair, tile-shape) kernel groups an
+        edge subset routes to (observability for apply_delta)."""
+        if len(eu) == 0:
+            return 0
+        _, _, keys = self.route(np.asarray(eu, np.int64),
+                                np.asarray(ev, np.int64))
+        return len(np.unique(keys))
+
+    # -- the engine ---------------------------------------------------------
+    def edge_sims(
+        self,
+        eu,
+        ev,
+        ew,
+        measure: str = "cosine",
+        chunk: int = 1 << 16,
+    ) -> jax.Array:
+        """σ (or triangle counts with measure='_count') for an edge subset."""
+        if measure not in MEASURES + ("_count",):
+            raise ValueError(f"measure must be one of {MEASURES}")
+        eu = np.asarray(eu, dtype=np.int64)
+        ev = np.asarray(ev, dtype=np.int64)
+        ew = np.asarray(ew, dtype=np.float32)
+        total = len(eu)
+        out_dt = np.int32 if measure == "_count" else np.float32
+        if total == 0:
+            return jnp.zeros((0,), out_dt)
+
+        pu, pv, keys = self.route(eu, ev)
+        order = np.argsort(keys, kind="stable")
+        bounds = np.flatnonzero(np.diff(keys[order])) + 1
+        groups = np.split(order, bounds)
+        object.__setattr__(self, "last_groups", len(groups))
+
+        out = np.empty(total, out_dt)
+        for idx in groups:
+            cp = int(self.vclass[pu[idx[0]]])
+            ct = int(self.vclass[pv[idx[0]]])
+            sp = _pow2ceil(int(self.vtiles[pu[idx[0]]]))
+            st = _pow2ceil(int(self.vtiles[pv[idx[0]]]))
+            pe = sp * self.widths[cp]
+            te = st * self.widths[ct]
+            cap = max(CHUNK_ELEMS // max(pe + te, 1), 1)
+            cap = 1 << (cap.bit_length() - 1)
+            csize = min(_pow2_bucket(len(idx)), max(min(chunk, cap), 1))
+            sentinel_p = self.nbr_blocks[cp].shape[0] - 1
+            for s in range(0, len(idx), csize):
+                sub = idx[s: s + csize]
+                pad = csize - len(sub)
+                args = dict(
+                    p0=_pad1(self.vrow[pu[sub]], pad, sentinel_p),
+                    pt=_pad1(self.vtiles[pu[sub]], pad, 0),
+                    t0=_pad1(self.vrow[pv[sub]], pad,
+                             self.nbr_blocks[ct].shape[0] - 1),
+                    tt=_pad1(self.vtiles[pv[sub]], pad, 0),
+                    ceu=_pad1(eu[sub].astype(np.int32), pad, 0),
+                    cev=_pad1(ev[sub].astype(np.int32), pad, 0),
+                    cew=_pad1(ew[sub], pad, 0.0),
+                )
+                res = _bucket_sims_chunk(
+                    jnp.asarray(args["p0"]), jnp.asarray(args["pt"]),
+                    jnp.asarray(args["t0"]), jnp.asarray(args["tt"]),
+                    jnp.asarray(args["ceu"]), jnp.asarray(args["cev"]),
+                    jnp.asarray(args["cew"]),
+                    self.nbr_blocks[cp], self.wgt_blocks[cp],
+                    self.nbr_blocks[ct], self.wgt_blocks[ct],
+                    self.norms, self.cdeg,
+                    sp=sp, st=st, measure=measure)
+                out[sub] = np.asarray(res)[: len(sub)]
+        return jnp.asarray(out)
+
+
+def _np_pow2ceil(x: np.ndarray) -> np.ndarray:
+    x = np.maximum(np.asarray(x, np.int64), 1)
+    return 1 << np.ceil(np.log2(x)).astype(np.int64)
+
+
+def _np_log2(x: np.ndarray) -> np.ndarray:
+    return np.log2(np.asarray(x, np.int64)).astype(np.int64)
+
+
+def _pad1(a: np.ndarray, pad: int, fill) -> np.ndarray:
+    if pad == 0:
+        return a
+    return np.concatenate([a, np.full(pad, fill, dtype=a.dtype)])
+
+
+def _gather_tiled_rows(block_n, block_w, first, cnt, s: int):
+    """Reassemble [c, s·w] sorted rows from ``s`` consecutive tile rows per
+    entry (hub-row splitting: tiles beyond ``cnt`` map to the all-pad
+    sentinel row, which sorts last)."""
+    k_sent = block_n.shape[0] - 1
+    w = block_n.shape[1]
+    t = jnp.arange(s, dtype=jnp.int32)[None, :]
+    idx = jnp.where(t < cnt[:, None], first[:, None] + t, k_sent)
+    c = first.shape[0]
+    return (block_n[idx].reshape(c, s * w), block_w[idx].reshape(c, s * w))
+
+
+def _bucket_sims_core(p0, pt, t0, tt, eu, ev, ew,
+                      p_nbr, p_wgt, t_nbr, t_wgt, norms, cdeg,
+                      sp: int, st: int, measure: str):
+    """Sorted-probe body for one (probe class, target class) group chunk.
+
+    Shared between the jitted single-host kernel and the shard_map path in
+    :mod:`repro.core.distributed`.
+    """
+    n = norms.shape[0]
+    rows_p, w_p = _gather_tiled_rows(p_nbr, p_wgt, p0, pt, sp)
+    rows_t, w_t = _gather_tiled_rows(t_nbr, t_wgt, t0, tt, st)
+
+    pos = jax.vmap(jnp.searchsorted)(rows_t, rows_p)
+    pos_c = jnp.minimum(pos, rows_t.shape[1] - 1)
+    hit = jnp.take_along_axis(rows_t, pos_c, axis=1) == rows_p
+    hit &= rows_p < n                                  # mask probe padding
+    w_match = jnp.take_along_axis(w_t, pos_c, axis=1)
+    shared_dot = jnp.sum(jnp.where(hit, w_p * w_match, 0.0), axis=1)
+    shared_cnt = jnp.sum(hit, axis=1)
+
+    if measure == "_count":
+        return shared_cnt.astype(jnp.int32)
+    if measure == "cosine":
+        # closed-neighborhood dot: open shared dot + x=u and x=v terms
+        closed_dot = shared_dot + 2.0 * ew
+        return closed_dot / (norms[eu] * norms[ev])
+    elif measure == "jaccard":
+        c = shared_cnt.astype(jnp.float32) + 2.0       # + {u, v}
+        union = cdeg[eu].astype(jnp.float32) + cdeg[ev].astype(jnp.float32) - c
+        return c / union
+    raise ValueError(f"unknown measure {measure!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("sp", "st", "measure"))
+def _bucket_sims_chunk(p0, pt, t0, tt, eu, ev, ew,
+                       p_nbr, p_wgt, t_nbr, t_wgt, norms, cdeg,
+                       *, sp: int, st: int, measure: str):
+    """One fixed-shape per-(bucket_u, bucket_v) kernel invocation. Every
+    shape in the signature is a power of two, so the jit cache is shared
+    across graphs and across repeated ``apply_delta`` batches."""
+    return _bucket_sims_core(p0, pt, t0, tt, eu, ev, ew,
+                             p_nbr, p_wgt, t_nbr, t_wgt, norms, cdeg,
+                             sp, st, measure)
+
+
+# ---------------------------------------------------------------------------
+# plan cache (one plan per live graph object)
+# ---------------------------------------------------------------------------
+_PLAN_CACHE: Dict[Tuple[int, int], Tuple[object, SimilarityPlan]] = {}
+
+
+def plan_for(g: CSRGraph, hub_tile: int = HUB_TILE) -> SimilarityPlan:
+    """The bucketed :class:`SimilarityPlan` for ``g``, cached per live graph
+    object so construction, the LSH exact pass, and triangle counting share
+    one set of device blocks."""
+    key = (id(g), hub_tile)
+    ent = _PLAN_CACHE.get(key)
+    if ent is not None and ent[0]() is g:
+        return ent[1]
+    for k in [k for k, (ref, _) in _PLAN_CACHE.items() if ref() is None]:
+        del _PLAN_CACHE[k]
+    plan = SimilarityPlan.build(g, hub_tile)
+    _PLAN_CACHE[key] = (weakref.ref(g), plan)
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
 def edge_similarities_subset(
     g: CSRGraph,
     eu: jax.Array,
@@ -133,37 +410,32 @@ def edge_similarities_subset(
 
     Used for the full-graph pass, the §6.3 degree-heuristic compacted
     exact pass under LSH, and the incremental-update frontier recompute.
-    Chunks are padded to power-of-two buckets so calls with similar subset
-    sizes (e.g. repeated update batches) reuse one compiled kernel.
+    Edges route to per-degree-class kernels with power-of-two chunk
+    shapes, so repeated calls (e.g. update batches at the same pow2 size)
+    reuse one compiled function per class pair.
     """
     if measure not in MEASURES:
         raise ValueError(f"measure must be one of {MEASURES}")
-    nbr_mat, wgt_mat, _ = padded_neighbors(g)
-    norms = closed_norms(g)
-    cdeg = g.closed_degrees()
-    total = int(eu.shape[0])
-    if total == 0:
-        return jnp.zeros((0,), jnp.float32)
-    chunk = min(chunk, _pow2_bucket(total))
-    out = []
-    for s in range(0, total, chunk):
-        e = min(s + chunk, total)
-        pad = chunk - (e - s)
-        cu = jnp.pad(eu[s:e], (0, pad))
-        cv = jnp.pad(ev[s:e], (0, pad))
-        cw = jnp.pad(ew[s:e], (0, pad))
-        sims = _edge_sims_chunk(cu, cv, cw, nbr_mat, wgt_mat, norms, cdeg, measure)
-        out.append(sims[: e - s])
-    return jnp.concatenate(out) if len(out) > 1 else out[0]
+    return plan_for(g).edge_sims(eu, ev, ew, measure, chunk)
 
 
 def compute_similarities(
     g: CSRGraph, measure: str = "cosine", chunk: int = 1 << 16
 ) -> jax.Array:
-    """Exact σ for every half-edge, float32[m2]. Host-orchestrated chunking."""
+    """Exact σ for every half-edge, float32[m2]. Host-orchestrated routing
+    over the degree-bucketed engine."""
     return edge_similarities_subset(g, g.edge_u, g.nbrs, g.wgts, measure, chunk)
 
 
+def triangle_counts(g: CSRGraph) -> jax.Array:
+    """|N(u) ∩ N(v)| per half-edge (the paper's triangle-counting
+    primitive), via the bucketed sorted-probe engine."""
+    return plan_for(g).edge_sims(g.edge_u, g.nbrs, g.wgts, "_count")
+
+
+# ---------------------------------------------------------------------------
+# small-graph dense oracle
+# ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("measure",))
 def _dense_sims(adj_c, eu, ev, cdeg, measure):
     prod = adj_c @ adj_c.T
@@ -182,18 +454,105 @@ def compute_similarities_dense(g: CSRGraph, measure: str = "cosine") -> jax.Arra
     return _dense_sims(adj_c, g.edge_u, g.nbrs, g.closed_degrees(), measure)
 
 
-def triangle_counts(g: CSRGraph) -> jax.Array:
-    """|N(u) ∩ N(v)| per half-edge (the paper's triangle-counting primitive)."""
-    nbr_mat, wgt_mat, _ = padded_neighbors(g)
-    ones = jnp.ones_like(wgt_mat)
-    norms = closed_norms(g)
-    cdeg = g.closed_degrees()
-    # jaccard path returns (t+2)/union; invert to t for exactness instead:
-    rows_u = nbr_mat[g.edge_u]
-    rows_v = nbr_mat[g.nbrs]
-    pos = jax.vmap(jnp.searchsorted)(rows_v, rows_u)
+# ---------------------------------------------------------------------------
+# legacy dense-padded path — benchmark baseline only
+# ---------------------------------------------------------------------------
+def padded_width(g: CSRGraph) -> int:
+    """[legacy baseline] Global padded row width M: max open degree rounded
+    up to ``PAD_WIDTH_QUANTUM``. One hub inflates M (and the O(n·M) padded
+    matrices below) for every vertex — the skew pathology the bucketed
+    engine exists to remove."""
+    deg = np.asarray(g.degrees())
+    m = int(deg.max()) if len(deg) else 1
+    m = max(m, 1)
+    return -(-m // PAD_WIDTH_QUANTUM) * PAD_WIDTH_QUANTUM
+
+
+def padded_neighbors(g: CSRGraph) -> Tuple[jax.Array, jax.Array, int]:
+    """[legacy baseline] Dense padded (nbr_mat[n, M], wgt_mat[n, M], M).
+    Pad id = n (sorts last). O(n·M) memory — superseded by
+    :class:`SimilarityPlan`; retained for the construction benchmark's
+    dense-vs-bucketed comparison."""
+    m = padded_width(g)
+    offsets = np.asarray(g.offsets)
+    nbr_mat = np.full((g.n, m), g.n, dtype=np.int32)
+    wgt_mat = np.zeros((g.n, m), dtype=np.float32)
+    if g.m2:
+        eu = np.asarray(g.edge_u)
+        pos = np.arange(g.m2, dtype=np.int64) - offsets[eu]
+        nbr_mat[eu, pos] = np.asarray(g.nbrs)
+        wgt_mat[eu, pos] = np.asarray(g.wgts)
+    return jnp.asarray(nbr_mat), jnp.asarray(wgt_mat), m
+
+
+def densepad_operand_bytes(g: CSRGraph) -> int:
+    """[legacy baseline] Peak similarity-operand bytes of the dense-padded
+    layout: the two O(n·M) matrices plus norms/closed degrees."""
+    return g.n * padded_width(g) * (4 + 4) + 8 * g.n
+
+
+@functools.partial(jax.jit, static_argnames=("measure",))
+def _edge_sims_chunk(
+    eu: jax.Array,        # int32[c] chunk of half-edge sources
+    ev: jax.Array,        # int32[c] chunk of half-edge targets
+    ew: jax.Array,        # float32[c] chunk of half-edge weights
+    nbr_mat: jax.Array,   # int32[n, M]
+    wgt_mat: jax.Array,   # float32[n, M]
+    norms: jax.Array,     # float32[n]
+    cdeg: jax.Array,      # int32[n] closed degrees
+    measure: str,
+) -> jax.Array:
+    """[legacy baseline] σ for one chunk of half-edges via vectorized
+    binary search over the global-width padded rows."""
+    rows_u = nbr_mat[eu]                      # [c, M] probe row
+    w_u = wgt_mat[eu]                         # [c, M]
+    rows_v = nbr_mat[ev]                      # [c, M] target row (sorted)
+    w_v = wgt_mat[ev]                         # [c, M]
+
+    pos = jax.vmap(jnp.searchsorted)(rows_v, rows_u)       # [c, M]
     pos_c = jnp.minimum(pos, rows_v.shape[1] - 1)
     hit = jnp.take_along_axis(rows_v, pos_c, axis=1) == rows_u
-    hit &= rows_u < g.n
-    del ones, norms, cdeg
-    return jnp.sum(hit, axis=1).astype(jnp.int32)
+    hit &= rows_u < nbr_mat.shape[0]                        # mask row padding
+    w_match = jnp.take_along_axis(w_v, pos_c, axis=1)
+    shared_dot = jnp.sum(jnp.where(hit, w_u * w_match, 0.0), axis=1)
+    shared_cnt = jnp.sum(hit, axis=1)
+
+    if measure == "cosine":
+        closed_dot = shared_dot + 2.0 * ew
+        return closed_dot / (norms[eu] * norms[ev])
+    elif measure == "jaccard":
+        c = shared_cnt.astype(jnp.float32) + 2.0            # + {u, v}
+        union = cdeg[eu].astype(jnp.float32) + cdeg[ev].astype(jnp.float32) - c
+        return c / union
+    raise ValueError(f"unknown measure {measure!r}")
+
+
+def compute_similarities_densepad(
+    g: CSRGraph, measure: str = "cosine", chunk: int = 1 << 16
+) -> jax.Array:
+    """[legacy baseline] σ for every half-edge via the O(n·Δ) dense-padded
+    layout. Benchmark comparison path only — every production consumer
+    runs on the bucketed engine."""
+    if measure not in MEASURES:
+        raise ValueError(f"measure must be one of {MEASURES}")
+    nbr_mat, wgt_mat, m = padded_neighbors(g)
+    norms = closed_norms(g)
+    cdeg = g.closed_degrees()
+    total = g.m2
+    if total == 0:
+        return jnp.zeros((0,), jnp.float32)
+    # bound the transient [c, M] working set like the bucketed engine does
+    cap = max(CHUNK_ELEMS // max(2 * m, 1), 1)
+    cap = 1 << (cap.bit_length() - 1)
+    chunk = min(max(min(chunk, cap), 1), _pow2_bucket(total))
+    out = []
+    for s in range(0, total, chunk):
+        e = min(s + chunk, total)
+        pad = chunk - (e - s)
+        cu = jnp.pad(g.edge_u[s:e], (0, pad))
+        cv = jnp.pad(g.nbrs[s:e], (0, pad))
+        cw = jnp.pad(g.wgts[s:e], (0, pad))
+        sims = _edge_sims_chunk(cu, cv, cw, nbr_mat, wgt_mat, norms, cdeg,
+                                measure)
+        out.append(sims[: e - s])
+    return jnp.concatenate(out) if len(out) > 1 else out[0]

@@ -3,21 +3,23 @@
 The paper's premise is that the index is built once and amortized over many
 (μ, ε) queries — but serving workloads mutate the graph under the queries.
 ``apply_delta`` maintains an existing :class:`ScanIndex` under a batch of
-edge inserts/deletes. The expensive part of construction — the O(m·M)
+edge inserts/deletes. The expensive part of construction — the bucketed
 similarity pass and the O(m log m) device sorts — shrinks to the
 *frontier* (edges incident to touched endpoints); what remains per batch
 is O(m) host data movement (CSR reassembly, shifted copies, the CO merge)
-and the O(n·M) padded-matrix build feeding the frontier kernel, which is
+and the O(m) bucketed-block build feeding the frontier kernels, which is
 why small batches win ~8–20× over rebuild rather than ~m/frontier
 (measured curves in ``benchmarks/bench_update.py``; maintaining the
-padded matrices incrementally is the next step up):
+bucketed blocks incrementally is the next step up):
 
   * **similarity** — σ(u, v) depends only on N̄(u) and N̄(v), so an edit
     batch changes σ exactly for edges with a touched endpoint. Those are
-    recomputed with the same kernel as construction
-    (:func:`repro.core.similarity.edge_similarities_subset`, power-of-two
-    padded chunks → repeated update calls reuse one compiled function);
-    every other σ is carried over bit-for-bit.
+    recomputed with the same degree-bucketed engine as construction
+    (:func:`repro.core.similarity.edge_similarities_subset`: frontier
+    edges route to their (probe class, target class) kernels, power-of-two
+    padded chunks → repeated update calls reuse one compiled function per
+    class pair, and **only the affected degree classes re-run**); every
+    other σ is carried over bit-for-bit.
   * **neighbor order (NO)** — rows whose content changed (touched vertices
     and their current neighbors) are re-sorted locally; every other row is
     copied with a position shift (its sorted content is unchanged, only
@@ -35,12 +37,13 @@ array-for-array. Two properties make that possible:
   1. every sort key used during construction is *unique* (a NO slot is
      keyed by (row, -σ, ¬self, nbr); a CO slot by (μ, -θ, v)), so host
      ``np.lexsort`` and device ``jnp.lexsort`` agree exactly;
-  2. σ bit patterns depend on the padded row width M of the similarity
-     kernel, so M is quantized (:func:`repro.core.similarity.padded_width`)
-     to make it stable under small degree changes — and when an edit batch
-     *does* change M, ``apply_delta`` falls back to a full σ recompute for
-     that batch (the repair machinery is unchanged; only the carry is
-     skipped).
+  2. σ bit patterns depend only on *local* quantities — the two endpoint
+     rows, their power-of-two degree-class widths/tile counts, and the
+     endpoint norms — all of which change exactly for touched endpoints.
+     The degree-bucketed engine therefore needs **no global fallback**:
+     the old dense-padded layout's "padded width changed → full σ
+     recompute" escape hatch is gone, because a hub edit perturbs only its
+     own degree class, never every vertex's kernel width.
 
 Deletes are applied before inserts, so a delete+insert of the same edge in
 one batch re-inserts it (with the new weight). Deleting an absent edge and
@@ -140,7 +143,7 @@ class UpdateInfo:
     n_touched: int         # endpoints whose neighborhood changed
     n_frontier: int        # half-edges whose σ was recomputed
     n_affected_rows: int   # NO rows re-sorted (touched ∪ their neighbors)
-    full_resim: bool       # padded width changed → full σ recompute
+    n_sim_groups: int      # degree-class kernel groups the frontier ran
 
 
 def _edit_edge_set(g: CSRGraph, delta: EdgeDelta):
@@ -310,34 +313,30 @@ def apply_delta(
         np.zeros(0, dtype=bool)
 
     # ---- σ: carry unchanged edges, recompute the frontier ----
-    full_resim = sim_mod.padded_width(g2) != sim_mod.padded_width(g)
+    # Per-edge kernel widths are local degree classes, so an edit can never
+    # invalidate a carried σ bit pattern: only the frontier's own degree
+    # classes re-run, whatever the batch does to the degree distribution.
     sims2 = np.empty(g2.m2, np.float32)
-    if full_resim:
-        sims2[:] = np.clip(
-            np.asarray(sim_mod.compute_similarities(g2, measure)), 0.0, 1.0)
-        n_frontier = g2.m2
-    else:
-        if (~frontier).any():
-            hk_old = _pack(np.asarray(g.edge_u), np.asarray(g.nbrs))
-            hk_new = _pack(eu2[~frontier], ev2[~frontier])
-            sims2[~frontier] = np.asarray(index.edge_sims)[
-                np.searchsorted(hk_old, hk_new)]
-        n_frontier = int(frontier.sum())
-        if n_frontier:
-            fr = sim_mod.edge_similarities_subset(
-                g2, jnp.asarray(eu2[frontier]), jnp.asarray(ev2[frontier]),
-                jnp.asarray(np.asarray(g2.wgts)[frontier]), measure)
-            sims2[frontier] = np.clip(np.asarray(fr), 0.0, 1.0)
+    n_sim_groups = 0
+    if (~frontier).any():
+        hk_old = _pack(np.asarray(g.edge_u), np.asarray(g.nbrs))
+        hk_new = _pack(eu2[~frontier], ev2[~frontier])
+        sims2[~frontier] = np.asarray(index.edge_sims)[
+            np.searchsorted(hk_old, hk_new)]
+    n_frontier = int(frontier.sum())
+    if n_frontier:
+        fr = sim_mod.edge_similarities_subset(
+            g2, jnp.asarray(eu2[frontier]), jnp.asarray(ev2[frontier]),
+            jnp.asarray(np.asarray(g2.wgts)[frontier]), measure)
+        sims2[frontier] = np.clip(np.asarray(fr), 0.0, 1.0)
+        # edge_similarities_subset just routed this exact frontier; read the
+        # group count off its cached plan instead of routing a second time
+        n_sim_groups = sim_mod.plan_for(g2).last_groups
 
     # ---- NO repair ----
     aff_mask = touched_mask.copy()
     if g2.m2:
         aff_mask[eu2[frontier]] = True
-    if full_resim:
-        # every σ was recomputed at the NEW padded width; carried NO rows
-        # and kept CO entries would still hold old-width bit patterns, so
-        # the whole index rebuilds from sims2 (repair machinery unchanged)
-        aff_mask[:] = True
     offc_new, no_nbrs, no_sims, no_self, row_new = _repair_no(
         index, g2, sims2, aff_mask)
 
@@ -388,5 +387,5 @@ def apply_delta(
     info = UpdateInfo(
         n_inserted=n_ins, n_deleted=n_del, n_touched=len(touched),
         n_frontier=n_frontier, n_affected_rows=int(aff_mask.sum()),
-        full_resim=full_resim)
+        n_sim_groups=n_sim_groups)
     return new_index, g2, info

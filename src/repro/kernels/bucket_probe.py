@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: degree-bucketed shared-neighbor probe.
+
+The bucketed similarity engine (repro.core.similarity) routes each edge to
+a fixed-shape (probe class, target class) kernel: the min-degree side's
+sorted row is matched against the max-degree side's sorted row. On TPU the
+heaviest classes run this kernel instead of the jnp searchsorted path.
+
+The pattern extends ``triangle_count.py``'s masked-gram accumulation: the
+matmul's k-axis becomes the **target-row tile axis**. Each grid step holds
+one (be × P) probe block resident in VMEM and streams one (be × bt) tile
+of the target rows past it — this is the hub-row splitting rule in kernel
+form: a degree-10⁶ hub row is never materialized as one VMEM block, it
+flows through in bt-wide tiles while the per-edge accumulators
+(shared weighted dot, shared count) stay resident:
+
+    dot[e]  = Σ_i Σ_j [p_ids[e,i] == t_ids[e,j]] · p_w[e,i] · t_w[e,j]
+    cnt[e]  = Σ_i Σ_j [p_ids[e,i] == t_ids[e,j]]
+
+The equality test replaces the masked-gram's multiply: instead of masking
+a dense W̄·W̄ᵀ product, the id-match matrix *is* the mask and the weighted
+contribution is rank-1 per hit (graphs are simple, so each probe id hits
+at most once per target row). Padding must be pre-sanitized by the caller:
+probe pad ids < 0 and target pad ids < 0 with **different** values (e.g.
+-1 / -2) so padding never matches padding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(p_ids_ref, p_w_ref, t_ids_ref, t_w_ref, dot_ref, cnt_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        dot_ref[...] = jnp.zeros_like(dot_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    eq = p_ids_ref[...][:, :, None] == t_ids_ref[...][:, None, :]
+    w = p_w_ref[...][:, :, None] * t_w_ref[...][:, None, :]
+    dot_ref[...] += jnp.sum(jnp.where(eq, w, 0.0), axis=(1, 2))
+    cnt_ref[...] += jnp.sum(eq, axis=(1, 2)).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("be", "bt", "interpret")
+)
+def bucket_probe(
+    p_ids: jax.Array,   # int32[e, P]   probe rows (pad id -1)
+    p_w: jax.Array,     # float32[e, P]
+    t_ids: jax.Array,   # int32[e, T]   target rows (pad id -2)
+    t_w: jax.Array,     # float32[e, T]
+    *,
+    be: int = 256,
+    bt: int = 256,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """(shared weighted dot float32[e], shared count int32[e]).
+
+    ``e`` must be a multiple of ``be`` and ``T`` of ``bt``; the caller pads
+    (repro.kernels.ops.bucket_probe_stats does)."""
+    e, p = p_ids.shape
+    t = t_ids.shape[1]
+    assert p_w.shape == (e, p) and t_ids.shape == (e, t) \
+        and t_w.shape == (e, t)
+    assert e % be == 0, "pad edge count to a block multiple"
+    assert t % bt == 0, "pad target width to a tile multiple"
+    grid = (e // be, t // bt)
+    return pl.pallas_call(
+        _kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((e,), jnp.float32),
+            jax.ShapeDtypeStruct((e,), jnp.int32),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((be, p), lambda i, j: (i, 0)),    # probe resident
+            pl.BlockSpec((be, p), lambda i, j: (i, 0)),
+            pl.BlockSpec((be, bt), lambda i, j: (i, j)),   # target streams
+            pl.BlockSpec((be, bt), lambda i, j: (i, j)),
+        ],
+        out_specs=(
+            pl.BlockSpec((be,), lambda i, j: (i,)),
+            pl.BlockSpec((be,), lambda i, j: (i,)),
+        ),
+        interpret=interpret,
+    )(p_ids, p_w, t_ids, t_w)

@@ -13,6 +13,7 @@ import numpy as np
 
 from repro.core.graph import CSRGraph, to_dense
 from repro.kernels.triangle_count import masked_gram
+from repro.kernels.bucket_probe import bucket_probe
 from repro.kernels.simhash import simhash_pack
 from repro.kernels.hamming import hamming_cosine
 from repro.kernels.flash_attention import flash_attention
@@ -53,6 +54,44 @@ def edge_similarities_gram(
     cdeg = g.closed_degrees().astype(jnp.float32)
     union = cdeg[g.edge_u] + cdeg[g.nbrs] - dots
     return dots / union
+
+
+def bucket_probe_stats(
+    rows_p: jax.Array,   # int32[e, P] sorted probe rows (pad id = n)
+    w_p: jax.Array,      # float32[e, P]
+    rows_t: jax.Array,   # int32[e, T] sorted target rows (pad id = n)
+    w_t: jax.Array,      # float32[e, T]
+    n: int,              # vertex count (ids ≥ n are padding)
+    *,
+    be: int = 256,
+    bt: int = 256,
+) -> tuple[jax.Array, jax.Array]:
+    """(shared weighted dot, shared count) per edge via the Pallas
+    degree-bucketed probe kernel (repro.kernels.bucket_probe).
+
+    Sanitizes padding ids (probe → -1, target → -2 so pads never match),
+    pads the edge axis to ``be`` and the target width to ``bt`` (the
+    hub-row tile the kernel streams), and slices the results back. The
+    TPU dispatch path for the heaviest degree classes; the jnp
+    searchsorted engine in core.similarity is the CPU/reference path.
+    """
+    e0, p = rows_p.shape
+    t = rows_t.shape[1]
+    bt = min(bt, max(t, 1))
+    pad_w = (-t) % bt
+    # widen with the sentinel id n BEFORE sanitizing, so width padding
+    # becomes -2 like every other target pad (0 would alias vertex id 0)
+    rows_t = jnp.pad(rows_t, ((0, 0), (0, pad_w)), constant_values=n)
+    w_t = jnp.pad(w_t, ((0, 0), (0, pad_w)))
+    ids_p = jnp.where(rows_p < n, rows_p, -1).astype(jnp.int32)
+    ids_t = jnp.where(rows_t < n, rows_t, -2).astype(jnp.int32)
+    ids_p = _pad_to(ids_p, be, (0,))
+    w_p = _pad_to(w_p, be, (0,))
+    ids_t = _pad_to(ids_t, be, (0,))
+    w_t = _pad_to(w_t, be, (0,))
+    dot, cnt = bucket_probe(ids_p, w_p, ids_t, w_t, be=be, bt=bt,
+                            interpret=_INTERPRET)
+    return dot[:e0], cnt[:e0]
 
 
 def simhash_sketches_kernel(

@@ -9,6 +9,16 @@ def masked_gram_ref(w: jax.Array, mask: jax.Array) -> jax.Array:
     return (w @ w.T) * mask
 
 
+def bucket_probe_ref(p_ids, p_w, t_ids, t_w):
+    """(shared dot, shared count) per edge row-pair; pad ids must differ
+    between probe (-1) and target (-2) so padding never matches."""
+    eq = p_ids[:, :, None] == t_ids[:, None, :]
+    w = p_w[:, :, None] * t_w[:, None, :]
+    dot = jnp.sum(jnp.where(eq, w, 0.0), axis=(1, 2))
+    cnt = jnp.sum(eq, axis=(1, 2)).astype(jnp.int32)
+    return dot, cnt
+
+
 def simhash_pack_ref(w: jax.Array, r: jax.Array) -> jax.Array:
     s = w @ r
     bits = (s >= 0.0).astype(jnp.uint32)

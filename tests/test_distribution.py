@@ -122,22 +122,19 @@ _SUBPROCESS_PROG = textwrap.dedent("""
     assert np.isfinite(gnorm) and gnorm > 0
     print("EP_OK", err, gnorm)
 
-    # sharded SCAN similarity pass (edge-parallel shard_map)
-    from repro.core import random_graph, compute_similarities
-    from repro.core.similarity import padded_neighbors, closed_norms
+    # sharded SCAN similarity pass (edge-parallel shard_map over the
+    # degree-bucketed groups; class blocks replicated, ragged group sizes
+    # padded to the axis size internally)
+    from repro.core import random_graph, power_law_graph, compute_similarities
+    from repro.core.similarity import plan_for
     from repro.core.distributed import sharded_edge_similarities
-    g2 = random_graph(48, 6.0, seed=3)
-    m2 = g2.m2 - (g2.m2 % 8)
-    import dataclasses
-    g3 = dataclasses.replace(
-        g2, nbrs=g2.nbrs[:m2], wgts=g2.wgts[:m2], edge_u=g2.edge_u[:m2], m2=m2)
-    nbr, wgt, _ = padded_neighbors(g2)
-    norms = closed_norms(g2)
-    with mesh:
-        sims_sharded = sharded_edge_similarities(g3, nbr, wgt, norms, mesh)
-    sims_ref = compute_similarities(g2)[:m2]
-    err2 = float(jnp.max(jnp.abs(sims_sharded - sims_ref)))
-    assert err2 < 1e-5, err2
+    for g2 in (random_graph(48, 6.0, seed=3),
+               power_law_graph(64, 2.1, seed=4, hub_degree=24)):
+        with mesh:
+            sims_sharded = sharded_edge_similarities(g2, plan_for(g2), mesh)
+        sims_ref = compute_similarities(g2)
+        err2 = float(jnp.max(jnp.abs(sims_sharded - sims_ref)))
+        assert err2 < 1e-5, err2
     print("SCAN_SHARD_OK", err2)
 """)
 

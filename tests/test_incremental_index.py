@@ -199,25 +199,56 @@ def test_random_scripts_thorough():
             assert_queries_identical(idx, g, idx_ref, g_ref, tag)
 
 
-def test_degree_growth_triggers_full_resim_and_stays_identical():
-    """Pushing one vertex's degree across the padded-width quantum forces
-    the full-σ fallback; the result must still be bit-identical."""
+def test_degree_growth_never_triggers_full_resim():
+    """Regression for the old dense-padded fallback: growing one vertex
+    across several power-of-two degree classes must re-run ONLY the touched
+    degree classes (frontier edges), never the whole graph — and the result
+    must still be bit-identical to a rebuild at every step."""
     g = random_graph(40, 3.0, seed=4)
     idx = build_index(g, "cosine")
     hub = 7
     deg0 = int(np.asarray(g.degrees())[hub])
     targets = [v for v in range(g.n)
                if v != hub and not _has_edge(g, hub, v)]
-    full_seen = False
     for chunk in range(0, len(targets), 6):
         ins = [(hub, v) for v in targets[chunk: chunk + 6]]
         idx, g, info = apply_delta(idx, g, EdgeDelta.make(inserts=ins))
-        full_seen = full_seen or info.full_resim
+        # frontier = edges incident to touched endpoints only — the old
+        # engine recomputed all m2 σ whenever the global width bucket moved
+        assert info.n_frontier < g.m2, f"full re-sim at chunk {chunk}"
+        assert info.n_sim_groups >= 1
         idx_ref, g_ref = rebuild(g)
         assert_bit_identical(idx, g, idx_ref, g_ref, f"hub-chunk {chunk}")
-    assert full_seen, "degree growth must cross a padded-width bucket"
+    # the hub crossed multiple pow2 classes (deg 3ish → ~39)
     assert int(np.asarray(g.degrees())[hub]) == deg0 + len(targets)
     assert_queries_identical(idx, g, idx_ref, g_ref, "hub-final")
+
+
+def test_power_law_scripts_bit_identical():
+    """apply_delta on a power-law graph with a forced hub: the bucketed
+    engine's frontier-only recompute stays bit-identical to rebuild, with
+    hub-incident inserts touching only the hub's and spokes' classes."""
+    from repro.core import power_law_graph
+
+    g = power_law_graph(96, 2.1, seed=9, weighted=True, hub_degree=48)
+    idx = build_index(g, "cosine")
+    rng = np.random.default_rng(5)
+    for step in range(3):
+        # half the inserts pile onto the hub (vertex 0), half are random
+        k = 6
+        hub_ins = np.stack([np.zeros(k // 2, np.int64),
+                            rng.integers(1, g.n, size=k // 2)], axis=1)
+        rnd_ins = rng.integers(0, g.n, size=(k - k // 2, 2))
+        ins = np.concatenate([hub_ins, rnd_ins])
+        w = rng.uniform(0.1, 1.0, size=len(ins)).astype(np.float32)
+        edges, _ = canonical_edges(g)
+        dels = edges[rng.integers(0, len(edges), size=2)]
+        idx, g, info = apply_delta(
+            idx, g, EdgeDelta.make(inserts=ins, weights=w, deletes=dels))
+        assert info.n_frontier < g.m2
+        idx_ref, g_ref = rebuild(g)
+        assert_bit_identical(idx, g, idx_ref, g_ref, f"powerlaw step={step}")
+    assert_queries_identical(idx, g, idx_ref, g_ref, "powerlaw-final")
 
 
 def test_delta_canonicalization():

@@ -6,6 +6,7 @@ import pytest
 
 from repro.kernels import ref as kref
 from repro.kernels import ops
+from repro.kernels.bucket_probe import bucket_probe
 from repro.kernels.triangle_count import masked_gram
 from repro.kernels.simhash import simhash_pack
 from repro.kernels.hamming import hamming_cosine
@@ -24,6 +25,37 @@ def test_masked_gram_sweep(n, block):
     want = kref.masked_gram_ref(jnp.asarray(w), jnp.asarray(m))
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-4,
                                atol=2e-3)
+
+
+@pytest.mark.parametrize("e,p,t,be,bt", [(64, 8, 32, 32, 16),
+                                         (128, 16, 64, 64, 64),
+                                         (32, 8, 128, 32, 32)])
+def test_bucket_probe_sweep(e, p, t, be, bt):
+    """Degree-bucketed probe kernel vs the pure-jnp oracle, including the
+    tiled target axis (t > bt streams the row through multiple grid steps,
+    the hub-row splitting path)."""
+    n_ids = 64
+    ids_p = np.sort(RNG.choice(n_ids, size=(e, p)), axis=1).astype(np.int32)
+    ids_t = np.sort(RNG.choice(n_ids, size=(e, t)), axis=1).astype(np.int32)
+    # sanitize duplicates away (simple-graph invariant) and pad some tails
+    for row in (ids_p, ids_t):
+        for i in range(e):
+            u = np.unique(row[i])
+            pad = -1 if row is ids_p else -2
+            row[i] = np.concatenate(
+                [u, np.full(row.shape[1] - len(u), pad, np.int32)]
+            ) if len(u) < row.shape[1] else row[i]
+    w_p = RNG.uniform(0.1, 1.0, size=(e, p)).astype(np.float32)
+    w_t = RNG.uniform(0.1, 1.0, size=(e, t)).astype(np.float32)
+    dot, cnt = bucket_probe(jnp.asarray(ids_p), jnp.asarray(w_p),
+                            jnp.asarray(ids_t), jnp.asarray(w_t),
+                            be=be, bt=bt, interpret=True)
+    want_dot, want_cnt = kref.bucket_probe_ref(
+        jnp.asarray(ids_p), jnp.asarray(w_p),
+        jnp.asarray(ids_t), jnp.asarray(w_t))
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(want_cnt))
+    np.testing.assert_allclose(np.asarray(dot), np.asarray(want_dot),
+                               rtol=1e-5, atol=1e-6)
 
 
 @pytest.mark.parametrize("n,k", [(128, 128), (256, 256), (128, 384)])
