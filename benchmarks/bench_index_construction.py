@@ -16,9 +16,7 @@ repo root — the construction perf trajectory that CI uploads per commit
 """
 from __future__ import annotations
 
-import json
 import pathlib
-import time
 
 import numpy as np
 
@@ -26,7 +24,7 @@ from repro.core import build_index, compute_similarities
 from repro.core.similarity import (compute_similarities_densepad,
                                    densepad_operand_bytes, plan_for)
 from benchmarks.common import (GRAPHS, SKEWED_GRAPHS, load_graph, timeit,
-                               emit)
+                               emit, write_snapshot)
 
 SNAPSHOT = pathlib.Path(__file__).resolve().parents[1] / \
     "BENCH_construction.json"
@@ -81,23 +79,10 @@ def _skew_rows():
     return lines
 
 
-def _write_snapshot(lines):
-    from benchmarks.run import _parse_line
-
-    payload = {
-        "meta": {
-            "bench": "index_construction",
-            "unix_time": int(time.time()),
-            "graphs": {**{k: dict(v) for k, v in GRAPHS.items()},
-                       **{k: dict(v) for k, v in SKEWED_GRAPHS.items()}},
-        },
-        "rows": [_parse_line(ln) for ln in lines],
-    }
-    SNAPSHOT.write_text(json.dumps(payload, indent=2) + "\n")
-    print(f"# wrote {len(lines)} rows to {SNAPSHOT}", flush=True)
-
-
 def run():
     lines = _uniform_rows() + _skew_rows()
-    _write_snapshot(lines)
+    write_snapshot(
+        SNAPSHOT, "index_construction", lines,
+        {"graphs": {**{k: dict(v) for k, v in GRAPHS.items()},
+                    **{k: dict(v) for k, v in SKEWED_GRAPHS.items()}}})
     return lines

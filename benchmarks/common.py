@@ -8,6 +8,7 @@ sparse social-like graphs and dense weighted graphs (where LSH should win).
 """
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable, Dict
 
@@ -67,3 +68,18 @@ def emit(name: str, seconds: float, derived: str = "") -> str:
     line = f"{name},{seconds * 1e6:.1f},{derived}"
     print(line, flush=True)
     return line
+
+
+def write_snapshot(path, bench: str, lines, extra_meta=None) -> None:
+    """Write a bench section's rows as the repo-root JSON snapshot
+    (``BENCH_construction.json`` / ``BENCH_update.json`` pattern): the
+    perf trajectory committed per PR and uploaded by CI per run."""
+    from benchmarks.run import _parse_line
+
+    payload = {
+        "meta": {"bench": bench, "unix_time": int(time.time()),
+                 **(extra_meta or {})},
+        "rows": [_parse_line(ln) for ln in lines],
+    }
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {len(lines)} rows to {path}", flush=True)

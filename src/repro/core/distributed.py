@@ -308,9 +308,11 @@ class ShardedQueryPlan:
     update: per-shard chunks of each O(m) operand are compared host-side
     (sha256 content digests — 32 bytes per chunk retained, not the O(m)
     padded arrays themselves) and only *mutated* partitions are re-placed
-    on device; unchanged shards adopt the old plan's buffers (an
-    incremental edit batch typically touches a handful of partitions, not
-    all k).
+    on device; unchanged shards — and the replicated CO offsets — adopt
+    the old plan's buffers (an incremental edit batch typically touches a
+    handful of partitions, not all k). ``refresh`` is loop-free pure
+    compute, so the live-update path runs it in the engine's offload
+    worker alongside ``apply_delta``.
     """
 
     _SHARDED = ("emask", "eu", "ev", "esim", "co_v", "co_t", "co_i")
@@ -339,13 +341,25 @@ class ShardedQueryPlan:
                               np.int32),
         }
         self._chunk_digests: dict = {}
-        stats = {"chunks": k * len(self._SHARDED), "reused": 0, "placed": 0}
+        stats = {"chunks": k * len(self._SHARDED), "reused": 0, "placed": 0,
+                 "repl_reused": 0}
         for name in self._SHARDED:
             arr, reused = self._place(name, host[name], _reuse_from)
             setattr(self, name, arr)
             stats["reused"] += reused
             stats["placed"] += k - reused
-        self.co_offsets = jax.device_put(index.co_offsets, repl)
+        # the replicated CO segment offsets diff the same way the sharded
+        # chunks do: unchanged content adopts the predecessor's buffer
+        co_off_host = np.asarray(index.co_offsets)
+        self._co_off_digest = (co_off_host.shape,
+                               hashlib.sha256(co_off_host.tobytes()).digest())
+        if (_reuse_from is not None and _reuse_from.mesh is self.mesh
+                and getattr(_reuse_from, "_co_off_digest", None)
+                == self._co_off_digest):
+            self.co_offsets = _reuse_from.co_offsets
+            stats["repl_reused"] = 1
+        else:
+            self.co_offsets = jax.device_put(index.co_offsets, repl)
         self.last_refresh = stats
 
     def _place(self, name: str, host: np.ndarray,

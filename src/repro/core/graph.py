@@ -60,6 +60,13 @@ def from_edge_list(
 
     Deduplicates edges, drops self-loops, symmetrizes.
     """
+    if n > 2 ** 31:
+        # vertex ids must fit in 31 bits: the incremental-update path
+        # (repro.core.update) merges edits on packed (u << 32 | v) int64
+        # keys, which silently collide beyond that — refuse up front
+        raise ValueError(
+            f"n={n} exceeds 2**31: vertex ids must fit in 31 bits for the "
+            "packed edit-merge keys used by incremental updates")
     edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
     if weights is None:
         weights = np.ones(len(edges), dtype=np.float32)

@@ -50,6 +50,9 @@ Entry points:
   repeated calls reuse one compiled kernel per (class pair).
 * ``SimilarityPlan`` — the bucketed operands for one graph (blocks, vertex
   routing tables, norms); build once via :func:`plan_for` and reuse.
+  :meth:`SimilarityPlan.apply` derives the successor plan for an edited
+  graph by patching only the affected degree-class blocks (see below), so
+  the incremental-update path never rebuilds the O(m + n) operands.
 * ``compute_similarities_dense`` — small-graph oracle: σ from the closed
   weighted adjacency product (W̄·W̄ᵀ) gathered at edges. The Pallas
   triangle kernel (repro.kernels.triangle_count) reproduces this product
@@ -75,7 +78,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import weakref
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -109,6 +112,25 @@ def _pow2_bucket(total: int, floor: int = 64) -> int:
     while b < total:
         b <<= 1
     return b
+
+
+def _routing_tables(deg: np.ndarray, n: int, hub_tile: int):
+    """Degree → bucketing derivation: (widths, vclass, vtiles).
+
+    The single source of truth shared by :meth:`SimilarityPlan.build` and
+    :meth:`SimilarityPlan.apply` — their bit-identity contract requires
+    one implementation of the class rule, not two that must be kept in
+    sync by hand."""
+    if not n:
+        return (), np.zeros(0, np.int32), np.zeros(0, np.int32)
+    w_full = 1 << np.ceil(np.log2(np.maximum(deg, 1))).astype(np.int64)
+    w_full = np.maximum(w_full, BUCKET_FLOOR)
+    w_cap = np.minimum(w_full, hub_tile)
+    vtiles = np.where(w_full > hub_tile,
+                      -(-deg // hub_tile), 1).astype(np.int32)
+    widths = tuple(int(w) for w in np.unique(w_cap[:n]))
+    vclass = np.searchsorted(widths, w_cap[:n]).astype(np.int32)
+    return widths, vclass, vtiles
 
 
 def closed_norms(g: CSRGraph) -> jax.Array:
@@ -149,25 +171,16 @@ class SimilarityPlan:
     # observability: kernel groups the most recent edge_sims call routed to
     # (stat slot, not identity; written via object.__setattr__)
     last_groups: int = 0
+    # observability: what the :meth:`apply` that produced this plan did
+    # (None for plans built from scratch)
+    last_apply: Optional[dict] = None
 
     # -- construction -------------------------------------------------------
     @staticmethod
     def build(g: CSRGraph, hub_tile: int = HUB_TILE) -> "SimilarityPlan":
         deg = np.diff(np.asarray(g.offsets)).astype(np.int64)
         n = g.n
-        w_full = np.ones(max(n, 1), dtype=np.int64)
-        if n:
-            w_full = 1 << np.ceil(
-                np.log2(np.maximum(deg, 1))).astype(np.int64)
-            w_full = np.maximum(w_full, BUCKET_FLOOR)
-        w_cap = np.minimum(w_full, hub_tile)
-        vtiles = np.where(w_full > hub_tile,
-                          -(-deg // hub_tile), 1).astype(np.int32)
-
-        widths = tuple(int(w) for w in np.unique(w_cap[:n])) if n else ()
-        cls_of_width = {w: i for i, w in enumerate(widths)}
-        vclass = np.array([cls_of_width[w] for w in w_cap[:n]],
-                          dtype=np.int32) if n else np.zeros(0, np.int32)
+        widths, vclass, vtiles = _routing_tables(deg, n, hub_tile)
 
         offsets = np.asarray(g.offsets)
         eu = np.asarray(g.edge_u) if g.m2 else np.zeros(0, np.int64)
@@ -206,6 +219,158 @@ class SimilarityPlan:
             nbr_blocks=tuple(nbr_blocks), wgt_blocks=tuple(wgt_blocks),
             vclass=vclass, vrow=vrow, vtiles=vtiles, deg=deg,
             norms=closed_norms(g), cdeg=g.closed_degrees())
+
+    # -- incremental maintenance -------------------------------------------
+    def apply(self, g2: CSRGraph, touched) -> "SimilarityPlan":
+        """Successor plan for an edited graph, patching only affected blocks.
+
+        ``g2`` is the post-edit graph (same vertex set as this plan's
+        graph); ``touched`` holds every vertex whose open neighbor row —
+        content or weights — changed (a superset is correct, a subset is
+        not). The result is **bit-identical** to
+        ``SimilarityPlan.build(g2, self.hub_tile)`` (asserted by the
+        edit-script oracle), but the per-batch block work is proportional
+        to the *touched* rows/classes, never O(m):
+
+        * a degree class with no touched member and an unchanged layout
+          reuses its device blocks outright (``reused``);
+        * touched rows of a layout-stable class re-pack in place — one
+          scatter of the rewritten tile rows (``patched``);
+        * a membership/tile-count change (a vertex migrating between its
+          two pow2 classes, a hub splitting or merging tile rows under the
+          ``HUB_TILE`` rule) re-derives the block by gathering kept rows
+          from the old block and scattering the rewritten ones
+          (``remapped``);
+        * a class width with no predecessor block packs fresh — all its
+          members are touched by construction (``built``).
+
+        Vertex routing tables are recomputed host-side in O(n) (exactly as
+        :meth:`build` does, so class ids / row starts match bit-for-bit),
+        norms are patched only at ``touched`` via a frontier-restricted
+        segment sum, and ``last_apply`` on the returned plan reports the
+        work counters (``rows_written`` is the acceptance counter: block
+        tile rows actually rewritten this batch).
+        """
+        if g2.n != self.n:
+            raise ValueError(
+                f"plan.apply: vertex count changed ({self.n} -> {g2.n}); "
+                "incremental maintenance assumes a fixed vertex set")
+        n = self.n
+        hub_tile = self.hub_tile
+        touched = np.asarray(touched, dtype=np.int64)
+        tmask = np.zeros(n, dtype=bool)
+        tmask[touched] = True
+
+        off2 = np.asarray(g2.offsets)
+        deg2 = np.diff(off2).astype(np.int64)
+        # routing tables via the same derivation build() uses
+        widths2, vclass2, vtiles2 = _routing_tables(deg2, n, hub_tile)
+
+        nbrs2 = np.asarray(g2.nbrs) if g2.m2 else np.zeros(0, np.int32)
+        wgts2 = np.asarray(g2.wgts) if g2.m2 else np.zeros(0, np.float32)
+        old_ci_of_width = {w: i for i, w in enumerate(self.widths)}
+
+        stats = {"classes": len(widths2), "reused": 0, "patched": 0,
+                 "remapped": 0, "built": 0, "rows_written": 0}
+        vrow2 = np.zeros(n, dtype=np.int32)
+        nbr_blocks: List[jax.Array] = []
+        wgt_blocks: List[jax.Array] = []
+        for ci, w in enumerate(widths2):
+            members = np.flatnonzero(vclass2 == ci)
+            tiles = vtiles2[members].astype(np.int64)
+            starts = np.concatenate([[0], np.cumsum(tiles)[:-1]])
+            vrow2[members] = starts
+            k_rows = int(tiles.sum())
+            k_pad = _pow2ceil(k_rows + 1)
+            oci = old_ci_of_width.get(w)
+            rewrite = members[tmask[members]]
+
+            if oci is None:
+                # brand-new width: every member changed degree => touched
+                nb = np.full((k_pad, w), n, dtype=np.int32)
+                wb = np.zeros((k_pad, w), dtype=np.float32)
+                rows, valn, valw = _member_tile_rows(
+                    members, w, vrow2, vtiles2, off2, nbrs2, wgts2, n)
+                nb[rows] = valn
+                wb[rows] = valw
+                stats["built"] += 1
+                stats["rows_written"] += len(rows)
+                nbr_blocks.append(jnp.asarray(nb))
+                wgt_blocks.append(jnp.asarray(wb))
+                continue
+
+            old_nb = self.nbr_blocks[oci]
+            old_wb = self.wgt_blocks[oci]
+            members1 = np.flatnonzero(self.vclass == oci)
+            stable = (old_nb.shape[0] == k_pad
+                      and len(members1) == len(members)
+                      and np.array_equal(members1, members)
+                      and np.array_equal(self.vtiles[members],
+                                         vtiles2[members]))
+            if stable and len(rewrite) == 0:
+                nbr_blocks.append(old_nb)
+                wgt_blocks.append(old_wb)
+                stats["reused"] += 1
+                continue
+
+            rows, valn, valw = _member_tile_rows(
+                rewrite, w, vrow2, vtiles2, off2, nbrs2, wgts2, n)
+            stats["rows_written"] += len(rows)
+            # pad the scatter to a pow2 row count aimed at the sentinel row
+            # (kept all-pad by writing pad content), so repeated batches hit
+            # one compiled scatter per block shape
+            r_pad = _pow2ceil(len(rows)) - len(rows)
+            if r_pad:
+                rows = np.concatenate(
+                    [rows, np.full(r_pad, k_pad - 1, np.int32)])
+                valn = np.concatenate(
+                    [valn, np.full((r_pad, w), n, np.int32)])
+                valw = np.concatenate(
+                    [valw, np.zeros((r_pad, w), np.float32)])
+            if stable:
+                nb, wb = _patch_block(
+                    old_nb, old_wb, jnp.asarray(rows),
+                    jnp.asarray(valn), jnp.asarray(valw))
+                stats["patched"] += 1
+            else:
+                # layout moved: gather kept members' rows from the old
+                # block (they are bit-identical), then scatter the rest
+                kept = members[~tmask[members]]
+                src = np.full(k_pad, old_nb.shape[0] - 1, dtype=np.int32)
+                if len(kept):
+                    kt = vtiles2[kept].astype(np.int64)   # == old tiles
+                    new_r = _expand_tile_rows(vrow2[kept], kt)
+                    old_r = _expand_tile_rows(self.vrow[kept], kt)
+                    src[new_r] = old_r
+                nb, wb = _remap_block(
+                    old_nb, old_wb, jnp.asarray(src), jnp.asarray(rows),
+                    jnp.asarray(valn), jnp.asarray(valw))
+                stats["remapped"] += 1
+            nbr_blocks.append(nb)
+            wgt_blocks.append(wb)
+
+        # norms change exactly at touched vertices; the restricted segment
+        # sum walks each touched row in CSR order — the same value sequence
+        # the full closed_norms reduction uses, so patched entries are
+        # bit-identical to a from-scratch build (oracle-asserted)
+        if len(touched) and g2.m2:
+            sel = tmask[np.asarray(g2.edge_u)]
+            sq = jax.ops.segment_sum(
+                jnp.asarray(wgts2[sel]) ** 2,
+                jnp.asarray(np.asarray(g2.edge_u)[sel]),
+                num_segments=n)
+            t = jnp.asarray(touched)
+            norms2 = self.norms.at[t].set(jnp.sqrt(sq + 1.0)[t])
+        elif len(touched):
+            norms2 = self.norms.at[jnp.asarray(touched)].set(1.0)
+        else:
+            norms2 = self.norms
+
+        return SimilarityPlan(
+            n=n, m2=g2.m2, hub_tile=hub_tile, widths=widths2,
+            nbr_blocks=tuple(nbr_blocks), wgt_blocks=tuple(wgt_blocks),
+            vclass=vclass2, vrow=vrow2, vtiles=vtiles2, deg=deg2,
+            norms=norms2, cdeg=g2.closed_degrees(), last_apply=stats)
 
     # -- introspection ------------------------------------------------------
     def operand_bytes(self) -> int:
@@ -317,6 +482,56 @@ def _pad1(a: np.ndarray, pad: int, fill) -> np.ndarray:
     return np.concatenate([a, np.full(pad, fill, dtype=a.dtype)])
 
 
+def _expand_tile_rows(first: np.ndarray, tiles: np.ndarray) -> np.ndarray:
+    """Concatenated [first_i, first_i + tiles_i) tile-row ranges, int32."""
+    total = int(tiles.sum())
+    if total == 0:
+        return np.zeros(0, np.int32)
+    ends = np.cumsum(tiles)
+    within = np.arange(total, dtype=np.int64) - np.repeat(ends - tiles, tiles)
+    return (np.repeat(np.asarray(first, np.int64), tiles)
+            + within).astype(np.int32)
+
+
+def _member_tile_rows(members, w, vrow, vtiles, offsets, nbrs, wgts, n):
+    """Packed tile rows for a member set: (rows int32[R], nbr int32[R, w],
+    wgt float32[R, w]) where R = Σ tiles — each member's sorted CSR row
+    split into ``w``-wide tiles, padded with id ``n`` / weight 0."""
+    members = np.asarray(members, np.int64)
+    tiles = vtiles[members].astype(np.int64)
+    rows = _expand_tile_rows(vrow[members], tiles)
+    valn = np.full((len(rows), w), n, dtype=np.int32)
+    valw = np.zeros((len(rows), w), dtype=np.float32)
+    if len(members):
+        degs = offsets[members + 1].astype(np.int64) - offsets[members]
+        tot = int(degs.sum())
+        if tot:
+            ends = np.cumsum(degs)
+            pos = np.arange(tot, dtype=np.int64) - np.repeat(
+                ends - degs, degs)
+            src = np.repeat(offsets[members].astype(np.int64), degs) + pos
+            row_base = np.repeat(np.cumsum(tiles) - tiles, degs)
+            r = row_base + pos // w
+            c = pos % w
+            valn[r, c] = nbrs[src]
+            valw[r, c] = wgts[src]
+    return rows, valn, valw
+
+
+@jax.jit
+def _patch_block(nb, wb, rows, valn, valw):
+    """Scatter rewritten tile rows into a layout-stable block (functional
+    update — the old block stays intact for the predecessor plan)."""
+    return nb.at[rows].set(valn), wb.at[rows].set(valw)
+
+
+@jax.jit
+def _remap_block(nb, wb, src, rows, valn, valw):
+    """Gather kept rows from the old block per ``src`` (sentinel index for
+    vacated rows — all-pad, like a fresh block), then scatter rewrites."""
+    return nb[src].at[rows].set(valn), wb[src].at[rows].set(valw)
+
+
 def _gather_tiled_rows(block_n, block_w, first, cnt, s: int):
     """Reassemble [c, s·w] sorted rows from ``s`` consecutive tile rows per
     entry (hub-row splitting: tiles beyond ``cnt`` map to the all-pad
@@ -380,19 +595,59 @@ def _bucket_sims_chunk(p0, pt, t0, tt, eu, ev, ew,
 _PLAN_CACHE: Dict[Tuple[int, int], Tuple[object, SimilarityPlan]] = {}
 
 
+def _evict_plan(key, ref) -> None:
+    """Finalizer: drop a cache entry when its graph dies — but only if the
+    slot still belongs to that graph (ids are reused, so a delayed
+    finalizer must never pop a successor's entry)."""
+    ent = _PLAN_CACHE.get(key)
+    if ent is not None and ent[0] is ref:
+        del _PLAN_CACHE[key]
+
+
+def _cache_plan(g: CSRGraph, key, plan: SimilarityPlan) -> None:
+    ref = weakref.ref(g)
+    _PLAN_CACHE[key] = (ref, plan)
+    # evict the moment the graph is collected: a dead graph's O(m + n)
+    # device blocks must not squat in the cache until the next miss sweeps
+    weakref.finalize(g, _evict_plan, key, ref)
+
+
 def plan_for(g: CSRGraph, hub_tile: int = HUB_TILE) -> SimilarityPlan:
     """The bucketed :class:`SimilarityPlan` for ``g``, cached per live graph
-    object so construction, the LSH exact pass, and triangle counting share
-    one set of device blocks."""
+    object so construction, the LSH exact pass, triangle counting, and the
+    incremental-update path share one set of device blocks. Entries are
+    evicted by a ``weakref.finalize`` on the graph, so a plan never
+    outlives its graph."""
     key = (id(g), hub_tile)
     ent = _PLAN_CACHE.get(key)
     if ent is not None and ent[0]() is g:
         return ent[1]
-    for k in [k for k, (ref, _) in _PLAN_CACHE.items() if ref() is None]:
-        del _PLAN_CACHE[k]
     plan = SimilarityPlan.build(g, hub_tile)
-    _PLAN_CACHE[key] = (weakref.ref(g), plan)
+    _cache_plan(g, key, plan)
     return plan
+
+
+def adopt_plan(g: CSRGraph, plan: SimilarityPlan) -> SimilarityPlan:
+    """Seed the cache with an externally derived plan for ``g`` (the
+    incremental-update path hands over :meth:`SimilarityPlan.apply`'s
+    successor so the post-edit graph never triggers an O(m) rebuild)."""
+    _cache_plan(g, (id(g), plan.hub_tile), plan)
+    return plan
+
+
+def cached_plan(g: CSRGraph,
+                hub_tile: int = HUB_TILE) -> Optional[SimilarityPlan]:
+    """The cached plan for ``g`` if one exists (None otherwise; never
+    builds). Lets tests distinguish a maintained plan from a fresh one."""
+    ent = _PLAN_CACHE.get((id(g), hub_tile))
+    if ent is not None and ent[0]() is g:
+        return ent[1]
+    return None
+
+
+def plan_cache_size() -> int:
+    """Live entry count of the per-graph plan cache (leak detection)."""
+    return len(_PLAN_CACHE)
 
 
 # ---------------------------------------------------------------------------

@@ -3,23 +3,27 @@
 The paper's premise is that the index is built once and amortized over many
 (μ, ε) queries — but serving workloads mutate the graph under the queries.
 ``apply_delta`` maintains an existing :class:`ScanIndex` under a batch of
-edge inserts/deletes. The expensive part of construction — the bucketed
-similarity pass and the O(m log m) device sorts — shrinks to the
-*frontier* (edges incident to touched endpoints); what remains per batch
-is O(m) host data movement (CSR reassembly, shifted copies, the CO merge)
-and the O(m) bucketed-block build feeding the frontier kernels, which is
-why small batches win ~8–20× over rebuild rather than ~m/frontier
-(measured curves in ``benchmarks/bench_update.py``; maintaining the
-bucketed blocks incrementally is the next step up):
+edge inserts/deletes. The expensive parts of construction — the bucketed
+similarity pass, its O(m + n) operand build, and the O(m log m) device
+sorts — all shrink to the *touched* structure: σ recomputes only on the
+frontier (edges incident to touched endpoints), and the degree-bucketed
+``SimilarityPlan`` is itself **maintained incrementally**
+(:meth:`repro.core.similarity.SimilarityPlan.apply`: touched rows re-pack
+in place, class migrations move a vertex between exactly two blocks, hub
+rows split/merge under the ``HUB_TILE`` rule, untouched blocks are reused
+outright). What remains per batch is O(m) host data movement (CSR
+reassembly, shifted NO copies, the CO merge) — measured crossover curves
+live in ``benchmarks/bench_update.py`` and ``BENCH_update.json``:
 
   * **similarity** — σ(u, v) depends only on N̄(u) and N̄(v), so an edit
-    batch changes σ exactly for edges with a touched endpoint. Those are
-    recomputed with the same degree-bucketed engine as construction
-    (:func:`repro.core.similarity.edge_similarities_subset`: frontier
-    edges route to their (probe class, target class) kernels, power-of-two
-    padded chunks → repeated update calls reuse one compiled function per
-    class pair, and **only the affected degree classes re-run**); every
-    other σ is carried over bit-for-bit.
+    batch changes σ exactly for edges with a touched endpoint. The live
+    plan's successor is derived block-patch-wise (``plan.apply``, work
+    proportional to touched rows/classes, seeded into the plan cache for
+    the post-edit graph) and the frontier routes through it exactly as in
+    construction: (probe class, target class) kernels, power-of-two padded
+    chunks → repeated update calls reuse one compiled function per class
+    pair, and **only the affected degree classes re-run**; every other σ
+    is carried over bit-for-bit.
   * **neighbor order (NO)** — rows whose content changed (touched vertices
     and their current neighbors) are re-sorted locally; every other row is
     copied with a position shift (its sorted content is unchanged, only
@@ -62,9 +66,24 @@ from repro.core.index import ScanIndex
 from repro.core import similarity as sim_mod
 
 
+MAX_VERTEX_ID = 2 ** 31 - 1   # the packed (u, v) merge key is one int64
+
+
 def _pack(u: np.ndarray, v: np.ndarray) -> np.ndarray:
-    """Order-preserving (u, v) → int64 key (ids must fit in 31 bits)."""
+    """Order-preserving (u, v) → int64 key. Ids must fit in 31 bits —
+    enforced at :meth:`EdgeDelta.make` / ``from_edge_list`` (a wider id
+    would silently collide keys and corrupt the CO merge)."""
     return (u.astype(np.int64) << 32) | v.astype(np.int64)
+
+
+def _check_id_width(*arrays) -> None:
+    """Reject vertex ids the packed int64 edit keys cannot represent."""
+    for a in arrays:
+        if len(a) and int(np.max(a)) > MAX_VERTEX_ID:
+            raise ValueError(
+                f"vertex id {int(np.max(a))} exceeds {MAX_VERTEX_ID} "
+                "(2**31 - 1): ids must fit in 31 bits for the packed "
+                "edit-merge keys")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +112,7 @@ class EdgeDelta:
                          dtype=np.int64).reshape(-1, 2)
         dels = np.asarray(deletes if deletes is not None else [],
                           dtype=np.int64).reshape(-1, 2)
+        _check_id_width(ins.reshape(-1), dels.reshape(-1))
         if weights is None:
             w = np.ones(len(ins), dtype=np.float32)
         else:
@@ -144,6 +164,8 @@ class UpdateInfo:
     n_frontier: int        # half-edges whose σ was recomputed
     n_affected_rows: int   # NO rows re-sorted (touched ∪ their neighbors)
     n_sim_groups: int      # degree-class kernel groups the frontier ran
+    n_plan_rows: int = 0   # block tile rows SimilarityPlan.apply rewrote
+    n_plan_classes: int = 0  # class blocks not reused (patched/remapped/built)
 
 
 def _edit_edge_set(g: CSRGraph, delta: EdgeDelta):
@@ -312,6 +334,15 @@ def apply_delta(
     frontier = (touched_mask[eu2] | touched_mask[ev2]) if g2.m2 else \
         np.zeros(0, dtype=bool)
 
+    # ---- bucketed plan: patch the live blocks, never rebuild O(m) ----
+    # The predecessor plan (cached per live graph; built once if this is
+    # the first delta against a cold graph) is maintained block-patch-wise
+    # and seeded into the cache for g2 — construction work per batch is
+    # proportional to touched rows/classes.
+    plan2 = sim_mod.adopt_plan(
+        g2, sim_mod.plan_for(g).apply(g2, touched))
+    pstats = plan2.last_apply
+
     # ---- σ: carry unchanged edges, recompute the frontier ----
     # Per-edge kernel widths are local degree classes, so an edit can never
     # invalidate a carried σ bit pattern: only the frontier's own degree
@@ -325,13 +356,11 @@ def apply_delta(
             np.searchsorted(hk_old, hk_new)]
     n_frontier = int(frontier.sum())
     if n_frontier:
-        fr = sim_mod.edge_similarities_subset(
-            g2, jnp.asarray(eu2[frontier]), jnp.asarray(ev2[frontier]),
-            jnp.asarray(np.asarray(g2.wgts)[frontier]), measure)
+        fr = plan2.edge_sims(
+            eu2[frontier], ev2[frontier],
+            np.asarray(g2.wgts)[frontier], measure)
         sims2[frontier] = np.clip(np.asarray(fr), 0.0, 1.0)
-        # edge_similarities_subset just routed this exact frontier; read the
-        # group count off its cached plan instead of routing a second time
-        n_sim_groups = sim_mod.plan_for(g2).last_groups
+        n_sim_groups = plan2.last_groups
 
     # ---- NO repair ----
     aff_mask = touched_mask.copy()
@@ -387,5 +416,8 @@ def apply_delta(
     info = UpdateInfo(
         n_inserted=n_ins, n_deleted=n_del, n_touched=len(touched),
         n_frontier=n_frontier, n_affected_rows=int(aff_mask.sum()),
-        n_sim_groups=n_sim_groups)
+        n_sim_groups=n_sim_groups,
+        n_plan_rows=pstats["rows_written"],
+        n_plan_classes=(pstats["patched"] + pstats["remapped"]
+                       + pstats["built"]))
     return new_index, g2, info

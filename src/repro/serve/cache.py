@@ -17,6 +17,7 @@ The cache stores host-side results (numpy), so hits never touch the device.
 """
 from __future__ import annotations
 
+import math
 from collections import OrderedDict
 from typing import Hashable, Optional, Tuple
 
@@ -169,15 +170,35 @@ def neighborhood(mu: int, eps: float, *,
     Users exploring SCAN parameters walk the grid locally — the next request
     after (μ, ε) is overwhelmingly (μ±1, ε) or (μ, ε±step). These are the
     settings the engine pre-warms into otherwise-wasted padding slots of the
-    fixed-shape device batch. Candidates are quantized like real requests
-    and clipped to the valid domain (μ ≥ 2, ε ∈ [0, 1])."""
+    fixed-shape device batch.
+
+    Every candidate is **clamped to the valid query domain** (μ ≥ 2,
+    ε ∈ [0, 1]) and deduplicated *after* the clamp — candidates that fall
+    outside the domain (or collapse onto the observed setting, or onto
+    each other, once clamped) would burn padding slots computing queries
+    no client can ever hit. A non-finite observed ε yields no candidates
+    at all (NaN survives min/max clamping)."""
+    mu = int(mu)
+    eps = float(eps)
+    if not math.isfinite(eps):
+        return []
+    # clamp before any quantization: quantize_eps on a huge finite ε
+    # overflows round() (ε/quantum → inf), and an out-of-domain observed
+    # value should anchor the neighborhood at the domain edge anyway
+    eps = min(max(eps, 0.0), 1.0)
+    observed = {(mu, quantize_eps(eps, quantum))}
     out = []
     for cand_mu, cand_eps in ((mu + 1, eps), (mu - 1, eps),
                               (mu, eps + eps_step), (mu, eps - eps_step)):
-        if cand_mu < 2:
+        if cand_mu < 2 or not math.isfinite(cand_eps):
             continue
-        cand = (int(cand_mu),
-                quantize_eps(min(max(cand_eps, 0.0), 1.0), quantum))
-        if cand != (mu, quantize_eps(eps, quantum)) and cand not in out:
+        eps_q = quantize_eps(min(max(cand_eps, 0.0), 1.0), quantum)
+        if not 0.0 <= eps_q <= 1.0:
+            # a quantum that doesn't divide 1 can snap the clamped value
+            # back out of the domain (e.g. quantize(1.0, 0.15) = 1.05);
+            # such a grid point is unservable in range — drop it
+            continue
+        cand = (int(cand_mu), eps_q)
+        if cand not in observed and cand not in out:
             out.append(cand)
     return out

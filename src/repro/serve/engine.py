@@ -47,12 +47,18 @@ Throughput mechanics (unchanged from the single-index engine):
 
 The device call runs inline on the event loop: it is the serial resource
 being scheduled, and everything else the loop does (queueing, cache hits)
-is microseconds. Results are host-side numpy ``ClusterResult``s.
+is microseconds. Results are host-side numpy ``ClusterResult``s. Index
+*maintenance* is the opposite case — ``apply_delta`` takes tens of
+milliseconds and is not the resource queries wait on — so the engine
+exposes a single-worker ``offload_executor()`` that ``LiveIndexService``
+uses to apply + log deltas off the loop: collector flushes proceed during
+an in-flight apply, and apply latency never shows up in query tails.
 """
 from __future__ import annotations
 
 import asyncio
 import dataclasses
+from concurrent.futures import ThreadPoolExecutor
 from typing import Optional
 
 import numpy as np
@@ -100,6 +106,7 @@ class MicroBatchEngine:
         self._indexes: dict[str, tuple[ScanIndex, CSRGraph]] = {}
         self._queue: asyncio.Queue = asyncio.Queue()
         self._task: Optional[asyncio.Task] = None
+        self._offload: Optional[ThreadPoolExecutor] = None
         self._mesh = None
         self._shard_plans: dict = {}   # fingerprint → ShardedQueryPlan
         self.stats = {"requests": 0, "batches": 0, "device_queries": 0,
@@ -178,6 +185,38 @@ class MicroBatchEngine:
             self._queue.put_nowait(None)
             await self._task
             self._task = None
+        if self._offload is not None:
+            # wait out an in-flight off-loop apply (a torn maintenance job
+            # must not outlive the engine it feeds) — but wait *off* the
+            # loop: a synchronous shutdown(wait=True) would freeze every
+            # other coroutine for the duration of the apply
+            offload, self._offload = self._offload, None
+            await asyncio.get_running_loop().run_in_executor(
+                None, lambda: offload.shutdown(wait=True))
+
+    @property
+    def is_running(self) -> bool:
+        """Whether the collector task is alive (the engine serves queries
+        and may accept maintenance work)."""
+        return self._task is not None
+
+    def offload_executor(self) -> ThreadPoolExecutor:
+        """Single-worker executor for blocking index-maintenance jobs
+        (``LiveIndexService`` runs ``apply_delta`` + delta logging here so
+        the collector loop never stalls behind an apply). One worker keeps
+        maintenance serial; the loop thread stays free for flushes, which
+        is the whole point of taking applies off the event loop."""
+        if not self.is_running:
+            # stop() shut the previous executor down; lazily resurrecting
+            # one here would leak its thread and absorb maintenance into
+            # an engine whose collector will never serve the result
+            raise RuntimeError(
+                "engine is not running: start() it before scheduling "
+                "maintenance work")
+        if self._offload is None:
+            self._offload = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="index-apply")
+        return self._offload
 
     async def drain(self) -> None:
         """Resolve once every request enqueued *before* this call has been

@@ -10,17 +10,22 @@ Update protocol (per named index):
 
   1. ``apply_delta`` maintains the index incrementally (bit-identical to a
      rebuild — see ``repro.core.update``); the old (index, graph) pair is
-     untouched.
+     untouched. The apply runs **off the event loop** (the engine's
+     single-worker ``offload_executor()``), so the collector keeps
+     flushing query batches while the delta is being absorbed — apply
+     latency never appears in query tail latency.
   2. The delta is appended to the on-disk chain
      (:class:`~repro.serve.store.DeltaLog`) *before* the swap — a crash
      after the append replays the delta on restart; a crash during it
      leaves an ignorable ``.tmp`` and the previous version restorable.
+     (The append happens in the same worker job as the apply.)
   3. The new index registers with the engine under its new content
-     fingerprint (in sharded mode, via ``ShardedQueryPlan.refresh`` so
-     only mutated partitions of the O(m) operands are re-placed on
-     device), then the name's route flips in one assignment — queries
-     that already resolved the old fingerprint keep hitting the old
-     index, new queries hit the new one, and *nobody* sees a mix.
+     fingerprint (in sharded mode, via ``ShardedQueryPlan.refresh`` —
+     also run in the worker — so only mutated partitions of the O(m)
+     operands are re-placed on device), then the name's route flips in
+     one assignment *on the loop* — queries that already resolved the old
+     fingerprint keep hitting the old index, new queries hit the new one,
+     and *nobody* sees a mix.
   4. ``engine.drain()`` barriers until every in-flight request has been
      answered, then the old fingerprint unregisters — which also drops
      exactly its cache partition (sibling indexes keep their hit rates;
@@ -29,14 +34,16 @@ Update protocol (per named index):
      index, which re-warms their (μ±1, ε±δ) neighborhood through the
      engine's padding-slot warming.
   6. Every ``compact_every`` deltas the live index is saved as a full
-     snapshot (version = delta seq) and the covered chain prefix is
-     pruned; restore = latest snapshot + replay of the strictly-newer
-     tail, fingerprint-verified step by step.
+     snapshot (version = delta seq, written in the offload worker — the
+     O(m) disk write never stalls the collector either) and the covered
+     chain prefix is pruned; restore = latest snapshot + replay of the
+     strictly-newer tail, fingerprint-verified step by step.
 """
 from __future__ import annotations
 
 import asyncio
 import dataclasses
+import logging
 from collections import OrderedDict
 from typing import Dict, List, Optional
 
@@ -47,6 +54,16 @@ from repro.core.update import EdgeDelta, UpdateInfo, apply_delta
 from repro.serve.cache import quantize_eps
 from repro.serve.engine import EngineConfig, MicroBatchEngine
 from repro.serve.store import DeltaLog, IndexCatalog, index_fingerprint
+
+
+def _log_abandoned_apply(task) -> None:
+    """Surface the outcome of an apply whose caller cancelled mid-commit."""
+    if task.cancelled():
+        return
+    exc = task.exception()
+    if exc is not None:
+        logging.getLogger(__name__).error(
+            "abandoned live-index apply failed: %r", exc)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +98,7 @@ class LiveIndexService:
         self._live: Dict[str, _Live] = {}
         self._observed: Dict[str, OrderedDict] = {}
         self._locks: Dict[str, asyncio.Lock] = {}
+        self._pending: set = set()   # in-flight (possibly abandoned) applies
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -90,6 +108,12 @@ class LiveIndexService:
         return self
 
     async def __aexit__(self, *exc) -> None:
+        # a cancellation-shielded apply may have outlived its caller; its
+        # swap continuation must finish *before* the engine stops, or it
+        # would register into (and re-warm against) a dead router
+        while self._pending:
+            await asyncio.gather(*tuple(self._pending),
+                                 return_exceptions=True)
         await self.engine.stop()
 
     def names(self) -> List[str]:
@@ -204,24 +228,72 @@ class LiveIndexService:
     # updates
     # ------------------------------------------------------------------
     async def apply(self, name: str, delta: EdgeDelta) -> UpdateInfo:
-        """Apply one edit batch to ``name`` and hot-swap the result in."""
+        """Apply one edit batch to ``name`` and hot-swap the result in.
+
+        The expensive, loop-irrelevant work — ``apply_delta``, the content
+        fingerprint, the crash-safe ``DeltaLog`` append, and (in sharded
+        mode) the mutated-partition-only ``ShardedQueryPlan.refresh`` —
+        runs in the engine's offload worker, so the collector keeps
+        flushing query batches against the *old* index for the whole
+        duration. Only the swap itself (register, route flip, drain,
+        unregister, re-warm) runs on the event loop.
+
+        An apply is a *commit*: the whole sequence is shielded from
+        caller cancellation (e.g. ``asyncio.wait_for`` timeouts), because
+        the executor job cannot be interrupted once launched — abandoning
+        the coroutine mid-way would leave the on-disk delta chain one
+        committed entry ahead of the served in-memory state (and a
+        successor apply would silently reuse its sequence number). The
+        caller still observes ``CancelledError``; the swap completes in
+        the background regardless (``__aexit__`` waits for abandoned
+        applies before stopping the engine).
+        """
+        task = asyncio.ensure_future(self._apply_locked(name, delta))
+        self._pending.add(task)
+        task.add_done_callback(self._pending.discard)
+        try:
+            return await asyncio.shield(task)
+        except asyncio.CancelledError:
+            # the caller walked away from a commit in flight — its
+            # eventual outcome must not vanish (a failure would otherwise
+            # surface only as a gc-time 'never retrieved' warning);
+            # callers that kept awaiting get the exception via the shield
+            # and are responsible for it themselves
+            task.add_done_callback(_log_abandoned_apply)
+            raise
+
+    async def _apply_locked(self, name: str, delta: EdgeDelta) -> UpdateInfo:
         lock = self._locks.setdefault(name, asyncio.Lock())
         async with lock:
             live = self._live[name]
-            new_index, new_g, info = apply_delta(
-                live.index, live.g, delta, self.measure)
-            new_fp = index_fingerprint(new_index, new_g)
             seq = live.seq + 1
-            DeltaLog(self.catalog.store(name).directory).append(
-                seq, delta, new_fp)
+            log_dir = self.catalog.store(name).directory
 
-            if new_fp != live.fp:
+            def _absorb():
+                new_index, new_g, info = apply_delta(
+                    live.index, live.g, delta, self.measure)
+                new_fp = index_fingerprint(new_index, new_g)
                 shard_plan = None
+                # look the predecessor plan up *here*, not before the
+                # worker started: the collector may lazily build it for
+                # the old fingerprint while this apply is in flight
                 old_plan = self.engine._shard_plans.get(live.fp)
-                if old_plan is not None:
+                if old_plan is not None and new_fp != live.fp:
                     # re-shard only the mutated partitions; the old plan
                     # stays intact for in-flight traffic until the drain
                     shard_plan = old_plan.refresh(new_index, new_g)
+                # commit to the chain *last*: a failure anywhere above
+                # must not leave the on-disk log ahead of served state
+                # (the next apply would reuse this sequence number)
+                DeltaLog(log_dir).append(seq, delta, new_fp)
+                return new_index, new_g, info, new_fp, shard_plan
+
+            loop = asyncio.get_running_loop()
+            new_index, new_g, info, new_fp, shard_plan = \
+                await loop.run_in_executor(
+                    self.engine.offload_executor(), _absorb)
+
+            if new_fp != live.fp:
                 self.engine.register(new_index, new_g, fingerprint=new_fp,
                                      shard_plan=shard_plan)
             self._live[name] = dataclasses.replace(
@@ -233,13 +305,21 @@ class LiveIndexService:
                     self.engine.unregister(live.fp)
                 await self._rewarm(name)
             if seq - self._live[name].snapshot_seq >= self.compact_every:
-                self.compact(name)
+                # the O(m) snapshot write is disk work on an immutable
+                # (index, graph) pair — it belongs in the worker too, not
+                # on the loop stalling the collector
+                await loop.run_in_executor(
+                    self.engine.offload_executor(), self.compact, name)
             return info
 
     async def _rewarm(self, name: str) -> None:
         """Re-issue the recently observed settings against the fresh
         index — the engine's padding-slot warming re-warms their
         (μ±1, ε±δ) neighborhood as a side effect."""
+        if not self.engine.is_running:
+            # engine already stopped (an abandoned apply finishing late):
+            # warming would auto-start a collector on a dying loop
+            return
         fp = self._live[name].fp
         obs = list(self._observed.get(name, ()))
         if obs:

@@ -1,0 +1,31 @@
+"""Shared oracle helper: array-for-array SimilarityPlan equality.
+
+Used by the plan-maintenance unit tests (tests/test_plan_apply.py) and the
+edit-script index oracle (tests/test_incremental_index.py) — the invariant
+is the same in both: a maintained plan is bit-identical to a from-scratch
+``SimilarityPlan.build`` on the same graph.
+"""
+import numpy as np
+
+
+def assert_plan_equal(plan, ref, tag=""):
+    """Array-for-array equality, norms compared bitwise (uint32 views)."""
+    assert plan.widths == ref.widths, (tag, plan.widths, ref.widths)
+    assert (plan.n, plan.m2, plan.hub_tile) == \
+        (ref.n, ref.m2, ref.hub_tile), tag
+    for f in ("vclass", "vrow", "vtiles", "deg"):
+        a, b = getattr(plan, f), getattr(ref, f)
+        assert a.dtype == b.dtype, (tag, f)
+        np.testing.assert_array_equal(a, b, err_msg=f"{tag} {f}")
+    for i, w in enumerate(plan.widths):
+        np.testing.assert_array_equal(
+            np.asarray(plan.nbr_blocks[i]), np.asarray(ref.nbr_blocks[i]),
+            err_msg=f"{tag} nbr_blocks[{w}]")
+        np.testing.assert_array_equal(
+            np.asarray(plan.wgt_blocks[i]), np.asarray(ref.wgt_blocks[i]),
+            err_msg=f"{tag} wgt_blocks[{w}]")
+    np.testing.assert_array_equal(
+        np.asarray(plan.norms).view(np.uint32),
+        np.asarray(ref.norms).view(np.uint32), err_msg=f"{tag} norms")
+    np.testing.assert_array_equal(
+        np.asarray(plan.cdeg), np.asarray(ref.cdeg), err_msg=f"{tag} cdeg")

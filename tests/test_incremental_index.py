@@ -16,11 +16,17 @@ Two generators drive the oracle:
   * hypothesis-generated random scripts (run when hypothesis is installed
     — CI's fast lane, with the seed-pinned profile from conftest).
 """
+import gc
+
 import numpy as np
 import pytest
 
 from repro.core import (EdgeDelta, apply_delta, build_index, from_edge_list,
                         query_batch, random_graph)
+from repro.core import similarity as sim_mod
+from repro.core.similarity import SimilarityPlan
+
+from _plan_oracle import assert_plan_equal
 
 try:
     import hypothesis
@@ -59,6 +65,12 @@ def assert_bit_identical(idx, g, idx_ref, g_ref, tag=""):
         np.testing.assert_array_equal(a, b, err_msg=f"{tag} index.{f}")
     assert (idx.n, idx.m2c, idx.max_cdeg) == \
         (idx_ref.n, idx_ref.m2c, idx_ref.max_cdeg), tag
+    # the incrementally maintained similarity plan (seeded into the cache
+    # by apply_delta) must equal a from-scratch build array-for-array too —
+    # blocks, routing tables, norms, every bit
+    maintained = sim_mod.cached_plan(g)
+    assert maintained is not None, (tag, "apply_delta must seed the plan")
+    assert_plan_equal(maintained, SimilarityPlan.build(g), f"{tag} plan")
 
 
 def assert_queries_identical(idx, g, idx_ref, g_ref, tag=""):
@@ -177,6 +189,7 @@ def test_random_scripts_thorough():
     """Slow-lane soak: bigger graphs, longer scripts, larger batches, and
     query-grid equality after EVERY step (the fast lane checks queries at
     script checkpoints only)."""
+    base = sim_mod.plan_cache_size()   # other modules' live graphs cache too
     for seed in range(3):
         n = 80 + 40 * seed
         rng = np.random.default_rng(100 + seed)
@@ -197,6 +210,13 @@ def test_random_scripts_thorough():
             tag = f"thorough seed={seed} step={step}"
             assert_bit_identical(idx, g, idx_ref, g_ref, tag)
             assert_queries_identical(idx, g, idx_ref, g_ref, tag)
+            # soak guard: repeated deltas must not regrow device memory —
+            # dead graphs' plan-cache entries die with their graphs, so
+            # beyond the pre-test baseline only the live graph and this
+            # step's rebuild reference may remain
+            gc.collect()
+            assert sim_mod.plan_cache_size() <= base + 2, \
+                f"{tag}: plan cache regrew to {sim_mod.plan_cache_size()}"
 
 
 def test_degree_growth_never_triggers_full_resim():
@@ -275,6 +295,22 @@ def test_out_of_range_endpoints_rejected():
         apply_delta(idx, g, EdgeDelta.make(inserts=[(-1, 5)]))
     with pytest.raises(ValueError):
         apply_delta(idx, g, EdgeDelta.make(deletes=[(-2, 4)]))
+
+
+def test_vertex_ids_beyond_31_bits_rejected():
+    """Regression: ids past 31 bits silently collided the packed (u, v)
+    merge keys (u << 32 | v in one int64) and corrupted the CO merge —
+    they must be rejected with a clear error at delta/graph creation."""
+    with pytest.raises(ValueError, match="31 bits"):
+        EdgeDelta.make(inserts=[(0, 2 ** 31)])
+    with pytest.raises(ValueError, match="31 bits"):
+        EdgeDelta.make(deletes=[(2 ** 31 + 5, 3)])
+    with pytest.raises(ValueError, match="31 bits"):
+        from_edge_list(2 ** 31 + 2, [(0, 1)])
+    # the widest representable id is fine (no allocation at this size —
+    # validation only; the delta never meets a graph here)
+    d = EdgeDelta.make(inserts=[(0, 2 ** 31 - 1)])
+    assert len(d) == 1
 
 
 # --------------------------------------------------------------------------

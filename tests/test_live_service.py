@@ -7,6 +7,7 @@ mutated-partition-only shard-plan refresh."""
 import asyncio
 import os
 import shutil
+import threading
 
 import numpy as np
 import pytest
@@ -50,24 +51,28 @@ def test_hot_swap_serves_old_or_new_never_mixed(tmp_path):
     async def main():
         async with svc:
             tasks = []
+            apply_task = None
             for round_ in range(6):
                 for mu, eps in settings:
                     tasks.append(asyncio.ensure_future(
                         svc.query("web", mu, eps)))
                 if round_ == 2:
-                    tasks.append(asyncio.ensure_future(
-                        svc.apply("web", delta)))
+                    apply_task = asyncio.ensure_future(
+                        svc.apply("web", delta))
                 await asyncio.sleep(0)
-            return await asyncio.gather(*tasks), tasks
+            racing = await asyncio.gather(*tasks)
+            await apply_task
+            # the apply runs off the event loop now, so racing queries may
+            # all have resolved against the old index; queries issued after
+            # the awaited swap must see the new one
+            post = await asyncio.gather(
+                *[svc.query("web", mu, eps) for mu, eps in settings])
+            return racing, post
 
-    outs, _ = asyncio.run(main())
+    racing, post = asyncio.run(main())
     n_old = n_new = 0
-    qi = 0
-    for out in outs:
-        if not hasattr(out, "labels"):
-            continue                       # the apply() result
+    for qi, out in enumerate(racing):
         mu, eps = settings[qi % len(settings)]
-        qi += 1
         old_ref, new_ref = refs[(mu, eps)]
         got = np.asarray(out.labels)
         if np.array_equal(got, old_ref):
@@ -77,8 +82,11 @@ def test_hot_swap_serves_old_or_new_never_mixed(tmp_path):
         else:
             raise AssertionError(
                 f"({mu}, {eps}) matched neither old nor new index")
-    assert n_old + n_new == qi
-    assert n_new > 0, "post-swap queries must see the new index"
+    assert n_old + n_new == len(racing)
+    for (mu, eps), out in zip(settings, post):
+        np.testing.assert_array_equal(
+            np.asarray(out.labels), refs[(mu, eps)][1],
+            err_msg=f"post-swap ({mu}, {eps}) must see the new index")
 
 
 def test_noop_delta_keeps_fingerprint_and_cache(tmp_path):
@@ -129,6 +137,109 @@ def test_cancelled_drain_waiter_does_not_kill_collector(tmp_path):
     live = svc._live["web"]
     ref = query(live.index, live.g, 2, 0.5)
     np.testing.assert_array_equal(out.labels, np.asarray(ref.labels))
+
+
+def test_collector_flushes_during_in_flight_apply(tmp_path, monkeypatch):
+    """The tentpole property of off-loop application: while an apply is
+    blocked in the worker, the collector must keep answering queries on
+    the event loop — apply latency never appears in query tails."""
+    import repro.serve.live as live_mod
+
+    svc = _service(tmp_path)
+    g = _graph()
+    svc.create("web", g)
+    entered = threading.Event()
+    gate = threading.Event()
+    real_apply = live_mod.apply_delta
+
+    def gated_apply(*args, **kwargs):
+        entered.set()
+        assert gate.wait(30), "test gate never opened"
+        return real_apply(*args, **kwargs)
+
+    monkeypatch.setattr(live_mod, "apply_delta", gated_apply)
+    delta = EdgeDelta.make(inserts=[(0, 30), (1, 45)], weights=[0.9, 0.8])
+
+    async def main():
+        async with svc:
+            apply_task = asyncio.ensure_future(svc.apply("web", delta))
+            while not entered.is_set():        # worker holds the apply now
+                await asyncio.sleep(0.005)
+            # queries must flush while the apply is parked in the worker
+            answers = []
+            for mu, eps in ((2, 0.3), (3, 0.5), (2, 0.7)):
+                answers.append(await asyncio.wait_for(
+                    svc.query("web", mu, eps), timeout=10))
+            assert not apply_task.done(), \
+                "apply finished before the gate opened — it ran inline"
+            gate.set()
+            info = await apply_task
+            return answers, info
+
+    answers, info = asyncio.run(main())
+    assert info.n_inserted == 2
+    # the queries that raced the apply answered against the old index
+    for (mu, eps), out in zip(((2, 0.3), (3, 0.5), (2, 0.7)), answers):
+        ref = query(build_index(g, "cosine"), g, mu, eps)
+        np.testing.assert_array_equal(out.labels, np.asarray(ref.labels))
+    # and the swap completed once the worker finished
+    live = svc._live["web"]
+    assert live.seq == 1
+    assert live.g.m == g.m + 2
+
+
+def test_cancelled_apply_still_commits_consistently(tmp_path, monkeypatch):
+    """An apply is a commit: cancelling the caller (wait_for timeout)
+    while the worker holds the delta must not leave the on-disk chain one
+    entry ahead of the served state — the shielded swap completes in the
+    background and the next apply gets the next sequence number."""
+    import repro.serve.live as live_mod
+
+    svc = _service(tmp_path)
+    g = _graph()
+    svc.create("web", g)
+    entered = threading.Event()
+    gate = threading.Event()
+    real_apply = live_mod.apply_delta
+
+    def gated_apply(*args, **kwargs):
+        entered.set()
+        assert gate.wait(30), "test gate never opened"
+        return real_apply(*args, **kwargs)
+
+    monkeypatch.setattr(live_mod, "apply_delta", gated_apply)
+    eu, ev = np.asarray(g.edge_u), np.asarray(g.nbrs)
+    pair = next((0, v) for v in range(1, g.n)
+                if not np.any((eu == 0) & (ev == v)))
+    delta = EdgeDelta.make(inserts=[pair], weights=[0.9])
+
+    async def main():
+        async with svc:
+            task = asyncio.ensure_future(svc.apply("web", delta))
+            while not entered.is_set():
+                await asyncio.sleep(0.005)
+            task.cancel()                  # caller gives up mid-worker
+            with pytest.raises(asyncio.CancelledError):
+                await task
+            gate.set()
+            # exit immediately: __aexit__ must wait out the abandoned
+            # apply before stopping the engine (no swap against a dead
+            # router, no resurrected collector)
+        assert svc._live["web"].seq == 1
+
+    asyncio.run(main())
+
+    async def followup():
+        async with svc:                    # engine restarts cleanly
+            monkeypatch.setattr(live_mod, "apply_delta", real_apply)
+            await svc.apply("web", EdgeDelta.make(deletes=[pair]))
+
+    asyncio.run(followup())
+    # served state and chain agree: two committed entries, no seq reuse
+    log = DeltaLog(os.path.join(str(tmp_path), "web"))
+    assert log.sequences() == [1, 2]
+    assert svc._live["web"].seq == 2
+    assert svc._live["web"].g.m == g.m     # insert then delete → back
 
 
 def test_measure_mismatch_rejected_on_load(tmp_path):

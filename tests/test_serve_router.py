@@ -239,6 +239,41 @@ def test_neighborhood_candidates():
     assert all(0.0 <= e <= 1.0 for _, e in neighborhood(2, 1.0))
 
 
+def test_neighborhood_clamps_and_dedups():
+    """Regression: every candidate must land inside the valid query domain
+    (μ ≥ 2, ε ∈ [0, 1]) and be unique *after* clamping — out-of-range or
+    colliding candidates would burn warming slots on queries no client
+    can issue."""
+    for mu, eps, step in ((2, 0.0, 0.05), (2, 1.0, 0.05), (5, 0.98, 0.05),
+                          (3, 0.02, 0.05), (2, 0.5, 0.9), (4, 1.5, 0.05),
+                          (7, -0.3, 0.05), (2, 0.5, 2.0)):
+        cands = neighborhood(mu, eps, eps_step=step)
+        assert all(m >= 2 for m, _ in cands), (mu, eps, step, cands)
+        assert all(0.0 <= e <= 1.0 for _, e in cands), (mu, eps, step, cands)
+        assert len(cands) == len(set(cands)), (mu, eps, step, cands)
+    # a big step clamps both ε neighbors onto the boundary pair — they must
+    # collapse to single candidates, not duplicate entries
+    cands = neighborhood(3, 0.5, eps_step=0.9)
+    assert sorted(cands) == [(2, 0.5), (3, 0.0), (3, 1.0), (4, 0.5)]
+    # an out-of-domain observed ε still yields clamped, deduped candidates
+    # that exclude the observed setting's clamp (the real request computes
+    # and caches its own key)
+    cands = neighborhood(4, 1.5, eps_step=0.05)
+    assert (4, 1.0) not in cands and len(cands) == len(set(cands))
+    # non-finite ε cannot produce candidates (NaN survives min/max clamps)
+    assert neighborhood(3, float("nan")) == []
+    assert neighborhood(3, float("inf")) == []
+    assert neighborhood(3, float("-inf")) == []
+    # huge-but-finite ε must not overflow quantization (ε/quantum → inf
+    # inside round()); it anchors at the domain edge like any clamp
+    cands = neighborhood(3, 1.7e308, eps_step=0.05, quantum=1e-9)
+    assert cands and all(0.0 <= e <= 1.0 for _, e in cands), cands
+    # a quantum that doesn't divide 1 must not snap a clamped candidate
+    # back out of the domain (quantize(1.0, 0.15) = 1.05 — dropped)
+    cands = neighborhood(3, 0.95, eps_step=0.1, quantum=0.15)
+    assert cands and all(0.0 <= e <= 1.0 for _, e in cands), cands
+
+
 def test_warming_turns_neighbor_queries_into_cache_hits():
     """Padding slots precompute the (μ±1, ε±δ) neighborhood, so a client
     walking the parameter grid gets its next answer without a device call."""
