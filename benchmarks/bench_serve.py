@@ -16,20 +16,61 @@ Cross-graph sections:
     ONE engine (per-index buckets + cache partitions);
   * ``router_walk``  — grid-walking traffic, where sweep-ahead warming
     turns neighbor requests into cache hits.
+
+Engine/router rows carry p50/p90/p99 queue-wait and end-to-end latency
+columns read from the engine's own ``repro.obs`` histograms
+(``engine.queue_wait`` / ``engine.e2e``), with :func:`hist_delta`
+isolating each traffic wave out of the cumulative counts. The full row
+set is committed at the repo root as ``BENCH_serve.json`` (the
+``BENCH_update.json`` / ``BENCH_construction.json`` pattern).
 """
 from __future__ import annotations
 
 import asyncio
+import pathlib
 import time
 
 import numpy as np
 
 from repro.core import build_index, query, query_batch
+from repro.obs import hist_delta, hist_quantile
 from repro.serve import EngineConfig, MicroBatchEngine
-from benchmarks.common import load_graph, timeit, emit
+from benchmarks.common import load_graph, timeit, emit, write_snapshot
 
 GRID_MUS = (2, 3, 4, 5)
 GRID_EPS = (0.2, 0.4, 0.6, 0.8)
+
+SNAPSHOT = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serve.json"
+
+_LAT_HISTS = (("engine.e2e", "e2e"), ("engine.queue_wait", "wait"))
+
+
+def _hists(engine) -> dict:
+    """Current latency-histogram snapshots from the engine's registry."""
+    return engine.registry.snapshot()["histograms"]
+
+
+def _wave(now: dict, before: dict) -> dict:
+    """Latency histograms for one traffic wave: ``now - before``."""
+    out = {}
+    for key, _ in _LAT_HISTS:
+        if key in now:
+            out[key] = (hist_delta(now[key], before[key])
+                        if key in before else now[key])
+    return out
+
+
+def _lat_cols(wave: dict) -> str:
+    """Derived columns ``e2e_p50_ms=…;…;wait_p99_ms=…`` for one wave."""
+    parts = []
+    for key, label in _LAT_HISTS:
+        snap = wave.get(key)
+        if not snap or not snap["count"]:
+            continue
+        for q, ql in ((0.5, "p50"), (0.9, "p90"), (0.99, "p99")):
+            parts.append(
+                f"{label}_{ql}_ms={hist_quantile(snap, q) * 1e3:.3f}")
+    return ";".join(parts)
 
 
 def run():
@@ -87,6 +128,7 @@ def run():
             engine = MicroBatchEngine(idx, g, config=cfg)
             async with engine:
                 await engine.query(*pool[0])          # compile warmup
+                base = _hists(engine)
                 t0 = time.time()
                 rng = np.random.default_rng(0)
 
@@ -97,22 +139,27 @@ def run():
 
                 await asyncio.gather(*[client() for _ in range(n_clients)])
                 dt = time.time() - t0
+                after_cold = _hists(engine)
                 # fully-cached second wave
                 t1 = time.time()
                 await asyncio.gather(*[client() for _ in range(n_clients)])
                 dt_hot = time.time() - t1
-            return dt, dt_hot, engine.batch_stats()
+                after_hot = _hists(engine)
+            return (dt, dt_hot, engine.batch_stats(),
+                    _wave(after_cold, base), _wave(after_hot, after_cold))
 
         n_clients, n_requests = 8, 16
-        dt, dt_hot, st = asyncio.run(traffic(n_clients, n_requests))
+        dt, dt_hot, st, cold_lat, hot_lat = asyncio.run(
+            traffic(n_clients, n_requests))
         total = n_clients * n_requests
         lines.append(emit(
             f"serve/engine_cold/{gname}/clients={n_clients}", dt / total,
             f"qps={total / dt:.1f};device_calls={st['device_queries']};"
-            f"avg_batch={st['avg_batch']:.1f}"))
+            f"avg_batch={st['avg_batch']:.1f};{_lat_cols(cold_lat)}"))
         lines.append(emit(
             f"serve/engine_cached/{gname}/clients={n_clients}", dt_hot / total,
-            f"qps={total / dt_hot:.1f};hit_rate={st['cache_hit_rate']:.2f}"))
+            f"qps={total / dt_hot:.1f};hit_rate={st['cache_hit_rate']:.2f};"
+            f"{_lat_cols(hot_lat)}"))
 
     # ---- multi-index router: both indexes behind one engine ----
     cfg = EngineConfig(max_batch=16, flush_ms=2.0)
@@ -124,6 +171,7 @@ def run():
         async with engine:
             for fp in fps:                            # compile warmup
                 await engine.query(*pool[0], fingerprint=fp)
+            base = _hists(engine)
             rng = np.random.default_rng(1)
             t0 = time.time()
 
@@ -135,16 +183,17 @@ def run():
                     await asyncio.sleep(0)
 
             await asyncio.gather(*[client() for _ in range(n_clients)])
-            return time.time() - t0, engine.batch_stats()
+            return (time.time() - t0, engine.batch_stats(),
+                    _wave(_hists(engine), base))
 
     n_clients, n_requests = 8, 16
-    dt, st = asyncio.run(router_traffic(n_clients, n_requests))
+    dt, st, rt_lat = asyncio.run(router_traffic(n_clients, n_requests))
     total = n_clients * n_requests
     lines.append(emit(
         f"serve/router/indexes={len(fps)}/clients={n_clients}", dt / total,
         f"qps={total / dt:.1f};device_calls={st['device_queries']};"
         f"buckets={st['batches']};warmed={st['warmed']};"
-        f"partitions={st['cache_partitions']}"))
+        f"partitions={st['cache_partitions']};{_lat_cols(rt_lat)}"))
 
     # ---- grid-walking clients: warming converts neighbors to hits ----
     walk_engine = MicroBatchEngine(config=EngineConfig(
@@ -155,6 +204,7 @@ def run():
         async with walk_engine:
             for fp in wfps:
                 await walk_engine.query(3, 0.5, fingerprint=fp)
+            base = _hists(walk_engine)
             rng = np.random.default_rng(2)
             t0 = time.time()
 
@@ -169,12 +219,15 @@ def run():
                     await asyncio.sleep(0)
 
             await asyncio.gather(*[client(i) for i in range(n_clients)])
-            return time.time() - t0, walk_engine.batch_stats()
+            return (time.time() - t0, walk_engine.batch_stats(),
+                    _wave(_hists(walk_engine), base))
 
-    dt, st = asyncio.run(walk_traffic(8, 16))
+    dt, st, wk_lat = asyncio.run(walk_traffic(8, 16))
     total = 8 * 16
     lines.append(emit(
         f"serve/router_walk/indexes={len(wfps)}/clients=8", dt / total,
         f"qps={total / dt:.1f};hit_rate={st['cache_hit_rate']:.2f};"
-        f"warmed={st['warmed']};device_calls={st['device_queries']}"))
+        f"warmed={st['warmed']};device_calls={st['device_queries']};"
+        f"{_lat_cols(wk_lat)}"))
+    write_snapshot(SNAPSHOT, "serve", lines)
     return lines

@@ -19,6 +19,7 @@ from __future__ import annotations
 import functools
 import hashlib
 import os
+import time
 
 import jax
 import jax.numpy as jnp
@@ -313,16 +314,29 @@ class ShardedQueryPlan:
     handful of partitions, not all k). ``refresh`` is loop-free pure
     compute, so the live-update path runs it in the engine's offload
     worker alongside ``apply_delta``.
+
+    ``registry`` (a :class:`repro.obs.MetricsRegistry`) makes plan
+    maintenance measurable per shard: each per-device chunk placement is
+    timed into the ``sharded.place_chunk`` histogram (full-array initial
+    placements into ``sharded.place_full``), reused vs re-placed chunks
+    count into ``sharded.chunks_reused`` / ``sharded.chunks_placed``,
+    and the whole build/refresh lands in ``sharded.plan_build``. The
+    serve engine passes its registry through, so a hot-swap's refresh
+    cost shows up next to the query latency it protects.
     """
 
     _SHARDED = ("emask", "eu", "ev", "esim", "co_v", "co_t", "co_i")
 
     def __init__(self, index, g: CSRGraph, mesh: Mesh, axis: str = "data",
-                 *, _reuse_from: "ShardedQueryPlan | None" = None):
+                 *, registry=None,
+                 _reuse_from: "ShardedQueryPlan | None" = None):
+        t_build = time.monotonic()
         self.mesh = mesh
         self.axis = axis
         self.n = index.n
         self.max_cdeg = index.max_cdeg
+        self._registry = (registry if registry is not None
+                          else getattr(_reuse_from, "_registry", None))
         k = mesh.shape[axis]
         self._shard = NamedSharding(mesh, P(axis))
         repl = NamedSharding(mesh, P())
@@ -361,6 +375,11 @@ class ShardedQueryPlan:
         else:
             self.co_offsets = jax.device_put(index.co_offsets, repl)
         self.last_refresh = stats
+        if self._registry is not None:
+            self._registry.inc("sharded.chunks_reused", stats["reused"])
+            self._registry.inc("sharded.chunks_placed", stats["placed"])
+            self._registry.observe("sharded.plan_build",
+                                   time.monotonic() - t_build)
 
     def _place(self, name: str, host: np.ndarray,
                prev: "ShardedQueryPlan | None"):
@@ -377,7 +396,12 @@ class ShardedQueryPlan:
         self._chunk_digests[name] = (host.shape, digests)
         if (prev is None or prev.mesh is not self.mesh
                 or prev._chunk_digests[name][0] != host.shape):
-            return jax.device_put(jnp.asarray(host), self._shard), 0
+            t0 = time.monotonic()
+            arr = jax.device_put(jnp.asarray(host), self._shard)
+            if self._registry is not None:
+                self._registry.observe("sharded.place_full",
+                                       time.monotonic() - t0)
+            return arr, 0
         old_digests = prev._chunk_digests[name][1]
         old_arr = getattr(prev, name)
         by_start = {(s.index[0].start or 0): s.data
@@ -390,8 +414,14 @@ class ShardedQueryPlan:
                 bufs.append(by_start[lo])
                 reused += 1
             else:
+                t0 = time.monotonic()
                 bufs.append(jax.device_put(
                     jnp.asarray(host[lo: lo + chunk]), devices[i]))
+                if self._registry is not None:
+                    # one sample per re-placed shard chunk: the per-shard
+                    # cost of a hot-swap's operand refresh
+                    self._registry.observe("sharded.place_chunk",
+                                           time.monotonic() - t0)
         arr = jax.make_array_from_single_device_arrays(
             host.shape, self._shard, bufs)
         return arr, reused

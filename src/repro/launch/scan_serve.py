@@ -28,14 +28,60 @@ routing several indexes through one engine:
 ``--shards K`` forces K host-platform devices itself when jax would
 otherwise see fewer (same effect as
 ``XLA_FLAGS=--xla_force_host_platform_device_count=K``).
+
+Telemetry (``serve`` and ``update``): the engine's metrics registry
+(counters, gauges, and the latency histograms behind every span — see
+ROADMAP.md § Observability) is always live; ``--stats-every S`` prints a
+compact one-line dump of it every S seconds while traffic runs, and
+``--metrics-json PATH`` writes the full registry snapshot (JSON, incl.
+per-bucket histogram counts) when the run finishes. Both runs also print
+p50/p90/p99 queue-wait and end-to-end latency measured from the real
+request histograms.
 """
 from __future__ import annotations
 
 import argparse
 import asyncio
+import contextlib
 import time
 
 import numpy as np
+
+
+def _fmt_latency(st: dict) -> str:
+    """One line of queue-wait / e2e quantiles (``engine.latency_stats``)."""
+    return (f"latency: e2e p50={st['e2e_p50'] * 1e3:.2f}ms "
+            f"p90={st['e2e_p90'] * 1e3:.2f}ms "
+            f"p99={st['e2e_p99'] * 1e3:.2f}ms (n={st['e2e_n']}); "
+            f"queue-wait p50={st['wait_p50'] * 1e3:.2f}ms "
+            f"p99={st['wait_p99'] * 1e3:.2f}ms (n={st['wait_n']})")
+
+
+@contextlib.asynccontextmanager
+async def _periodic_stats(registry, every: float):
+    """Run the obs dump loop alongside traffic when ``--stats-every`` > 0."""
+    from repro.obs import dump_loop
+
+    task = None
+    if every and every > 0:
+        task = asyncio.get_running_loop().create_task(
+            dump_loop(registry, every))
+    try:
+        yield
+    finally:
+        if task is not None:
+            task.cancel()
+            with contextlib.suppress(asyncio.CancelledError):
+                await task
+
+
+def _write_metrics(registry, path) -> None:
+    if not path:
+        return
+    from repro.obs import write_json
+
+    write_json(registry.snapshot(), path)
+    print(f"wrote metrics snapshot to {path}")
 
 
 def parse_values(spec: str, kind):
@@ -144,9 +190,11 @@ def cmd_serve(args):
             # warm every index's compiled batch shape before timing
             for fp in fps:
                 await engine.query(*pool[0], fingerprint=fp)
-            t0 = time.time()
-            await asyncio.gather(*[client(i) for i in range(args.clients)])
-            return time.time() - t0
+            async with _periodic_stats(engine.registry, args.stats_every):
+                t0 = time.time()
+                await asyncio.gather(
+                    *[client(i) for i in range(args.clients)])
+                return time.time() - t0
 
     dt = asyncio.run(main())
     total = args.clients * args.requests
@@ -159,7 +207,10 @@ def cmd_serve(args):
           f"avg_batch={st['avg_batch']:.1f} cache_hits={st['cache_hits']} "
           f"deduped={st['deduped']} warmed={st['warmed']} "
           f"hit_rate={st['cache_hit_rate']:.2f} "
-          f"partitions={st['cache_partitions']}")
+          f"partitions={st['cache_partitions']} "
+          f"jit_recompiles={st['jit_recompiles']}")
+    print(_fmt_latency(engine.latency_stats()))
+    _write_metrics(engine.registry, args.metrics_json)
 
 
 def cmd_update(args):
@@ -225,10 +276,12 @@ def cmd_update(args):
     async def main_():
         async with svc:
             await svc.query("live", *pool[0])     # compile warmup
-            t0 = time.time()
-            await asyncio.gather(
-                editor(), *[client(i) for i in range(args.clients)])
-            return time.time() - t0
+            async with _periodic_stats(svc.engine.registry,
+                                       args.stats_every):
+                t0 = time.time()
+                await asyncio.gather(
+                    editor(), *[client(i) for i in range(args.clients)])
+                return time.time() - t0
 
     dt = asyncio.run(main_())
     total = args.clients * args.requests
@@ -244,7 +297,17 @@ def cmd_update(args):
     print(f"engine: device calls={st['device_queries']} "
           f"cache_hits={st['cache_hits']} warmed={st['warmed']} "
           f"hit_rate={st['cache_hit_rate']:.2f} "
-          f"partitions={st['cache_partitions']}")
+          f"partitions={st['cache_partitions']} "
+          f"jit_recompiles={st['jit_recompiles']}")
+    print(_fmt_latency(svc.engine.latency_stats()))
+    apply_hist = svc.engine.registry.histogram("live.apply_delta")
+    if apply_hist.count:
+        print(f"apply pipeline: apply_delta p50="
+              f"{apply_hist.quantile(0.5) * 1e3:.1f}ms "
+              f"p99={apply_hist.quantile(0.99) * 1e3:.1f}ms "
+              f"(n={apply_hist.count}); offload jobs="
+              f"{svc.engine.registry.counter('engine.offload_jobs').value}")
+    _write_metrics(svc.engine.registry, args.metrics_json)
 
 
 def main():
@@ -274,6 +337,14 @@ def main():
             p.add_argument("--flush-ms", type=float, default=2.0)
             p.add_argument("--no-warm", action="store_true",
                            help="disable sweep-ahead cache warming")
+            p.add_argument("--metrics-json", metavar="PATH",
+                           help="write the engine's full metrics-registry "
+                           "snapshot (counters, gauges, latency histogram "
+                           "buckets) as JSON when the run finishes")
+            p.add_argument("--stats-every", type=float, default=0.0,
+                           metavar="SECONDS",
+                           help="periodically print a one-line metrics "
+                           "dump while traffic runs (0 = off)")
         if name == "serve":
             p.add_argument("--indexes", type=int, default=1,
                            help="serve K indexes through one engine")

@@ -1,0 +1,32 @@
+"""Observability: metrics registry, latency histograms, trace spans.
+
+Dependency-free (stdlib-only) telemetry for the serving stack. The paper
+sells *query latency under many parameter settings*; this package is how
+the repo measures that claim instead of asserting it:
+
+  * :mod:`repro.obs.metrics` — :class:`MetricsRegistry` holding
+    thread-safe counters, gauges, and fixed log-spaced-bucket latency
+    :class:`Histogram`\\ s (mergeable across replicas, diffable across
+    snapshots, JSON round-trippable);
+  * :mod:`repro.obs.trace`   — :class:`Tracer` whose ``span()`` context
+    manager emits structured events (monotonic timestamps, parent/child
+    nesting via contextvars) *and* feeds the same-named registry
+    histogram, so the span taxonomy is the latency taxonomy;
+  * :mod:`repro.obs.export`  — JSON snapshot writer, Prometheus text
+    renderer, and the periodic one-line stats dump used by
+    ``scan_serve serve``/``update``.
+
+The serve wiring (span names + attributes per layer) is documented in
+ROADMAP.md § Observability.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               hist_delta, hist_quantile)
+from repro.obs.trace import Span, Tracer
+from repro.obs.export import dump_loop, render_line, to_prometheus, write_json
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "hist_delta", "hist_quantile",
+    "Span", "Tracer",
+    "dump_loop", "render_line", "to_prometheus", "write_json",
+]

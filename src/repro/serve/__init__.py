@@ -25,6 +25,13 @@ This package is the serving layer that completes that story:
     the router, persists the edit stream as a delta chain with periodic
     compaction, and re-warms observed traffic after every swap.
 
+Telemetry: every engine owns a :class:`repro.obs.MetricsRegistry` and a
+:class:`repro.obs.Tracer` (``engine.registry`` / ``engine.tracer``);
+``LiveIndexService`` traces its whole apply pipeline through them. See
+ROADMAP.md § Observability for the span taxonomy and
+``scan_serve ... --metrics-json`` / ``--stats-every`` for the export
+surfaces.
+
 CLI: ``PYTHONPATH=src python -m repro.launch.scan_serve --help``.
 """
 from repro.serve.store import (DeltaLog, IndexCatalog, IndexStore,

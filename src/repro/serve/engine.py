@@ -53,11 +53,30 @@ milliseconds and is not the resource queries wait on — so the engine
 exposes a single-worker ``offload_executor()`` that ``LiveIndexService``
 uses to apply + log deltas off the loop: collector flushes proceed during
 an in-flight apply, and apply latency never shows up in query tails.
+
+Telemetry (``repro.obs``): every engine owns a ``MetricsRegistry`` + a
+``Tracer``. Per request the engine records an ``engine.cache_lookup``
+span, an ``engine.queue_wait`` event (enqueue → flush pickup), and an
+``engine.e2e`` histogram sample (request → resolved, cache hits
+included); per flush an ``engine.batch_assembly`` event and one
+``engine.device_call`` span per bucket; plus counters for every legacy
+``stats`` key, an ``engine.queue_depth`` / ``engine.offload_depth``
+gauge pair, and an ``engine.jit_recompiles`` counter fed by jit
+cache-size deltas measured around each device call — a steady-state
+engine that keeps retracing is a *measured* regression, not a silent
+slowdown. ``engine.stats`` remains as a read-only mapping view over the
+registry counters (the old mutable dict was updated from both the event
+loop and the offload worker with no synchronization — a lost-update
+bug; all mutations now go through the thread-safe registry).
 """
 from __future__ import annotations
 
 import asyncio
+import contextvars
 import dataclasses
+import sys
+import time
+from collections.abc import Mapping
 from concurrent.futures import ThreadPoolExecutor
 from typing import Optional
 
@@ -66,6 +85,7 @@ import numpy as np
 from repro.core.graph import CSRGraph
 from repro.core.index import ScanIndex
 from repro.core.query import ClusterResult, query_batch
+from repro.obs import MetricsRegistry, Tracer
 from repro.serve.cache import (DEFAULT_EPS_QUANTUM, PartitionedResultCache,
                                ResultCache, neighborhood, quantize_eps)
 from repro.serve.store import index_fingerprint
@@ -74,6 +94,57 @@ from repro.serve.store import index_fingerprint
 # queue marker for drain() barriers — compared by identity, so no real
 # fingerprint string can collide with it
 _DRAIN = object()
+
+# legacy ``engine.stats`` keys, each backed by the registry counter
+# ``engine.<key>``
+_STAT_KEYS = ("requests", "batches", "device_queries", "cache_hits",
+              "deduped", "warmed", "bucket_failures")
+
+
+class _StatsView(Mapping):
+    """Read-only mapping view of the engine's legacy counters, backed by
+    the thread-safe registry. Reads are always current; writes must go
+    through ``registry.inc`` (a ``stats[k] += 1`` raises TypeError, which
+    is the point — the old dict was racily mutated from two threads)."""
+
+    __slots__ = ("_registry",)
+
+    def __init__(self, registry: MetricsRegistry) -> None:
+        self._registry = registry
+
+    def __getitem__(self, key: str) -> int:
+        if key not in _STAT_KEYS:
+            raise KeyError(key)
+        return self._registry.counter(f"engine.{key}").value
+
+    def __iter__(self):
+        return iter(_STAT_KEYS)
+
+    def __len__(self) -> int:
+        return len(_STAT_KEYS)
+
+
+def _query_jit_entries() -> int:
+    """Total compiled-artifact count across the query path's jit caches
+    (single-device ``query``/``query_batch`` + the sharded twin when
+    loaded). The engine differences this around device calls: any growth
+    after warmup is a retrace — e.g. an unhashed config field churning
+    the cache key — surfaced as the ``engine.jit_recompiles`` counter."""
+    import repro.core.query
+    # the package re-exports ``query`` the *function*; go through
+    # sys.modules for the submodule itself
+    _query_mod = sys.modules["repro.core.query"]
+
+    total = 0
+    fns = [_query_mod.query, _query_mod.query_batch]
+    dist_mod = sys.modules.get("repro.core.distributed")
+    if dist_mod is not None:
+        fns.append(dist_mod._sharded_query_batch)
+    for fn in fns:
+        cache_size = getattr(fn, "_cache_size", None)
+        if cache_size is not None:
+            total += cache_size()
+    return total
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,7 +170,8 @@ class MicroBatchEngine:
                  g: Optional[CSRGraph] = None, *,
                  fingerprint: Optional[str] = None,
                  config: EngineConfig = EngineConfig(),
-                 cache=None):
+                 cache=None,
+                 registry: Optional[MetricsRegistry] = None):
         self.cfg = config
         self.cache = cache if cache is not None else PartitionedResultCache(
             config.cache_capacity, config.eps_quantum)
@@ -109,9 +181,9 @@ class MicroBatchEngine:
         self._offload: Optional[ThreadPoolExecutor] = None
         self._mesh = None
         self._shard_plans: dict = {}   # fingerprint → ShardedQueryPlan
-        self.stats = {"requests": 0, "batches": 0, "device_queries": 0,
-                      "cache_hits": 0, "deduped": 0, "warmed": 0,
-                      "bucket_failures": 0}
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = Tracer(self.registry)
+        self.stats = _StatsView(self.registry)
         self.fingerprint: Optional[str] = None
         if index is not None:
             if g is None:
@@ -218,6 +290,26 @@ class MicroBatchEngine:
                 max_workers=1, thread_name_prefix="index-apply")
         return self._offload
 
+    async def run_offloaded(self, fn):
+        """Run ``fn()`` in the offload executor and await its result.
+
+        Two things the raw ``loop.run_in_executor`` call site lacked:
+        the ``engine.offload_depth`` gauge tracks jobs submitted but not
+        finished (the single worker means depth > 1 is a queue — the
+        admission-control signal the ROADMAP's fleet work needs), and
+        the caller's contextvars are copied into the worker so spans the
+        job opens nest under the caller's span (``run_in_executor`` drops
+        context on the floor)."""
+        depth = self.registry.gauge("engine.offload_depth")
+        self.registry.inc("engine.offload_jobs")
+        depth.add(1)
+        try:
+            ctx = contextvars.copy_context()
+            return await asyncio.get_running_loop().run_in_executor(
+                self.offload_executor(), lambda: ctx.run(fn))
+        finally:
+            depth.add(-1)
+
     async def drain(self) -> None:
         """Resolve once every request enqueued *before* this call has been
         flushed. The queue is FIFO and the collector flushes strictly in
@@ -228,7 +320,7 @@ class MicroBatchEngine:
         if self._task is None:
             return
         fut = asyncio.get_running_loop().create_future()
-        self._queue.put_nowait((_DRAIN, 0, 0.0, fut))
+        self._queue.put_nowait((_DRAIN, 0, 0.0, fut, time.monotonic()))
         await fut
 
     async def __aenter__(self) -> "MicroBatchEngine":
@@ -253,16 +345,25 @@ class MicroBatchEngine:
             raise KeyError(f"no index registered for fingerprint {fp!r}")
         if self._task is None:
             await self.start()
-        self.stats["requests"] += 1
+        t0 = time.monotonic()
+        self.registry.inc("engine.requests")
         mu = int(mu)
         eps_q = quantize_eps(eps, self.cfg.eps_quantum)
-        hit = self.cache.get(fp, mu, eps_q)
+        with self.tracer.span("engine.cache_lookup", fingerprint=fp[:12]):
+            hit = self.cache.get(fp, mu, eps_q)
         if hit is not None:
-            self.stats["cache_hits"] += 1
+            self.registry.inc("engine.cache_hits")
+            self.registry.observe("engine.e2e", time.monotonic() - t0)
             return hit
         fut = asyncio.get_running_loop().create_future()
-        self._queue.put_nowait((fp, mu, eps_q, fut))
-        return await fut
+        self._queue.put_nowait((fp, mu, eps_q, fut, t0))
+        self.registry.gauge("engine.queue_depth").set(self._queue.qsize())
+        try:
+            return await fut
+        finally:
+            # end-to-end latency includes queue wait, batch assembly, and
+            # the device call — the number a client actually experiences
+            self.registry.observe("engine.e2e", time.monotonic() - t0)
 
     # ------------------------------------------------------------------
     # collector loop
@@ -273,6 +374,7 @@ class MicroBatchEngine:
             if first is None:
                 return
             batch = [first]
+            t_asm = time.monotonic()
             deadline = asyncio.get_running_loop().time() + self.cfg.flush_ms / 1e3
             while len(batch) < self.cfg.max_batch:
                 timeout = deadline - asyncio.get_running_loop().time()
@@ -283,16 +385,26 @@ class MicroBatchEngine:
                 except asyncio.TimeoutError:
                     break
                 if item is None:
+                    self._note_assembly(t_asm, batch)
                     self._flush(batch)
                     return
                 batch.append(item)
+            self._note_assembly(t_asm, batch)
             self._flush(batch)
+
+    def _note_assembly(self, t_asm: float, batch) -> None:
+        """Record the size-or-deadline collection window as a span-shaped
+        event (first item picked up → flush decision)."""
+        self.tracer.event("engine.batch_assembly",
+                          time.monotonic() - t_asm, t_start=t_asm,
+                          batch=len(batch))
 
     def _flush(self, batch) -> None:
         """Bucket one collected batch by fingerprint and execute each bucket
         as its own device call. A failing bucket rejects only its own
         waiters — sibling buckets and the collector keep running (later
         requests must not hang on a dead loop)."""
+        now = time.monotonic()
         buckets: dict[str, list] = {}
         for item in batch:
             if item[0] is _DRAIN:
@@ -305,15 +417,20 @@ class MicroBatchEngine:
                 if not item[3].done():
                     item[3].set_result(None)
                 continue
+            # queue wait = enqueue → flush pickup, per request (the batch
+            # deadline shows up here; tail growth means admission trouble)
+            self.tracer.event("engine.queue_wait", now - item[4],
+                              t_start=item[4], fingerprint=item[0][:12])
             buckets.setdefault(item[0], []).append(item)
+        self.registry.gauge("engine.queue_depth").set(self._queue.qsize())
         for bucket in buckets.values():
             try:
                 self._execute(bucket)
             except Exception as e:  # noqa: BLE001
-                self.stats["bucket_failures"] += 1
-                for _, _, _, fut in bucket:
-                    if not fut.done():
-                        fut.set_exception(e)
+                self.registry.inc("engine.bucket_failures")
+                for item in bucket:
+                    if not item[3].done():
+                        item[3].set_exception(e)
 
     # ------------------------------------------------------------------
     # per-bucket execution
@@ -328,7 +445,7 @@ class MicroBatchEngine:
             if plan is None:
                 # pad + shard the O(m) operands once per index, not per flush
                 plan = self._shard_plans[fp] = ShardedQueryPlan(
-                    index, g, self._mesh)
+                    index, g, self._mesh, registry=self.registry)
             return plan(mus, epss)
         return query_batch(index, g, mus, epss)
 
@@ -337,17 +454,17 @@ class MicroBatchEngine:
         fp = bucket[0][0]
         index, g = self._indexes[fp]
         waiters: dict[tuple, list] = {}
-        for _, mu, eps_q, fut in bucket:
-            waiters.setdefault((mu, eps_q), []).append(fut)
-        self.stats["batches"] += 1
-        self.stats["deduped"] += len(bucket) - len(waiters)
+        for item in bucket:
+            waiters.setdefault((item[1], item[2]), []).append(item[3])
+        self.registry.inc("engine.batches")
+        self.registry.inc("engine.deduped", len(bucket) - len(waiters))
 
         need, resolved = [], {}
         for key in waiters:
             # a twin request may have filled the cache while we queued
             hit = self.cache.peek(fp, *key)
             if hit is not None:
-                self.stats["cache_hits"] += 1
+                self.registry.inc("engine.cache_hits")
                 resolved[key] = hit
             else:
                 need.append(key)
@@ -365,12 +482,22 @@ class MicroBatchEngine:
             slots = slots + [need[0]] * (self.cfg.max_batch - len(slots))
             mus = np.asarray([k[0] for k in slots], np.int32)
             epss = np.asarray([k[1] for k in slots], np.float32)
-            res = self._device_call(fp, index, g, mus, epss)
-            labels = np.asarray(res.labels)
-            is_core = np.asarray(res.is_core)
-            n_clusters = np.asarray(res.n_clusters)
-            self.stats["device_queries"] += 1
-            self.stats["warmed"] += len(warm)
+            jit_before = _query_jit_entries()
+            with self.tracer.span(
+                    "engine.device_call", fingerprint=fp[:12],
+                    need=len(need), warmed=len(warm), slots=len(slots),
+                    shards=self.cfg.shards or 1):
+                res = self._device_call(fp, index, g, mus, epss)
+                # host conversion blocks on the device, so the span (and
+                # the same-named histogram) covers real compute+transfer
+                labels = np.asarray(res.labels)
+                is_core = np.asarray(res.is_core)
+                n_clusters = np.asarray(res.n_clusters)
+            jit_delta = _query_jit_entries() - jit_before
+            if jit_delta > 0:
+                self.registry.inc("engine.jit_recompiles", jit_delta)
+            self.registry.inc("engine.device_queries")
+            self.registry.inc("engine.warmed", len(warm))
             for i, key in enumerate(need + warm):
                 # copy: row views would pin the whole padded batch array
                 # in the cache for as long as the entry lives
@@ -414,9 +541,23 @@ class MicroBatchEngine:
         b = max(out["batches"], 1)
         out["avg_batch"] = (out["requests"] - out["cache_hits"]) / b
         out["indexes"] = len(self._indexes)
+        out["jit_recompiles"] = self.registry.counter(
+            "engine.jit_recompiles").value
         cache_stats = {f"cache_{k}": v for k, v in self.cache.stats().items()}
         # the engine's own cache_hits (which also counts _execute peek
         # re-checks) must not be clobbered by the store-side hits counter
         cache_stats.pop("cache_hits", None)
         out.update(cache_stats)
+        return out
+
+    def latency_stats(self, quantiles=(0.5, 0.9, 0.99)) -> dict:
+        """Queue-wait / end-to-end latency quantiles in seconds, straight
+        from the registry histograms (for the CLI / bench report)."""
+        out = {}
+        for short, name in (("wait", "engine.queue_wait"),
+                            ("e2e", "engine.e2e")):
+            hist = self.registry.histogram(name)
+            out[f"{short}_n"] = hist.count
+            for q in quantiles:
+                out[f"{short}_p{int(q * 100)}"] = hist.quantile(q)
         return out

@@ -38,6 +38,21 @@ Update protocol (per named index):
      O(m) disk write never stalls the collector either) and the covered
      chain prefix is pruned; restore = latest snapshot + replay of the
      strictly-newer tail, fingerprint-verified step by step.
+
+Every stage of that protocol is traced through the engine's
+``repro.obs`` tracer (span == same-named latency histogram): a
+``live.apply`` root span wraps each delta; inside it the worker records
+``live.apply_delta`` (with the ``UpdateInfo`` work counters — frontier
+size, ``n_sim_groups``, ``n_plan_rows``, ``n_plan_classes`` — as span
+attributes), ``live.fingerprint``, ``live.shard_refresh``, and
+``live.log_append``; back on the loop ``live.swap`` (register + route
+flip), ``live.drain`` (the barrier), ``live.rewarm``, and
+``live.compact`` when compaction triggers. The engine's
+``engine.offload_depth`` gauge exposes how many maintenance jobs are
+queued behind the single worker. This is how the PR 5 claim — "apply
+latency never shows in query tails" — became a measurement: apply spans
+record nonzero durations while the concurrent ``engine.e2e`` histogram
+keeps filling (asserted in tests/test_serve_obs.py).
 """
 from __future__ import annotations
 
@@ -264,15 +279,29 @@ class LiveIndexService:
 
     async def _apply_locked(self, name: str, delta: EdgeDelta) -> UpdateInfo:
         lock = self._locks.setdefault(name, asyncio.Lock())
+        tracer = self.engine.tracer
         async with lock:
             live = self._live[name]
             seq = live.seq + 1
             log_dir = self.catalog.store(name).directory
 
             def _absorb():
-                new_index, new_g, info = apply_delta(
-                    live.index, live.g, delta, self.measure)
-                new_fp = index_fingerprint(new_index, new_g)
+                # worker-side spans nest under live.apply: run_offloaded
+                # ships the caller's contextvars into the worker thread
+                with tracer.span("live.apply_delta", index=name,
+                                 seq=seq) as sp:
+                    new_index, new_g, info = apply_delta(
+                        live.index, live.g, delta, self.measure)
+                    sp.set(n_inserted=info.n_inserted,
+                           n_deleted=info.n_deleted,
+                           n_touched=info.n_touched,
+                           n_frontier=info.n_frontier,
+                           n_affected_rows=info.n_affected_rows,
+                           n_sim_groups=info.n_sim_groups,
+                           n_plan_rows=info.n_plan_rows,
+                           n_plan_classes=info.n_plan_classes)
+                with tracer.span("live.fingerprint", index=name):
+                    new_fp = index_fingerprint(new_index, new_g)
                 shard_plan = None
                 # look the predecessor plan up *here*, not before the
                 # worker started: the collector may lazily build it for
@@ -281,35 +310,48 @@ class LiveIndexService:
                 if old_plan is not None and new_fp != live.fp:
                     # re-shard only the mutated partitions; the old plan
                     # stays intact for in-flight traffic until the drain
-                    shard_plan = old_plan.refresh(new_index, new_g)
+                    with tracer.span("live.shard_refresh",
+                                     index=name) as sp:
+                        shard_plan = old_plan.refresh(new_index, new_g)
+                        sp.set(**shard_plan.last_refresh)
                 # commit to the chain *last*: a failure anywhere above
                 # must not leave the on-disk log ahead of served state
                 # (the next apply would reuse this sequence number)
-                DeltaLog(log_dir).append(seq, delta, new_fp)
+                with tracer.span("live.log_append", index=name, seq=seq):
+                    DeltaLog(log_dir).append(seq, delta, new_fp)
                 return new_index, new_g, info, new_fp, shard_plan
 
-            loop = asyncio.get_running_loop()
-            new_index, new_g, info, new_fp, shard_plan = \
-                await loop.run_in_executor(
-                    self.engine.offload_executor(), _absorb)
+            with tracer.span("live.apply", index=name, seq=seq) as apply_sp:
+                new_index, new_g, info, new_fp, shard_plan = \
+                    await self.engine.run_offloaded(_absorb)
+                apply_sp.set(swapped=new_fp != live.fp,
+                             n_frontier=info.n_frontier)
 
-            if new_fp != live.fp:
-                self.engine.register(new_index, new_g, fingerprint=new_fp,
-                                     shard_plan=shard_plan)
-            self._live[name] = dataclasses.replace(
-                live, index=new_index, g=new_g, fp=new_fp, seq=seq)
-
-            if new_fp != live.fp:
-                await self.engine.drain()
-                if live.fp not in {l.fp for l in self._live.values()}:
-                    self.engine.unregister(live.fp)
-                await self._rewarm(name)
-            if seq - self._live[name].snapshot_seq >= self.compact_every:
-                # the O(m) snapshot write is disk work on an immutable
-                # (index, graph) pair — it belongs in the worker too, not
-                # on the loop stalling the collector
-                await loop.run_in_executor(
-                    self.engine.offload_executor(), self.compact, name)
+                if new_fp != live.fp:
+                    with tracer.span("live.swap", index=name):
+                        self.engine.register(new_index, new_g,
+                                             fingerprint=new_fp,
+                                             shard_plan=shard_plan)
+                        self._live[name] = dataclasses.replace(
+                            live, index=new_index, g=new_g, fp=new_fp,
+                            seq=seq)
+                    with tracer.span("live.drain", index=name):
+                        await self.engine.drain()
+                    if live.fp not in {l.fp for l in self._live.values()}:
+                        self.engine.unregister(live.fp)
+                    with tracer.span("live.rewarm", index=name):
+                        await self._rewarm(name)
+                else:
+                    self._live[name] = dataclasses.replace(
+                        live, index=new_index, g=new_g, fp=new_fp, seq=seq)
+                if seq - self._live[name].snapshot_seq >= self.compact_every:
+                    # the O(m) snapshot write is disk work on an immutable
+                    # (index, graph) pair — it belongs in the worker too,
+                    # not on the loop stalling the collector
+                    def _compact():
+                        with tracer.span("live.compact", index=name):
+                            self.compact(name)
+                    await self.engine.run_offloaded(_compact)
             return info
 
     async def _rewarm(self, name: str) -> None:

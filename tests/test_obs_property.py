@@ -1,0 +1,134 @@
+"""Hypothesis property tests for ``repro.obs`` histogram invariants:
+monotone bucket bounds, count conservation under merge, quantile error
+bounded by one bucket against the numpy order-statistic oracle, and
+lossless JSON snapshot round-trips.
+
+Deterministic unit coverage of the same surfaces lives in
+``test_obs.py``; this module explores the input space when hypothesis is
+installed (profiles in ``conftest.py``) and skips cleanly otherwise.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.obs import Histogram, MetricsRegistry, hist_delta  # noqa: E402
+
+# values spanning underflow, every finite decade, and overflow
+values = st.floats(min_value=0.0, max_value=1e4,
+                   allow_nan=False, allow_infinity=False)
+value_lists = st.lists(values, min_size=1, max_size=200)
+
+hist_params = st.tuples(
+    st.floats(1e-7, 1e-2), st.floats(1e-1, 1e3), st.integers(1, 16))
+
+
+@settings(max_examples=50, deadline=None)
+@given(hist_params)
+def test_edges_strictly_increasing_and_anchored(params):
+    lo, hi, bpd = params
+    h = Histogram(lo=lo, hi=hi, buckets_per_decade=bpd)
+    assert all(a < b for a, b in zip(h.edges, h.edges[1:]))
+    assert h.edges[0] == lo and h.edges[-1] == hi
+    assert len(h.counts) == len(h.edges) + 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(value_lists)
+def test_record_conserves_count_and_sum(vals):
+    h = Histogram(lo=1e-6, hi=100.0, buckets_per_decade=8)
+    for v in vals:
+        h.record(v)
+    assert h.count == len(vals)
+    assert sum(h.counts) == len(vals)
+    assert h.sum == pytest.approx(sum(vals))
+    assert h.min == min(vals) and h.max == max(vals)
+
+
+@settings(max_examples=50, deadline=None)
+@given(value_lists, value_lists)
+def test_merge_conserves_bucketwise_counts(a_vals, b_vals):
+    a = Histogram(lo=1e-6, hi=100.0, buckets_per_decade=8)
+    b = Histogram(lo=1e-6, hi=100.0, buckets_per_decade=8)
+    for v in a_vals:
+        a.record(v)
+    for v in b_vals:
+        b.record(v)
+    expect = [x + y for x, y in zip(a.counts, b.counts)]
+    a.merge(b)
+    assert a.counts == expect
+    assert a.count == len(a_vals) + len(b_vals)
+    assert a.sum == pytest.approx(sum(a_vals) + sum(b_vals))
+
+
+@settings(max_examples=50, deadline=None)
+@given(value_lists, st.floats(0.0, 1.0))
+def test_quantile_within_one_bucket_of_numpy_oracle(vals, q):
+    h = Histogram(lo=1e-6, hi=100.0, buckets_per_decade=8)
+    for v in vals:
+        h.record(v)
+    oracle = float(np.quantile(np.asarray(vals), q, method="inverted_cdf"))
+    est = h.quantile(q)
+    i = h.bucket_index(oracle)
+    if i >= len(h.edges):
+        # oracle overflows → estimate is the observed max ≥ oracle
+        assert est == h.max and est >= oracle
+    else:
+        # estimate is the upper edge of the oracle's bucket: bounded
+        # above by one multiplicative bucket width (underflow reports lo)
+        assert est == h.edges[i]
+        assert oracle <= est * (1 + 1e-9)
+
+
+@settings(max_examples=50, deadline=None)
+@given(value_lists)
+def test_snapshot_json_round_trip_lossless(vals):
+    h = Histogram(lo=1e-6, hi=100.0, buckets_per_decade=8)
+    for v in vals:
+        h.record(v)
+    snap = h.snapshot()
+    back = Histogram.from_snapshot(json.loads(json.dumps(snap)))
+    assert back.snapshot() == snap
+    for q in (0.0, 0.5, 0.99, 1.0):
+        assert back.quantile(q) == h.quantile(q)
+
+
+@settings(max_examples=25, deadline=None)
+@given(value_lists, value_lists)
+def test_hist_delta_recovers_second_wave(first, second):
+    h = Histogram(lo=1e-6, hi=100.0, buckets_per_decade=8)
+    for v in first:
+        h.record(v)
+    before = h.snapshot()
+    for v in second:
+        h.record(v)
+    wave = hist_delta(h.snapshot(), before)
+    assert wave["count"] == len(second)
+    assert sum(wave["counts"]) == len(second)
+    assert wave["sum"] == pytest.approx(sum(second), abs=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["a", "b", "c"]), values),
+                min_size=1, max_size=60))
+def test_registry_merge_snapshot_equals_single_registry(obs):
+    """Recording split across two registries then merged == recording
+    everything into one registry (fleet aggregation is lossless)."""
+    one, left, right = (MetricsRegistry() for _ in range(3))
+    for i, (name, v) in enumerate(obs):
+        one.observe(name, v)
+        one.inc("n." + name)
+        (left if i % 2 == 0 else right).observe(name, v)
+        (left if i % 2 == 0 else right).inc("n." + name)
+    left.merge_snapshot(right.snapshot())
+    merged, direct = left.snapshot(), one.snapshot()
+    assert merged["counters"] == direct["counters"]
+    for name in direct["histograms"]:
+        m, d = merged["histograms"][name], direct["histograms"][name]
+        assert m["counts"] == d["counts"]
+        assert m["count"] == d["count"]
+        assert m["sum"] == pytest.approx(d["sum"])

@@ -1,0 +1,254 @@
+"""Serve-layer observability: the engine's registry-backed stats view,
+per-request span taxonomy, the steady-state no-retrace guard, exact
+counters under loop+offload concurrency, and the live-apply pipeline
+spans recording alongside query latency histograms.
+"""
+import asyncio
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (EdgeDelta, ShardedQueryPlan, build_index,
+                        query_mesh, random_graph)
+from repro.obs import MetricsRegistry, hist_delta
+from repro.serve import EngineConfig, LiveIndexService, MicroBatchEngine
+
+
+def _graph_and_index(n=80, deg=6.0, seed=0):
+    g = random_graph(n, deg, seed=seed)
+    return g, build_index(g, "cosine")
+
+
+# --------------------------------------------------------------------------
+# legacy stats compat shim
+# --------------------------------------------------------------------------
+def test_stats_view_is_read_only_registry_mapping():
+    g, idx = _graph_and_index(n=40, deg=4.0)
+    engine = MicroBatchEngine(idx, g)
+    assert engine.stats["requests"] == 0
+    assert set(engine.stats) == {"requests", "batches", "device_queries",
+                                 "cache_hits", "deduped", "warmed",
+                                 "bucket_failures"}
+    assert len(engine.stats) == 7
+    assert dict(engine.stats)["warmed"] == 0
+    with pytest.raises(KeyError):
+        engine.stats["no_such_counter"]
+    with pytest.raises(TypeError):
+        engine.stats["requests"] = 5       # the old racy dict is gone
+    # the view reads the registry live
+    engine.registry.inc("engine.requests", 3)
+    assert engine.stats["requests"] == 3
+
+
+def test_external_registry_is_adopted():
+    reg = MetricsRegistry()
+    g, idx = _graph_and_index(n=40, deg=4.0)
+    engine = MicroBatchEngine(idx, g, registry=reg)
+    assert engine.registry is reg
+    assert engine.tracer.registry is reg
+
+
+# --------------------------------------------------------------------------
+# per-request span taxonomy + latency histograms
+# --------------------------------------------------------------------------
+def test_request_spans_and_latency_histograms_populate():
+    g, idx = _graph_and_index()
+    # warm_ahead off so every distinct setting truly enqueues (warming
+    # would turn the neighbors of the first query into cache hits)
+    engine = MicroBatchEngine(idx, g, config=EngineConfig(
+        max_batch=4, flush_ms=1.0, warm_ahead=False))
+
+    async def main():
+        async with engine:
+            await engine.query(2, 0.3)
+            await asyncio.gather(*[engine.query(2 + i % 2, 0.35 + 0.1 * i)
+                                   for i in range(4)])
+            await engine.query(2, 0.3)     # cache hit
+
+    asyncio.run(main())
+    tr = engine.tracer
+    # one cache_lookup per request, queue_wait per enqueued request,
+    # batch_assembly + device_call per flush that reached the device
+    assert len(tr.events("engine.cache_lookup")) == 6
+    assert len(tr.events("engine.queue_wait")) >= 5
+    assert len(tr.events("engine.batch_assembly")) >= 1
+    dev = tr.events("engine.device_call")
+    assert dev and all(e["duration_s"] > 0 for e in dev)
+    assert all("fingerprint" in e["attrs"] and "need" in e["attrs"]
+               for e in dev)
+    snap = engine.registry.snapshot()["histograms"]
+    # every request lands in e2e (cache hits included)
+    assert snap["engine.e2e"]["count"] == 6
+    assert snap["engine.queue_wait"]["count"] >= 5
+    st = engine.latency_stats()
+    assert st["e2e_n"] == 6 and st["wait_n"] >= 5
+    assert 0 < st["e2e_p50"] <= st["e2e_p90"] <= st["e2e_p99"]
+    assert st["e2e_p99"] <= snap["engine.e2e"]["max"] * 10 ** (1 / 8)
+
+
+def test_batch_stats_reports_jit_recompiles():
+    g, idx = _graph_and_index(n=40, deg=4.0)
+    engine = MicroBatchEngine(idx, g)
+
+    async def main():
+        async with engine:
+            await engine.query(2, 0.5)
+
+    asyncio.run(main())
+    st = engine.batch_stats()
+    assert "jit_recompiles" in st
+    assert st["jit_recompiles"] >= 0
+    assert st["device_queries"] == 1
+
+
+# --------------------------------------------------------------------------
+# steady-state no-retrace guard
+# --------------------------------------------------------------------------
+def test_warmed_engine_never_retraces_on_same_shape_flushes():
+    """After warmup, repeated flushes with fresh (μ, ε) settings (cache
+    misses, so every wave reaches the device) must not grow the jit
+    cache: the recompile counter stays flat while device calls climb.
+    A padding or cache-key regression that retraced per flush would
+    trip this immediately."""
+    g, idx = _graph_and_index()
+    engine = MicroBatchEngine(idx, g, config=EngineConfig(
+        max_batch=4, flush_ms=1.0))
+
+    async def main():
+        async with engine:
+            await engine.query(2, 0.30)    # warmup: first trace happens here
+            await engine.query(3, 0.35)
+            warmed = engine.batch_stats()
+            for i, eps in enumerate((0.42, 0.47, 0.52, 0.57, 0.62, 0.67)):
+                await engine.query(2 + i % 3, eps)
+            return warmed, engine.batch_stats()
+
+    warmed, final = asyncio.run(main())
+    assert final["device_queries"] > warmed["device_queries"]
+    assert final["jit_recompiles"] == warmed["jit_recompiles"], \
+        "steady-state flushes retraced the query kernel"
+
+
+# --------------------------------------------------------------------------
+# loop + offload-worker concurrency (the lost-update regression)
+# --------------------------------------------------------------------------
+def test_counters_exact_under_loop_and_offload_mutation():
+    """The old ``stats`` dict was mutated from the event loop and the
+    offload worker without synchronization; the registry must count
+    exactly under that same split."""
+    g, idx = _graph_and_index(n=40, deg=4.0)
+    engine = MicroBatchEngine(idx, g)
+    n_jobs, per_job, per_loop = 20, 500, 5000
+
+    def worker_job():
+        for _ in range(per_job):
+            engine.registry.inc("engine.shared_test")
+
+    async def main():
+        async with engine:
+            jobs = [asyncio.ensure_future(engine.run_offloaded(worker_job))
+                    for _ in range(n_jobs)]
+            for _ in range(per_loop):      # loop-side writer, interleaved
+                engine.registry.inc("engine.shared_test")
+            await asyncio.gather(*jobs)
+
+    asyncio.run(main())
+    expect = n_jobs * per_job + per_loop
+    assert engine.registry.counter("engine.shared_test").value == expect
+    assert engine.registry.counter("engine.offload_jobs").value == n_jobs
+    assert engine.registry.gauge("engine.offload_depth").value == 0
+
+
+# --------------------------------------------------------------------------
+# live-apply pipeline spans (acceptance)
+# --------------------------------------------------------------------------
+def test_apply_spans_record_while_query_latency_populates(tmp_path,
+                                                         monkeypatch):
+    """Acceptance: a ``LiveIndexService.apply`` records nonzero-duration
+    ``live.apply``/``live.apply_delta`` spans (with the UpdateInfo work
+    counters as attributes) while the concurrent query path keeps
+    populating the engine's latency histograms."""
+    import repro.serve.live as live_mod
+
+    svc = LiveIndexService(str(tmp_path),
+                           config=EngineConfig(max_batch=8, flush_ms=5.0))
+    g = random_graph(60, 6.0, seed=1, weighted=True)
+    svc.create("web", g)
+    entered = threading.Event()
+    gate = threading.Event()
+    real_apply = live_mod.apply_delta
+
+    def gated_apply(*args, **kwargs):
+        entered.set()
+        assert gate.wait(30), "test gate never opened"
+        return real_apply(*args, **kwargs)
+
+    monkeypatch.setattr(live_mod, "apply_delta", gated_apply)
+    delta = EdgeDelta.make(inserts=[(0, 30), (1, 45)], weights=[0.9, 0.8])
+
+    async def main():
+        async with svc:
+            e2e_before = svc.engine.registry.histogram(
+                "engine.e2e").snapshot()
+            apply_task = asyncio.ensure_future(svc.apply("web", delta))
+            while not entered.is_set():
+                await asyncio.sleep(0.005)
+            # queries answered while the apply is parked in the worker
+            for mu, eps in ((2, 0.3), (3, 0.5), (2, 0.7)):
+                await asyncio.wait_for(svc.query("web", mu, eps), timeout=10)
+            e2e_during = hist_delta(
+                svc.engine.registry.histogram("engine.e2e").snapshot(),
+                e2e_before)
+            gate.set()
+            info = await apply_task
+            return info, e2e_during
+
+    info, e2e_during = asyncio.run(main())
+    assert info.n_inserted == 2
+    # query latency kept flowing while the apply was in flight
+    assert e2e_during["count"] >= 3 and e2e_during["sum"] > 0
+
+    tr = svc.engine.tracer
+    (apply_ev,) = tr.events("live.apply")
+    (delta_ev,) = tr.events("live.apply_delta")
+    assert apply_ev["duration_s"] > 0
+    assert delta_ev["duration_s"] > 0
+    assert apply_ev["duration_s"] >= delta_ev["duration_s"]
+    # UpdateInfo work counters ride on the apply_delta span
+    assert delta_ev["attrs"]["n_inserted"] == 2
+    assert delta_ev["attrs"]["n_frontier"] == info.n_frontier
+    assert apply_ev["attrs"]["swapped"] is True
+    # the worker-side span nests under live.apply (contextvars shipped
+    # into the offload executor by run_offloaded)
+    assert delta_ev["parent_id"] == apply_ev["span_id"]
+    # the swap pipeline traced end to end
+    for name in ("live.fingerprint", "live.log_append", "live.swap",
+                 "live.drain", "live.rewarm"):
+        evs = tr.events(name)
+        assert evs, f"missing span {name}"
+    reg_hists = svc.engine.registry.snapshot()["histograms"]
+    assert reg_hists["live.apply"]["count"] == 1
+    assert reg_hists["live.apply"]["sum"] > 0
+
+
+# --------------------------------------------------------------------------
+# sharded plan placement metrics
+# --------------------------------------------------------------------------
+def test_sharded_plan_records_placement_metrics():
+    g, idx = _graph_and_index(n=64, deg=6.0, seed=5)
+    reg = MetricsRegistry()
+    plan = ShardedQueryPlan(idx, g, query_mesh(1), registry=reg)
+    snap = reg.snapshot()
+    assert snap["counters"]["sharded.chunks_placed"] > 0
+    assert snap["histograms"]["sharded.plan_build"]["count"] == 1
+    assert snap["histograms"]["sharded.place_full"]["count"] > 0
+
+    # a refresh through _reuse_from inherits the registry and counts
+    # adopted chunks
+    plan2 = plan.refresh(idx, g)
+    assert plan2._registry is reg
+    snap2 = reg.snapshot()
+    assert snap2["counters"]["sharded.chunks_reused"] == \
+        plan2.last_refresh["reused"]
+    assert snap2["histograms"]["sharded.plan_build"]["count"] == 2
