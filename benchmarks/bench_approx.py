@@ -1,0 +1,33 @@
+"""Approximate-first frontier snapshot: construction speedup × quality.
+
+Combines the paper's Figure 8 (approximate construction time vs sample
+count — ``bench_approx_construction``) and Figures 9/10 (best modularity,
+ARI vs the exact clustering at its modularity-maximizing (μ*, ε*), and
+core-set precision/recall — ``bench_approx_quality``) into one section,
+and commits the result as the repo-root ``BENCH_approx.json`` — the
+speed/quality frontier tracked per PR exactly like construction
+(``BENCH_construction.json``) and updates (``BENCH_update.json``) are.
+
+Reading the snapshot: ``fig8/*`` rows carry ``speedup_vs_exact`` (the
+ingest-latency win approximate-first serving banks); ``fig9_10/*`` rows
+carry what that speed costs — ``ari_vs_exact`` / ``core_precision`` /
+``core_recall`` at the exact index's best setting and ``best_modularity``
+for the approximate index's own grid optimum. Rising sample counts move
+rows toward (1.0 ARI, 1× speedup); the useful operating points are the
+ones that keep ARI high while the speedup is still large.
+"""
+from __future__ import annotations
+
+import pathlib
+
+from benchmarks.common import write_snapshot
+
+SNAPSHOT = pathlib.Path(__file__).resolve().parents[1] / "BENCH_approx.json"
+
+
+def run():
+    from benchmarks import bench_approx_construction, bench_approx_quality
+
+    lines = bench_approx_construction.run() + bench_approx_quality.run()
+    write_snapshot(SNAPSHOT, "approx", lines)
+    return lines

@@ -2,7 +2,8 @@
 
 Usage: PYTHONPATH=src python -m benchmarks.run [section ...] \
            [--json out.json] [--shards K]
-Sections: fig5 fig6 fig8 fig9 serve update roofline (default: all).
+Sections: fig5 fig6 approx serve update roofline (default: all; ``approx``
+subsumes the old fig8/fig9 aliases and commits ``BENCH_approx.json``).
 Output: ``name,us_per_call,derived`` CSV lines on stdout; ``--json`` also
 writes the same rows as structured JSON (the artifact CI uploads per run,
 so regressions are diffable across commits). ``--shards K`` forces K host
@@ -19,8 +20,11 @@ import argparse
 import json
 import sys
 
-SECTIONS = ("fig5", "fig6", "fig8", "fig9", "serve", "update", "roofline")
-ALIASES = {"fig7": "fig6", "fig10": "fig9"}
+SECTIONS = ("fig5", "fig6", "approx", "serve", "update", "roofline")
+# the approx section subsumes the paper's fig8 (construction) and fig9/10
+# (quality) and commits the combined BENCH_approx.json snapshot
+ALIASES = {"fig7": "fig6", "fig8": "approx", "fig9": "approx",
+           "fig10": "approx"}
 
 
 def parse_args(argv):
@@ -76,12 +80,9 @@ def main() -> None:
     if "fig6" in sections:
         from benchmarks import bench_query
         lines += bench_query.run()
-    if "fig8" in sections:
-        from benchmarks import bench_approx_construction
-        lines += bench_approx_construction.run()
-    if "fig9" in sections:
-        from benchmarks import bench_approx_quality
-        lines += bench_approx_quality.run()
+    if "approx" in sections:
+        from benchmarks import bench_approx
+        lines += bench_approx.run()
     if "serve" in sections:
         from benchmarks import bench_serve
         lines += bench_serve.run()

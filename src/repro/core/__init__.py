@@ -28,8 +28,16 @@ from repro.core.lsh import (
     kpartition_sketches,
     kpartition_edge_similarity,
 )
+from repro.core.approx import (
+    EXACT_PROVENANCE,
+    ApproxIndexBuilder,
+    ApproxParams,
+    IndexProvenance,
+    build_approx_index,
+)
 from repro.core.update import EdgeDelta, UpdateInfo, apply_delta
-from repro.core.quality import modularity, adjusted_rand_index
+from repro.core.quality import (adjusted_rand_index, core_precision_recall,
+                                modularity)
 from repro.core.connectivity import (
     connected_components,
     connected_components_allreduce,

@@ -41,20 +41,38 @@ from repro.core import similarity as sim_mod
 # --------------------------------------------------------------------------
 # SimHash
 # --------------------------------------------------------------------------
-def simhash_sketches(g: CSRGraph, samples: int, key: jax.Array) -> jax.Array:
-    """Packed sketches uint32[n, ceil(k/32)] of closed weighted neighborhoods."""
+def simhash_sketches(g: CSRGraph, samples: int, key: jax.Array,
+                     *, chunk: int = 512) -> jax.Array:
+    """Packed sketches uint32[n, ceil(k/32)] of closed weighted neighborhoods.
+
+    ``chunk`` bounds the (n, chunk) gaussian working set; it is a *memory*
+    knob only. Each 32-sample word derives its projections from
+    ``fold_in(key, word_index)``, so the sketch bits — and therefore σ̂ and
+    every downstream index fingerprint — are invariant to the chunking.
+    (The old per-chunk ``fold_in(key, w0)`` keyed the randomness on the
+    chunk boundary itself: changing the chunk width silently changed every
+    sketch.)
+    """
+    if chunk % 32 != 0 or chunk <= 0:
+        raise ValueError(f"chunk must be a positive multiple of 32: {chunk}")
     k_pad = (samples + 31) // 32 * 32
     words = []
-    for w0 in range(0, k_pad, 512):  # chunk the sample axis to bound memory
-        kw = min(512, k_pad - w0)
-        sub = jax.random.fold_in(key, w0)
-        words.append(_simhash_chunk(g.edge_u, g.nbrs, g.wgts, sub, g.n, kw, samples - w0))
+    for w0 in range(0, k_pad, chunk):  # chunk the sample axis to bound memory
+        kw = min(chunk, k_pad - w0)
+        words.append(_simhash_chunk(g.edge_u, g.nbrs, g.wgts, key,
+                                    w0 // 32, g.n, kw, samples - w0))
     return jnp.concatenate(words, axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("n", "kw", "valid"))
-def _simhash_chunk(edge_u, nbrs, wgts, key, n, kw, valid):
-    r = jax.random.normal(key, (n, kw), dtype=jnp.float32)
+@functools.partial(jax.jit, static_argnames=("word0", "n", "kw", "valid"))
+def _simhash_chunk(edge_u, nbrs, wgts, key, word0, n, kw, valid):
+    # one fold_in per 32-sample word: bit w's projection column depends only
+    # on (key, w // 32), never on which chunk it was generated in
+    word_keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        key, word0 + jnp.arange(kw // 32))
+    r = jax.vmap(lambda k: jax.random.normal(k, (n, 32), dtype=jnp.float32),
+                 out_axes=1)(word_keys)                  # [n, kw/32, 32]
+    r = r.reshape(n, kw)
     if valid < kw:  # zero out padding samples → identical bits on both sides
         r = r * (jnp.arange(kw) < valid)
     s = r + jax.ops.segment_sum(wgts[:, None] * r[nbrs], edge_u, num_segments=n)
@@ -78,12 +96,20 @@ def simhash_edge_similarity(
 # --------------------------------------------------------------------------
 # standard MinHash — k independent uniformly random permutations (§2.1.2)
 # --------------------------------------------------------------------------
-def minhash_sketches(g: CSRGraph, samples: int, key: jax.Array) -> jax.Array:
-    """Sketches int32[n, k]: sketch(v)ᵢ = min_{x∈N̄(v)} πᵢ(x)."""
+def minhash_sketches(g: CSRGraph, samples: int, key: jax.Array,
+                     *, chunk: int = 64) -> jax.Array:
+    """Sketches int32[n, k]: sketch(v)ᵢ = min_{x∈N̄(v)} πᵢ(x).
+
+    Permutation i is keyed by ``fold_in(key, i)`` — chunking (the memory
+    knob) never changes the sketch, mirroring ``simhash_sketches``.
+    """
+    if chunk <= 0:
+        raise ValueError(f"chunk must be positive: {chunk}")
     out = []
-    for s0 in range(0, samples, 64):  # chunk the sample axis
-        kc = min(64, samples - s0)
-        keys = jax.random.split(jax.random.fold_in(key, s0), kc)
+    for s0 in range(0, samples, chunk):  # chunk the sample axis
+        kc = min(chunk, samples - s0)
+        keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+            key, s0 + jnp.arange(kc))
         out.append(_minhash_chunk(g.edge_u, g.nbrs, keys, g.n))
     return jnp.concatenate(out, axis=1)
 

@@ -38,6 +38,28 @@ def modularity(g: CSRGraph, labels: np.ndarray, weighted: bool = False) -> float
     return float(np.sum(within / two_m - (deg / two_m) ** 2))
 
 
+def core_precision_recall(approx_cores: np.ndarray,
+                          exact_cores: np.ndarray) -> tuple:
+    """(precision, recall) of an approximate core set against the exact one.
+
+    The §5 guarantees are *classification* guarantees — an edge far from ε
+    classifies identically under σ̂ — so the natural quality readout for an
+    approximate index is how faithfully it reproduces the exact core set at
+    each (μ, ε). Empty sets follow the usual convention: precision is 1.0
+    when nothing was predicted, recall is 1.0 when nothing was there to
+    find.
+    """
+    approx = np.asarray(approx_cores, dtype=bool)
+    exact = np.asarray(exact_cores, dtype=bool)
+    assert approx.shape == exact.shape
+    tp = float(np.sum(approx & exact))
+    n_approx = float(approx.sum())
+    n_exact = float(exact.sum())
+    precision = tp / n_approx if n_approx else 1.0
+    recall = tp / n_exact if n_exact else 1.0
+    return precision, recall
+
+
 def adjusted_rand_index(labels_a: np.ndarray, labels_b: np.ndarray) -> float:
     """ARI between two clusterings (paper §7.2 formula)."""
     a = _canonical_labels(labels_a)

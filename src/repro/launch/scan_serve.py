@@ -25,6 +25,15 @@ routing several indexes through one engine:
     PYTHONPATH=src python -m repro.launch.scan_serve update \
         --n 4096 --updates 16 --update-batch 8 --clients 8
 
+    # approximate-first ingest: serve an LSH-sketched index immediately,
+    # refine to the exact index in the background, hot-swap when it lands
+    PYTHONPATH=src python -m repro.launch.scan_serve serve \
+        --approx simhash:256 --n 8192 --clients 16
+
+    # sweep a (μ, ε) grid against a sketched index (paper §5/§6.3)
+    PYTHONPATH=src python -m repro.launch.scan_serve sweep \
+        --approx simhash:128 --n 8192
+
 ``--shards K`` forces K host-platform devices itself when jax would
 otherwise see fewer (same effect as
 ``XLA_FLAGS=--xla_force_host_platform_device_count=K``).
@@ -100,19 +109,29 @@ def get_index(args, *, seed=None):
         store = IndexStore(args.load)
         index, g, fp = store.load()
         print(f"loaded index v{store.latest_version()} from {args.load} "
-              f"(n={g.n}, m={g.m}, fingerprint={fp[:12]})")
+              f"(n={g.n}, m={g.m}, fingerprint={fp[:12]}, "
+              f"{store.provenance().describe()})")
         return index, g, fp
     seed = args.seed if seed is None else seed
     g = random_graph(args.n, args.avg_degree, seed=seed,
                      weighted=args.weighted,
                      planted_clusters=args.clusters)
     t0 = time.time()
-    index = build_index(g, args.measure)
+    provenance = None
+    if getattr(args, "approx", None):
+        from repro.core import ApproxIndexBuilder, ApproxParams
+        builder = ApproxIndexBuilder(args.measure,
+                                     ApproxParams.parse(args.approx))
+        index, provenance = builder.build(g)
+    else:
+        index = build_index(g, args.measure)
     fp = index_fingerprint(index, g)
-    print(f"built index in {time.time() - t0:.2f}s "
+    kind = provenance.describe() if provenance is not None else "exact"
+    print(f"built {kind} index in {time.time() - t0:.2f}s "
           f"(n={g.n}, m={g.m}, seed={seed}, fingerprint={fp[:12]})")
     if args.save:
-        path = IndexStore(args.save).save(index, g, measure=args.measure)
+        path = IndexStore(args.save).save(index, g, measure=args.measure,
+                                          provenance=provenance)
         print(f"persisted to {path}")
     return index, g, fp
 
@@ -157,6 +176,13 @@ def cmd_serve(args):
     cfg = EngineConfig(max_batch=args.max_batch, flush_ms=args.flush_ms,
                        warm_ahead=not args.no_warm,
                        shards=args.shards if args.shards > 1 else None)
+    if args.approx:
+        if args.load:
+            raise SystemExit(
+                "--approx builds a fresh LSH-sketched index and cannot be "
+                "combined with --load (the loaded artifact is already "
+                "built; its provenance travels with it)")
+        return _serve_approx(args, cfg)
     engine = MicroBatchEngine(config=cfg)
     catalog = None
     if args.indexes > 1 and args.save:
@@ -211,6 +237,91 @@ def cmd_serve(args):
           f"jit_recompiles={st['jit_recompiles']}")
     print(_fmt_latency(engine.latency_stats()))
     _write_metrics(engine.registry, args.metrics_json)
+
+
+def _serve_approx(args, cfg):
+    """Approximate-first serve: LSH-sketched indexes answer traffic from
+    second zero while exact refinement runs in the background and
+    hot-swaps in behind the drain barrier (``--approx simhash:256``)."""
+    import tempfile
+
+    from repro.core import ApproxParams, random_graph
+    from repro.serve import LiveIndexService
+
+    params = ApproxParams.parse(args.approx)
+    if params.measure != args.measure:
+        raise SystemExit(
+            f"--approx {params.method} estimates {params.measure} "
+            f"similarity; pass --measure {params.measure}")
+    root = args.save or tempfile.mkdtemp(prefix="scan_approx_")
+    svc = LiveIndexService(root, config=cfg, measure=args.measure)
+    names = []
+    for k in range(max(args.indexes, 1)):
+        g = random_graph(args.n, args.avg_degree, seed=args.seed + k,
+                         weighted=args.weighted,
+                         planted_clusters=args.clusters)
+        name = f"idx{k}"
+        t0 = time.time()
+        fp = svc.register_approximate(name, g, params=params)
+        print(f"approx index {name!r} built+serving in "
+              f"{time.time() - t0:.2f}s (n={g.n}, m={g.m}, "
+              f"fingerprint={fp[:12]}, "
+              f"{svc.provenance(name).describe()}) → {root}")
+        names.append(name)
+    rng = np.random.default_rng(0)
+    pool = [(int(m), float(e))
+            for m in (2, 3, 4, 5, 8)
+            for e in np.round(np.linspace(0.1, 0.9, 17), 3)]
+    refine_s = {}
+
+    async def client(cid: int):
+        for _ in range(args.requests):
+            mu, eps = pool[rng.integers(len(pool))]
+            name = names[rng.integers(len(names))]
+            await svc.query(name, mu, eps)
+            await asyncio.sleep(0)
+
+    async def refiner(name: str):
+        t0 = time.time()
+        await svc.refine(name)
+        refine_s[name] = time.time() - t0
+
+    async def main():
+        async with svc:
+            for name in names:
+                await svc.query(name, *pool[0])   # warm the batch shape
+            async with _periodic_stats(svc.engine.registry,
+                                       args.stats_every):
+                t0 = time.time()
+                # refinement races the full traffic wave — queries are
+                # served from σ̂ until each exact swap lands
+                await asyncio.gather(
+                    *[refiner(name) for name in names],
+                    *[client(i) for i in range(args.clients)])
+                return time.time() - t0
+
+    dt = asyncio.run(main())
+    total = args.clients * args.requests
+    st = svc.stats()
+    print(f"\n{total} queries from {args.clients} clients "
+          f"({len(names)} approximate-first indexes) in {dt:.2f}s "
+          f"→ {total / dt:.1f} q/s")
+    for name in names:
+        status = svc.status(name)
+        print(f"  {name}: refined to exact in {refine_s[name]:.2f}s → "
+              f"fingerprint={status['fingerprint'][:12]} "
+              f"({status['provenance']}, seq={status['seq']})")
+    print(f"device calls={st['device_queries']} cache_hits={st['cache_hits']} "
+          f"warmed={st['warmed']} hit_rate={st['cache_hit_rate']:.2f} "
+          f"approx_indexes_remaining={st['approx_indexes']}")
+    reg = svc.engine.registry
+    for span in ("index.approx_build", "live.refine", "live.refine_build"):
+        hist = reg.histogram(span)
+        if hist.count:
+            print(f"{span}: p50={hist.quantile(0.5):.2f}s "
+                  f"(n={hist.count})")
+    print(_fmt_latency(svc.engine.latency_stats()))
+    _write_metrics(reg, args.metrics_json)
 
 
 def cmd_update(args):
@@ -327,6 +438,13 @@ def main():
         p.add_argument("--measure", default="cosine")
         p.add_argument("--shards", type=int, default=0,
                        help="shard the query path over K devices")
+        if name in ("sweep", "serve"):
+            p.add_argument("--approx", metavar="METHOD[:K[:SEED]]",
+                           help="build LSH-sketched (approximate-first) "
+                           "indexes, e.g. simhash:256 or minhash:128:7; "
+                           "under `serve` the exact index is refined in "
+                           "the background and hot-swapped in while "
+                           "traffic runs")
         if name == "sweep":
             p.add_argument("--mus", default="2,4,8")
             p.add_argument("--epss", default="0.1:0.9:9")

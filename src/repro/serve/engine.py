@@ -181,6 +181,7 @@ class MicroBatchEngine:
         self._offload: Optional[ThreadPoolExecutor] = None
         self._mesh = None
         self._shard_plans: dict = {}   # fingerprint → ShardedQueryPlan
+        self._provenance: dict = {}    # fingerprint → IndexProvenance
         self.registry = registry if registry is not None else MetricsRegistry()
         self.tracer = Tracer(self.registry)
         self.stats = _StatsView(self.registry)
@@ -196,13 +197,18 @@ class MicroBatchEngine:
     # ------------------------------------------------------------------
     def register(self, index: ScanIndex, g: CSRGraph, *,
                  fingerprint: Optional[str] = None,
-                 shard_plan=None) -> str:
+                 shard_plan=None, provenance=None) -> str:
         """Add an index to the router; returns its routing fingerprint.
 
         ``shard_plan`` seeds the sharded-execution plan for this index
         (``EngineConfig(shards=k)`` mode) — the live-update hot-swap path
         hands over a plan refreshed from its predecessor so only mutated
         partitions of the O(m) operands were re-placed on device.
+
+        ``provenance`` (a :class:`repro.core.approx.IndexProvenance`) tags
+        the route with how the index's similarities were produced —
+        approximate-first registrations advertise their sketch params here
+        so clients/operators can see *what* a fingerprint answers with.
         """
         fp = (fingerprint if fingerprint is not None
               else index_fingerprint(index, g))
@@ -214,6 +220,10 @@ class MicroBatchEngine:
         self._indexes[fp] = (index, g)
         if shard_plan is not None:
             self._shard_plans[fp] = shard_plan
+        if provenance is not None:
+            self._provenance[fp] = provenance
+        else:
+            self._provenance.pop(fp, None)
         if self.fingerprint is None:
             self.fingerprint = fp
         return fp
@@ -222,9 +232,20 @@ class MicroBatchEngine:
         """Drop an index and its cache partition; → evicted entry count."""
         self._indexes.pop(fingerprint, None)
         self._shard_plans.pop(fingerprint, None)
+        self._provenance.pop(fingerprint, None)
         if self.fingerprint == fingerprint:
             self.fingerprint = next(iter(self._indexes), None)
         return self.cache.invalidate(fingerprint)
+
+    def provenance(self, fingerprint: Optional[str] = None):
+        """The :class:`~repro.core.approx.IndexProvenance` registered for
+        a route (default route when ``fingerprint`` is None). Routes
+        registered without a tag are exact builds by convention."""
+        from repro.core.approx import EXACT_PROVENANCE
+        fp = fingerprint if fingerprint is not None else self.fingerprint
+        if fp not in self._indexes:
+            raise KeyError(f"no index registered for fingerprint {fp!r}")
+        return self._provenance.get(fp, EXACT_PROVENANCE)
 
     def fingerprints(self) -> list[str]:
         return list(self._indexes)
@@ -541,6 +562,9 @@ class MicroBatchEngine:
         b = max(out["batches"], 1)
         out["avg_batch"] = (out["requests"] - out["cache_hits"]) / b
         out["indexes"] = len(self._indexes)
+        out["approx_indexes"] = sum(
+            1 for p in self._provenance.values()
+            if getattr(p, "is_approx", False))
         out["jit_recompiles"] = self.registry.counter(
             "engine.jit_recompiles").value
         cache_stats = {f"cache_{k}": v for k, v in self.cache.stats().items()}

@@ -6,6 +6,17 @@ on disk), serves (μ, ε) queries through the micro-batching router, and
 applies :class:`~repro.core.update.EdgeDelta` batches between engine
 flushes — no cold rebuilds, no process restarts.
 
+Approximate-first ingest (paper §5–§6.3): ``register_approximate`` builds
+an LSH-sketched index (cheap — sketches + the §6.3 degree-heuristic exact
+pass) and serves it *immediately*; ``refine`` then builds the exact index
+on the engine's offload worker while the approximate one keeps answering,
+and hot-swaps it in behind the same ``drain()`` barrier deltas use.
+Every index carries an :class:`~repro.core.approx.IndexProvenance` tag
+(exact vs approx + sketch params) that persists with snapshots and is
+queryable per route, so a crash before the refine swap restores the
+*approximate* index — the service degrades to provably-close answers,
+never to downtime — and a crash after it restores exact.
+
 Update protocol (per named index):
 
   1. ``apply_delta`` maintains the index incrementally (bit-identical to a
@@ -62,6 +73,8 @@ import logging
 from collections import OrderedDict
 from typing import Dict, List, Optional
 
+from repro.core.approx import (EXACT_PROVENANCE, ApproxIndexBuilder,
+                               ApproxParams, IndexProvenance)
 from repro.core.graph import CSRGraph
 from repro.core.index import ScanIndex, build_index
 from repro.core.query import ClusterResult
@@ -90,6 +103,7 @@ class _Live:
     fp: str
     seq: int            # last applied delta sequence number
     snapshot_seq: int   # delta seq covered by the newest full snapshot
+    provenance: IndexProvenance = EXACT_PROVENANCE
 
 
 class LiveIndexService:
@@ -146,11 +160,18 @@ class LiveIndexService:
         return self._live[name].g
 
     def status(self, name: str) -> dict:
-        """Version/routing state for ``name`` (fp, seq, snapshot_seq)."""
+        """Version/routing state for ``name`` (fp, seq, snapshot_seq,
+        provenance)."""
         live = self._live[name]
         return {"fingerprint": live.fp, "seq": live.seq,
                 "snapshot_seq": live.snapshot_seq,
-                "n": live.g.n, "m": live.g.m}
+                "n": live.g.n, "m": live.g.m,
+                "provenance": live.provenance.describe(),
+                "approx": live.provenance.is_approx}
+
+    def provenance(self, name: str) -> IndexProvenance:
+        """How ``name``'s currently served similarities were produced."""
+        return self._live[name].provenance
 
     def stats(self) -> dict:
         out = self.engine.batch_stats()
@@ -162,20 +183,47 @@ class LiveIndexService:
     # index creation / restore
     # ------------------------------------------------------------------
     def create(self, name: str, g: CSRGraph, *,
-               index: Optional[ScanIndex] = None) -> str:
+               index: Optional[ScanIndex] = None,
+               provenance: Optional[IndexProvenance] = None) -> str:
         """Build (or adopt) an index for ``name``, persist snapshot v0,
-        register it with the engine; → fingerprint."""
+        register it with the engine; → fingerprint. ``provenance`` tags an
+        adopted index (default: exact)."""
         if name in self._live:
             raise ValueError(f"index {name!r} already live")
         if index is None:
             index = build_index(g, self.measure)
+        if provenance is None:
+            provenance = EXACT_PROVENANCE
         fp = index_fingerprint(index, g)
         self.catalog.store(name).save(index, g, version=0,
-                                      measure=self.measure)
-        self.engine.register(index, g, fingerprint=fp)
+                                      measure=self.measure,
+                                      provenance=provenance)
+        self.engine.register(index, g, fingerprint=fp,
+                             provenance=provenance)
         self._live[name] = _Live(index=index, g=g, fp=fp, seq=0,
-                                 snapshot_seq=0)
+                                 snapshot_seq=0, provenance=provenance)
         return fp
+
+    def register_approximate(self, name: str, g: CSRGraph, *,
+                             params: ApproxParams = ApproxParams()) -> str:
+        """Approximate-first ingest: build an LSH-sketched index for
+        ``name`` (fast — the paper's §5/§6.3 construction), persist it as
+        snapshot v0 *with its approx provenance*, and start serving from
+        it immediately; → fingerprint.
+
+        The index answers queries with σ̂ instead of σ (provably close —
+        Theorems 5.2/5.3; exact on every §6.3 low-degree edge). Call
+        :meth:`refine` afterwards to build the exact index in the
+        background and hot-swap it in. A crash before the refine swap
+        restores this approximate index from the store (its provenance
+        travels with the snapshot), so the service degrades to
+        approximate answers, never to downtime.
+        """
+        if name in self._live:
+            raise ValueError(f"index {name!r} already live")
+        builder = ApproxIndexBuilder(self.measure, params)
+        index, provenance = builder.build(g, tracer=self.engine.tracer)
+        return self.create(name, g, index=index, provenance=provenance)
 
     def load(self, name: str) -> str:
         """Restore ``name`` from disk: latest snapshot + delta-chain tail
@@ -184,6 +232,7 @@ class LiveIndexService:
             raise ValueError(f"index {name!r} already live")
         store = self.catalog.store(name)
         index, g, fp = store.load()
+        provenance = store.provenance()
         stored_measure = store.measure()
         if stored_measure is not None and stored_measure != self.measure:
             raise ValueError(
@@ -209,9 +258,11 @@ class LiveIndexService:
                     f"delta {s} for {name!r} replayed to fingerprint "
                     f"{fp[:12]}… but the chain recorded {want_fp[:12]}…")
             seq = s
-        self.engine.register(index, g, fingerprint=fp)
+        self.engine.register(index, g, fingerprint=fp,
+                             provenance=provenance)
         self._live[name] = _Live(index=index, g=g, fp=fp, seq=seq,
-                                 snapshot_seq=snap_seq)
+                                 snapshot_seq=snap_seq,
+                                 provenance=provenance)
         return fp
 
     def load_all(self) -> List[str]:
@@ -329,9 +380,14 @@ class LiveIndexService:
 
                 if new_fp != live.fp:
                     with tracer.span("live.swap", index=name):
+                        # provenance carries across deltas: frontier σ is
+                        # recomputed exactly, but untouched edges keep
+                        # their sketched σ̂ — the index stays approximate
+                        # until refine() replaces it wholesale
                         self.engine.register(new_index, new_g,
                                              fingerprint=new_fp,
-                                             shard_plan=shard_plan)
+                                             shard_plan=shard_plan,
+                                             provenance=live.provenance)
                         self._live[name] = dataclasses.replace(
                             live, index=new_index, g=new_g, fp=new_fp,
                             seq=seq)
@@ -353,6 +409,106 @@ class LiveIndexService:
                             self.compact(name)
                     await self.engine.run_offloaded(_compact)
             return info
+
+    # ------------------------------------------------------------------
+    # background exact refinement (approximate-first lifecycle)
+    # ------------------------------------------------------------------
+    async def refine(self, name: str) -> str:
+        """Replace ``name``'s approximate index with the exact build, off
+        the event loop; → the fingerprint served afterwards.
+
+        The exact ``build_index`` (the expensive part — it is exactly the
+        work approximate-first ingest deferred) runs in the engine's
+        single-worker ``offload_executor()``, so the collector keeps
+        answering queries from the approximate index for the whole build.
+        The swap then follows the same protocol as a delta hot-swap:
+        register the exact index under its new fingerprint, flip the route
+        in one assignment on the loop, ``drain()`` until every in-flight
+        request has answered (old or new, never a mix), unregister the
+        approximate fingerprint — which drops exactly its cache partition —
+        and re-warm observed traffic. Finally the exact index is persisted
+        as a full snapshot (off-loop), so a restart serves exact without
+        re-refining.
+
+        Failure is graceful by construction: the approximate index is not
+        touched until the exact build has fully succeeded, so an exception
+        in the worker leaves it serving (counted in the
+        ``live.refine_failures`` registry counter) and the caller may
+        retry. Refines serialize with :meth:`apply` on the per-name lock —
+        a delta landing mid-build would otherwise be silently discarded by
+        the swap.
+
+        Refining an already-exact index is a no-op returning the current
+        fingerprint.
+        """
+        lock = self._locks.setdefault(name, asyncio.Lock())
+        tracer = self.engine.tracer
+        async with lock:
+            live = self._live[name]
+            if not live.provenance.is_approx:
+                return live.fp
+            seq = live.seq + 1
+
+            def _build_exact():
+                with tracer.span("live.refine_build", index=name,
+                                 n=live.g.n, m=live.g.m):
+                    new_index = build_index(live.g, self.measure)
+                with tracer.span("live.fingerprint", index=name):
+                    new_fp = index_fingerprint(new_index, live.g)
+                shard_plan = None
+                old_plan = self.engine._shard_plans.get(live.fp)
+                if old_plan is not None and new_fp != live.fp:
+                    with tracer.span("live.shard_refresh", index=name) as sp:
+                        shard_plan = old_plan.refresh(new_index, live.g)
+                        sp.set(**shard_plan.last_refresh)
+                return new_index, new_fp, shard_plan
+
+            with tracer.span("live.refine", index=name, seq=seq) as ref_sp:
+                try:
+                    new_index, new_fp, shard_plan = \
+                        await self.engine.run_offloaded(_build_exact)
+                except Exception:
+                    # graceful degradation: the approximate index was never
+                    # deregistered, so traffic keeps flowing against it
+                    self.engine.registry.inc("live.refine_failures")
+                    ref_sp.set(failed=True)
+                    raise
+                ref_sp.set(swapped=new_fp != live.fp)
+
+                if new_fp != live.fp:
+                    with tracer.span("live.swap", index=name):
+                        self.engine.register(new_index, live.g,
+                                             fingerprint=new_fp,
+                                             shard_plan=shard_plan,
+                                             provenance=EXACT_PROVENANCE)
+                        self._live[name] = dataclasses.replace(
+                            live, index=new_index, fp=new_fp, seq=seq,
+                            provenance=EXACT_PROVENANCE)
+                    with tracer.span("live.drain", index=name):
+                        await self.engine.drain()
+                    if live.fp not in {l.fp for l in self._live.values()}:
+                        self.engine.unregister(live.fp)
+                    with tracer.span("live.rewarm", index=name):
+                        await self._rewarm(name)
+                else:
+                    # sketch happened to reproduce exact σ bit-for-bit
+                    # (tiny graphs / pure-heuristic edges): just relabel
+                    self.engine.register(new_index, live.g,
+                                         fingerprint=new_fp,
+                                         provenance=EXACT_PROVENANCE)
+                    self._live[name] = dataclasses.replace(
+                        live, index=new_index, seq=seq,
+                        provenance=EXACT_PROVENANCE)
+
+                # persist the refined index as a full snapshot covering
+                # ``seq`` — version numbers stay monotone with delta seqs,
+                # so restore = this snapshot + strictly-newer chain tail.
+                # The O(m) disk write is worker work, not loop work.
+                def _snapshot():
+                    with tracer.span("live.compact", index=name):
+                        self.compact(name)
+                await self.engine.run_offloaded(_snapshot)
+            return self._live[name].fp
 
     async def _rewarm(self, name: str) -> None:
         """Re-issue the recently observed settings against the fresh
@@ -378,7 +534,7 @@ class LiveIndexService:
         live = self._live[name]
         store = self.catalog.store(name)
         store.save(live.index, live.g, version=live.seq,
-                   measure=self.measure)
+                   measure=self.measure, provenance=live.provenance)
         dropped = DeltaLog(store.directory).prune_through(live.seq)
         self._live[name] = dataclasses.replace(live, snapshot_seq=live.seq)
         return dropped

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ckpt import checkpoint
+from repro.core.approx import EXACT_PROVENANCE, IndexProvenance
 from repro.core.graph import CSRGraph
 from repro.core.index import ScanIndex
 from repro.core.update import EdgeDelta
@@ -57,7 +58,7 @@ def index_fingerprint(index: ScanIndex, g: CSRGraph) -> str:
 
 
 def _to_tree(index: ScanIndex, g: CSRGraph, fingerprint: str,
-             measure: str) -> dict:
+             measure: str, provenance: IndexProvenance) -> dict:
     return {
         "index": {f: getattr(index, f) for f in _INDEX_FIELDS},
         "graph": {f: getattr(g, f) for f in _GRAPH_FIELDS},
@@ -69,6 +70,8 @@ def _to_tree(index: ScanIndex, g: CSRGraph, fingerprint: str,
         },
         "fingerprint": np.frombuffer(fingerprint.encode(), dtype=np.uint8),
         "measure": np.frombuffer(measure.encode(), dtype=np.uint8),
+        "provenance": np.frombuffer(provenance.to_json().encode(),
+                                    dtype=np.uint8),
     }
 
 
@@ -82,11 +85,14 @@ class IndexStore:
     # -- write ---------------------------------------------------------
     def save(self, index: ScanIndex, g: CSRGraph, *,
              version: Optional[int] = None,
-             measure: str = "cosine") -> str:
+             measure: str = "cosine",
+             provenance: Optional[IndexProvenance] = None) -> str:
         """Commit a new version; returns the committed path. ``measure``
         records the similarity measure the index was built with, so a
         consumer that will *maintain* the index (incremental updates
-        recompute frontier σ) can refuse a mismatched adoption."""
+        recompute frontier σ) can refuse a mismatched adoption.
+        ``provenance`` records how the similarities were produced (exact
+        vs LSH-sketched, sketch params); default exact."""
         latest = checkpoint.latest_step(self.directory)
         if version is None:
             version = 0 if latest is None else latest + 1
@@ -96,8 +102,10 @@ class IndexStore:
             raise ValueError(
                 f"version {version} <= latest committed {latest}")
         fp = index_fingerprint(index, g)
+        if provenance is None:
+            provenance = EXACT_PROVENANCE
         return checkpoint.save(self.directory, version,
-                               _to_tree(index, g, fp, measure),
+                               _to_tree(index, g, fp, measure, provenance),
                                keep=self.keep)
 
     # -- read ----------------------------------------------------------
@@ -147,6 +155,20 @@ class IndexStore:
         by_path = checkpoint.load_leaves(self.directory, version)
         raw = by_path.get(checkpoint.leaf_key("measure"))
         return bytes(raw).decode() if raw is not None else None
+
+    def provenance(self, version: Optional[int] = None) -> IndexProvenance:
+        """The :class:`IndexProvenance` recorded at save time; checkpoints
+        predating the provenance leaf are exact builds by construction."""
+        if version is None:
+            version = self.latest_version()
+            if version is None:
+                raise FileNotFoundError(
+                    f"no committed index under {self.directory!r}")
+        by_path = checkpoint.load_leaves(self.directory, version)
+        raw = by_path.get(checkpoint.leaf_key("provenance"))
+        if raw is None:
+            return EXACT_PROVENANCE
+        return IndexProvenance.from_json(bytes(raw).decode())
 
 
 class DeltaLog:
@@ -241,8 +263,10 @@ class IndexCatalog:
             if self.store(d).latest_version() is not None)
 
     def save(self, name: str, index: ScanIndex, g: CSRGraph, *,
-             measure: str = "cosine") -> str:
-        return self.store(name).save(index, g, measure=measure)
+             measure: str = "cosine",
+             provenance: Optional[IndexProvenance] = None) -> str:
+        return self.store(name).save(index, g, measure=measure,
+                                     provenance=provenance)
 
     def load_all(self) -> Dict[str, Tuple[ScanIndex, CSRGraph]]:
         out: Dict[str, Tuple[ScanIndex, CSRGraph]] = {}

@@ -1,0 +1,110 @@
+"""End-to-end quality oracle: approximate index vs exact index.
+
+The §5 guarantees bound per-edge σ̂ error; what the serving system actually
+cares about is the *clustering* the approximate index yields. This module
+sweeps a (μ, ε) grid on the two structured generators (power-law with
+forced hubs — the regime where the degree heuristic leaves real sketched
+edges — and hub-ring) and asserts the approximate clustering stays close
+to the exact one: ARI on labels plus precision/recall on the core set
+(the §5 theorems are core-classification guarantees, so core fidelity is
+the direct readout). Grid aggregates, not per-point minima: a borderline
+(μ, ε) can legitimately flip a tiny cluster, which is exactly the
+within-(ε±δ) band the theorems exclude.
+
+The fast tests run a 3×5 grid; ``test_quality_grid_large`` widens it to
+5×16 on bigger graphs and is marked ``slow`` (local soak / scheduled CI).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (adjusted_rand_index, build_approx_index, build_index,
+                        core_precision_recall, hub_ring_graph,
+                        power_law_graph, query)
+
+MUS = (2, 3, 4)
+EPSS = (0.2, 0.35, 0.5, 0.65, 0.8)
+
+
+def grid_quality(g, idx_exact, idx_approx, mus=MUS, epss=EPSS):
+    """(mean ARI, frac of grid points with ARI ≥ 0.8, mean core precision,
+    mean core recall) of approx vs exact across the (μ, ε) grid."""
+    aris, precs, recs = [], [], []
+    for mu in mus:
+        for eps in epss:
+            res_e = query(idx_exact, g, mu, float(eps))
+            res_a = query(idx_approx, g, mu, float(eps))
+            aris.append(adjusted_rand_index(np.asarray(res_e.labels),
+                                            np.asarray(res_a.labels)))
+            p, r = core_precision_recall(np.asarray(res_a.is_core),
+                                         np.asarray(res_e.is_core))
+            precs.append(p)
+            recs.append(r)
+    aris = np.asarray(aris)
+    return (float(aris.mean()), float(np.mean(aris >= 0.8)),
+            float(np.mean(precs)), float(np.mean(recs)))
+
+
+def _graphs():
+    # hub_degree > samples forces genuinely sketched hub edges, so the
+    # degree heuristic cannot make the comparison trivially exact
+    return (("power_law", power_law_graph(400, seed=2, hub_degree=120)),
+            ("hub_ring", hub_ring_graph(150, 80, seed=3)))
+
+
+def test_quality_grid_with_degree_heuristic():
+    """Paper-default construction (§6.3 heuristic + simhash on hub-hub
+    edges) tracks the exact clustering closely across the grid."""
+    floors = {"power_law": (0.80, 0.60, 0.80, 0.90),
+              "hub_ring": (0.95, 0.90, 0.95, 0.95)}
+    for name, g in _graphs():
+        idx_e = build_index(g, "cosine")
+        idx_a, prov = build_approx_index(
+            g, measure="cosine", method="simhash", samples=64, seed=0,
+            degree_heuristic=True)
+        assert prov.is_approx and prov.samples == 64
+        ari, frac, prec, rec = grid_quality(g, idx_e, idx_a)
+        f_ari, f_frac, f_prec, f_rec = floors[name]
+        assert ari >= f_ari, f"{name}: mean ARI {ari:.3f} < {f_ari}"
+        assert frac >= f_frac, f"{name}: ARI≥0.8 fraction {frac:.2f}"
+        assert prec >= f_prec, f"{name}: core precision {prec:.3f}"
+        assert rec >= f_rec, f"{name}: core recall {rec:.3f}"
+
+
+def test_quality_grid_pure_sketch():
+    """With the heuristic off, *every* σ is sketched — quality must still
+    be usable at high sample count (this is the regime Theorems 5.2/5.3
+    actually govern: recall stays high, precision degrades gracefully)."""
+    floors = {"power_law": (0.55, 0.65, 0.90),
+              "hub_ring": (0.70, 0.75, 0.90)}
+    for name, g in _graphs():
+        idx_e = build_index(g, "cosine")
+        idx_a, _ = build_approx_index(
+            g, measure="cosine", method="simhash", samples=1024, seed=0,
+            degree_heuristic=False)
+        ari, _, prec, rec = grid_quality(g, idx_e, idx_a)
+        f_ari, f_prec, f_rec = floors[name]
+        assert ari >= f_ari, f"{name}: mean ARI {ari:.3f} < {f_ari}"
+        assert prec >= f_prec, f"{name}: core precision {prec:.3f}"
+        assert rec >= f_rec, f"{name}: core recall {rec:.3f}"
+
+
+@pytest.mark.slow
+def test_quality_grid_large():
+    """Wider (μ, ε) grid on larger graphs — the soak-lane variant."""
+    mus = (2, 3, 4, 5, 8)
+    epss = tuple(np.round(np.arange(0.15, 0.91, 0.05), 2))
+    cases = (("power_law", power_law_graph(1000, seed=4, hub_degree=200),
+              (0.85, 0.75, 0.85, 0.95)),
+             ("hub_ring", hub_ring_graph(400, 150, seed=5),
+              (0.95, 0.90, 0.95, 0.95)))
+    for name, g, (f_ari, f_frac, f_prec, f_rec) in cases:
+        idx_e = build_index(g, "cosine")
+        idx_a, _ = build_approx_index(
+            g, measure="cosine", method="simhash", samples=96, seed=1,
+            degree_heuristic=True)
+        ari, frac, prec, rec = grid_quality(g, idx_e, idx_a,
+                                            mus=mus, epss=epss)
+        assert ari >= f_ari, f"{name}: mean ARI {ari:.3f} < {f_ari}"
+        assert frac >= f_frac, f"{name}: ARI≥0.8 fraction {frac:.2f}"
+        assert prec >= f_prec, f"{name}: core precision {prec:.3f}"
+        assert rec >= f_rec, f"{name}: core recall {rec:.3f}"

@@ -12,9 +12,9 @@ import threading
 import numpy as np
 import pytest
 
-from repro.core import (EdgeDelta, ShardedQueryPlan, apply_delta,
-                        build_index, query, query_batch, query_mesh,
-                        random_graph)
+from repro.core import (ApproxParams, EdgeDelta, ShardedQueryPlan,
+                        apply_delta, build_index, query, query_batch,
+                        query_mesh, random_graph)
 from repro.serve import (DeltaLog, EngineConfig, LiveIndexService,
                          index_fingerprint)
 
@@ -424,6 +424,187 @@ def test_shard_plan_refresh_noop_reuses_everything():
     plan2 = plan.refresh(idx, g)
     assert plan2.last_refresh["placed"] == 0
     assert plan2.last_refresh["reused"] == plan2.last_refresh["chunks"]
+
+
+# --------------------------------------------------------------------------
+# approximate-first lifecycle: register_approximate → serve → refine
+# --------------------------------------------------------------------------
+APPROX = ApproxParams(method="simhash", samples=32, seed=7,
+                      degree_heuristic=False)  # force genuinely-sketched σ̂
+
+
+def test_refine_serves_approx_during_build_then_bit_identical(
+        tmp_path, monkeypatch):
+    """The acceptance property of approximate-first ingest: while the
+    exact build is parked in the worker, queries keep answering from the
+    approximate index (never an error, never a mix); after the swap,
+    results are bit-identical to a cold from-scratch ``build_index``."""
+    import repro.serve.live as live_mod
+
+    svc = _service(tmp_path)
+    g = _graph(n=70, deg=7.0, seed=9)
+    entered = threading.Event()
+    gate = threading.Event()
+    real_build = live_mod.build_index
+
+    def gated_build(*args, **kwargs):
+        entered.set()
+        assert gate.wait(30), "test gate never opened"
+        return real_build(*args, **kwargs)
+
+    monkeypatch.setattr(live_mod, "build_index", gated_build)
+    fp_a = svc.register_approximate("web", g, params=APPROX)
+    idx_approx = svc.index("web")
+    assert svc.provenance("web").is_approx
+    assert svc.engine.provenance(fp_a).is_approx
+    assert svc.engine.batch_stats()["approx_indexes"] == 1
+    settings = ((2, 0.3), (3, 0.5), (2, 0.7))
+
+    async def main():
+        async with svc:
+            refine_task = asyncio.ensure_future(svc.refine("web"))
+            while not entered.is_set():    # worker holds the exact build
+                await asyncio.sleep(0.005)
+            during = []
+            for mu, eps in settings:
+                during.append(await asyncio.wait_for(
+                    svc.query("web", mu, eps), timeout=10))
+            assert not refine_task.done(), \
+                "refine finished before the gate opened — it ran inline"
+            gate.set()
+            fp_exact = await refine_task
+            post = [await svc.query("web", mu, eps)
+                    for mu, eps in settings]
+            return during, post, fp_exact
+
+    during, post, fp_exact = asyncio.run(main())
+    # mid-refine queries answered from the approximate index, exactly
+    for (mu, eps), out in zip(settings, during):
+        ref = query(idx_approx, g, mu, eps)
+        np.testing.assert_array_equal(out.labels, np.asarray(ref.labels))
+    # post-swap results are bit-identical to a cold exact build
+    cold = build_index(g, "cosine")
+    assert fp_exact == index_fingerprint(cold, g)
+    for (mu, eps), out in zip(settings, post):
+        ref = query(cold, g, mu, eps)
+        np.testing.assert_array_equal(out.labels, np.asarray(ref.labels))
+        np.testing.assert_array_equal(out.is_core, np.asarray(ref.is_core))
+    st = svc.status("web")
+    assert not st["approx"] and st["provenance"] == "exact"
+    assert not svc.engine.provenance(fp_exact).is_approx
+    assert svc.engine.batch_stats()["approx_indexes"] == 0
+    with pytest.raises(KeyError):
+        svc.engine.provenance(fp_a)        # approx route fully retired
+
+
+def test_refine_failure_leaves_approx_serving(tmp_path, monkeypatch):
+    """Graceful degradation: a failed exact build must leave the
+    approximate index registered and answering, count one refine
+    failure, and stay retryable."""
+    import repro.serve.live as live_mod
+
+    svc = _service(tmp_path)
+    g = _graph(n=50, deg=5.0, seed=11)
+    real_build = live_mod.build_index
+    monkeypatch.setattr(live_mod, "build_index", None)  # guard create()
+    fp_a = svc.register_approximate("web", g, params=APPROX)
+
+    calls = {"n": 0}
+
+    def failing_build(*args, **kwargs):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("simulated OOM in exact build")
+        return real_build(*args, **kwargs)
+
+    monkeypatch.setattr(live_mod, "build_index", failing_build)
+
+    async def main():
+        async with svc:
+            with pytest.raises(RuntimeError, match="simulated OOM"):
+                await svc.refine("web")
+            # still serving the approximate index
+            out = await svc.query("web", 2, 0.5)
+            assert svc.fingerprint("web") == fp_a
+            assert svc.provenance("web").is_approx
+            # retry succeeds
+            fp_exact = await svc.refine("web")
+            return out, fp_exact
+
+    out, fp_exact = asyncio.run(main())
+    idx_a, _, _ = svc.catalog.store("web").load(version=0)
+    ref = query(idx_a, g, 2, 0.5)
+    np.testing.assert_array_equal(out.labels, np.asarray(ref.labels))
+    assert svc.engine.registry.counter("live.refine_failures").value == 1
+    assert fp_exact == index_fingerprint(build_index(g, "cosine"), g)
+    assert not svc.provenance("web").is_approx
+
+
+def test_crash_before_refine_swap_restores_approx(tmp_path):
+    """A restart before refine completes must restore the *approximate*
+    index from the store — provenance and fingerprint intact — and the
+    restored service must still be able to refine to exact."""
+    svc = _service(tmp_path)
+    g = _graph(n=60, deg=6.0, seed=13)
+    fp_a = svc.register_approximate("web", g, params=APPROX)
+    # crash: the service never ran refine; only snapshot v0 is on disk
+    svc2 = _service(tmp_path)
+    assert svc2.load("web") == fp_a
+    restored = svc2.provenance("web")
+    assert restored.is_approx and restored.method == "simhash"
+    assert restored.samples == APPROX.samples
+    assert svc2.engine.provenance(fp_a).is_approx
+
+    async def main():
+        async with svc2:
+            return await svc2.refine("web")
+
+    fp_exact = asyncio.run(main())
+    assert fp_exact == index_fingerprint(build_index(g, "cosine"), g)
+    # a third restart restores *exact* from the refine snapshot
+    svc3 = _service(tmp_path)
+    assert svc3.load("web") == fp_exact
+    assert not svc3.provenance("web").is_approx
+    assert svc3._live["web"].seq == svc3._live["web"].snapshot_seq == 1
+
+
+def test_delta_after_refine_keeps_chain_consistent(tmp_path):
+    """Refine bumps the sequence without a chain entry (the snapshot
+    covers it); a delta applied afterwards must extend the chain from the
+    refined snapshot and restore bit-identically."""
+    svc = _service(tmp_path, compact_every=100)
+    g = _graph(n=50, deg=5.0, seed=17)
+    svc.register_approximate("web", g, params=APPROX)
+
+    async def main():
+        async with svc:
+            await svc.refine("web")
+            await svc.apply("web", EdgeDelta.make(
+                inserts=[(0, 25), (1, 30)], weights=[0.9, 0.4]))
+
+    asyncio.run(main())
+    live = svc._live["web"]
+    assert live.seq == 2 and live.snapshot_seq == 1
+    assert DeltaLog(svc.catalog.store("web").directory).sequences() == [2]
+    svc2 = _service(tmp_path)
+    assert svc2.load("web") == live.fp
+    assert not svc2.provenance("web").is_approx
+    np.testing.assert_array_equal(
+        np.asarray(svc2._live["web"].index.no_sims),
+        np.asarray(live.index.no_sims))
+
+
+def test_refine_already_exact_is_noop(tmp_path):
+    svc = _service(tmp_path)
+    g = _graph(n=40, deg=4.0, seed=19)
+    fp = svc.create("web", g)
+
+    async def main():
+        async with svc:
+            assert await svc.refine("web") == fp
+
+    asyncio.run(main())
+    assert svc._live["web"].seq == 0       # no-op: no version bump
 
 
 def test_shard_plan_chunk_diff_updates_only_mutated_partitions():

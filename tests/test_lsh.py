@@ -105,3 +105,124 @@ def test_sketches_deterministic():
     a = np.asarray(simhash_sketches(g, 96, k))
     b = np.asarray(simhash_sketches(g, 96, k))
     np.testing.assert_array_equal(a, b)
+
+
+# --------------------------------------------------------------------------
+# chunk invariance (regression): the chunk width is a *memory* knob — it
+# must never change a sketch bit. The old per-chunk fold_in keyed the
+# gaussian projections on the chunk boundary, so chunk=512 vs chunk=64
+# produced different sketches, different σ̂, and therefore different index
+# fingerprints for identical (graph, params).
+# --------------------------------------------------------------------------
+def test_simhash_chunk_invariance_regression():
+    g = random_graph(50, 6.0, seed=31, weighted=True)
+    key = jax.random.PRNGKey(13)
+    samples = 600                       # spans the default 512-wide chunk
+    ref = np.asarray(simhash_sketches(g, samples, key, chunk=512))
+    for chunk in (64, 32, 640):
+        got = np.asarray(simhash_sketches(g, samples, key, chunk=chunk))
+        np.testing.assert_array_equal(
+            got, ref, err_msg=f"chunk={chunk} changed simhash sketch bits")
+    # and therefore σ̂ is chunking-invariant too
+    s_ref = np.asarray(simhash_edge_similarity(
+        jnp.asarray(ref), g.edge_u, g.nbrs, samples))
+    s_64 = np.asarray(simhash_edge_similarity(
+        simhash_sketches(g, samples, key, chunk=64),
+        g.edge_u, g.nbrs, samples))
+    np.testing.assert_array_equal(s_64, s_ref)
+    with pytest.raises(ValueError, match="multiple of 32"):
+        simhash_sketches(g, samples, key, chunk=48)
+
+
+def test_minhash_chunk_invariance_regression():
+    g = random_graph(40, 5.0, seed=32)
+    key = jax.random.PRNGKey(14)
+    ref = np.asarray(minhash_sketches(g, 100, key, chunk=64))
+    for chunk in (7, 100, 256):
+        got = np.asarray(minhash_sketches(g, 100, key, chunk=chunk))
+        np.testing.assert_array_equal(
+            got, ref, err_msg=f"chunk={chunk} changed minhash sketches")
+
+
+# --------------------------------------------------------------------------
+# §5 guarantees as properties (hypothesis; seed-pinned fast profile)
+# --------------------------------------------------------------------------
+try:
+    import hypothesis
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # pragma: no cover
+    hypothesis = None
+
+if hypothesis is not None:
+
+    def _bound(nm, k, eta=0.01):
+        """Hoeffding half-width: P(max-edge error > bound) < eta after a
+        union bound over the nm (vertex, edge) pairs the paper uses."""
+        return np.sqrt(np.log(2 * nm / eta) / (2 * k))
+
+    @settings(max_examples=8, deadline=None)
+    @given(gseed=st.integers(0, 40), skseed=st.integers(0, 1000))
+    def test_hypothesis_simhash_error_concentrates(gseed, skseed):
+        """Theorem 5.2: max |θ̂−θ| ≤ π·√(ln(2nm/η)/(2k)) w.h.p., and the
+        error contracts as the sample count grows."""
+        g = random_graph(64, 8.0, seed=gseed)
+        theta = np.arccos(np.clip(
+            np.asarray(compute_similarities(g, "cosine")), -1.0, 1.0))
+        errs = {}
+        for k in (32, 512):
+            sk = simhash_sketches(g, k, jax.random.PRNGKey(skseed))
+            sig = np.asarray(simhash_edge_similarity(
+                sk, g.edge_u, g.nbrs, k))
+            theta_hat = np.arccos(np.clip(sig, -1.0, 1.0))
+            errs[k] = np.max(np.abs(theta_hat - theta))
+            assert errs[k] <= np.pi * _bound(g.n * g.m, k), \
+                f"k={k}: θ error {errs[k]:.4f} breaks the 5.2 bound"
+        assert errs[512] <= 0.75 * errs[32] + 1e-6, \
+            "16× samples did not concentrate the θ estimate"
+
+    @settings(max_examples=8, deadline=None)
+    @given(gseed=st.integers(0, 40), skseed=st.integers(0, 1000))
+    def test_hypothesis_minhash_error_concentrates(gseed, skseed):
+        """Theorem 5.3 (Hoeffding): max |σ̂−σ| ≤ √(ln(2nm/η)/(2k)) w.h.p.,
+        contracting with the sample count."""
+        g = random_graph(64, 8.0, seed=gseed)
+        exact = np.asarray(compute_similarities(g, "jaccard"))
+        errs = {}
+        for k in (32, 512):
+            sk = minhash_sketches(g, k, jax.random.PRNGKey(skseed))
+            est = np.asarray(minhash_edge_similarity(sk, g.edge_u, g.nbrs))
+            errs[k] = np.max(np.abs(est - exact))
+            assert errs[k] <= _bound(g.n * g.m, k), \
+                f"k={k}: σ̂ error {errs[k]:.4f} breaks the 5.3 bound"
+        assert errs[512] <= 0.8 * errs[32] + 1e-6, \
+            "16× samples did not concentrate the σ̂ estimate"
+
+    @settings(max_examples=12, deadline=None)
+    @given(method=st.sampled_from(["simhash", "minhash", "kpartition"]),
+           samples=st.integers(8, 96),
+           skseed=st.integers(0, 1000),
+           gseed=st.integers(0, 40))
+    def test_hypothesis_degree_heuristic_bit_exact(method, samples,
+                                                   skseed, gseed):
+        """§6.3: every edge with a low-degree endpoint gets *bit-exact* σ
+        — equal to the exact engine's floats, regardless of method,
+        sample count, or sketch seed. (All draws compare equal to the
+        same exact reference, so the low-degree σ is also invariant
+        across sketch params by transitivity.)"""
+        from repro.core.graph import power_law_graph
+
+        g = power_law_graph(200, seed=gseed)
+        measure = "cosine" if method == "simhash" else "jaccard"
+        exact = np.asarray(compute_similarities(g, measure))
+        approx = np.asarray(approximate_similarities(
+            g, measure=measure, method=method, samples=samples,
+            key=jax.random.PRNGKey(skseed), degree_heuristic=True))
+        thr = samples if measure == "cosine" else (3 * samples) // 2
+        cdeg = np.asarray(g.closed_degrees())
+        eu, ev = np.asarray(g.edge_u), np.asarray(g.nbrs)
+        low = ~((cdeg[eu] > thr) & (cdeg[ev] > thr))
+        assert low.any(), "degenerate draw: no low-degree edge to check"
+        np.testing.assert_array_equal(
+            approx[low], exact[low],
+            err_msg=f"{method} k={samples} seed={skseed}: low-degree σ "
+                    "not bit-exact")
