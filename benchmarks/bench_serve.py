@@ -17,6 +17,20 @@ Cross-graph sections:
   * ``router_walk``  — grid-walking traffic, where sweep-ahead warming
     turns neighbor requests into cache hits.
 
+Seed-set (local-query) sections, on ``powerlaw-8k`` (the skewed
+acceptance graph):
+  * ``seed_direct``    — one ``query_seeds`` device batch answering B
+    (seed, μ, ε) requests through the fixed-shape frontier kernel, vs
+    ``seed_fullbatch`` — the same B (μ, ε) settings as full ``query_batch``
+    clusterings (the pre-seed-path way to answer a seed request); the
+    ``speedup`` column is the acceptance ratio (seeds/s vs q/s);
+  * ``seed_engine_cold`` / ``seed_engine_cached`` — ``query_seed``
+    traffic through the micro-batching engine (seed buckets + the
+    seed-keyed cache), with ``engine.seed_e2e``-derived latency columns;
+  * ``seed_live``      — seed traffic racing a live edit stream through
+    ``LiveIndexService``: entries survive deltas via frontier migration
+    (``migrated`` / ``dropped`` columns).
+
 Engine/router rows carry p50/p90/p99 queue-wait and end-to-end latency
 columns read from the engine's own ``repro.obs`` histograms
 (``engine.queue_wait`` / ``engine.e2e``), with :func:`hist_delta`
@@ -43,6 +57,8 @@ GRID_EPS = (0.2, 0.4, 0.6, 0.8)
 SNAPSHOT = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serve.json"
 
 _LAT_HISTS = (("engine.e2e", "e2e"), ("engine.queue_wait", "wait"))
+_SEED_LAT_HISTS = (("engine.seed_e2e", "e2e"),
+                   ("engine.seed_queue_wait", "wait"))
 
 
 def _hists(engine) -> dict:
@@ -50,20 +66,20 @@ def _hists(engine) -> dict:
     return engine.registry.snapshot()["histograms"]
 
 
-def _wave(now: dict, before: dict) -> dict:
+def _wave(now: dict, before: dict, hists=_LAT_HISTS) -> dict:
     """Latency histograms for one traffic wave: ``now - before``."""
     out = {}
-    for key, _ in _LAT_HISTS:
+    for key, _ in hists:
         if key in now:
             out[key] = (hist_delta(now[key], before[key])
                         if key in before else now[key])
     return out
 
 
-def _lat_cols(wave: dict) -> str:
+def _lat_cols(wave: dict, hists=_LAT_HISTS) -> str:
     """Derived columns ``e2e_p50_ms=…;…;wait_p99_ms=…`` for one wave."""
     parts = []
-    for key, label in _LAT_HISTS:
+    for key, label in hists:
         snap = wave.get(key)
         if not snap or not snap["count"]:
             continue
@@ -229,5 +245,141 @@ def run():
         f"qps={total / dt:.1f};hit_rate={st['cache_hit_rate']:.2f};"
         f"warmed={st['warmed']};device_calls={st['device_queries']};"
         f"{_lat_cols(wk_lat)}"))
+
+    lines.extend(_seed_sections())
     write_snapshot(SNAPSHOT, "serve", lines)
+    return lines
+
+
+def _seed_sections():
+    """Seed-set (local query) rows on the skewed acceptance graph."""
+    from repro.core import query_seeds
+    from repro.core.update import random_delta
+    from repro.serve import LiveIndexService
+
+    lines = []
+    gname = "powerlaw-8k"
+    g = load_graph(gname)
+    idx = build_index(g, "cosine")
+
+    # B seed requests at mixed (μ, ε) settings, drawn once and reused by
+    # every section so direct / engine / full-batch rows are comparable
+    rng = np.random.default_rng(5)
+    n_seeds = 64
+    pool = [(int(m), float(e)) for m in GRID_MUS for e in (0.4, 0.6, 0.8)]
+    picks = rng.integers(len(pool), size=n_seeds)
+    smus = np.asarray([pool[i][0] for i in picks], np.int32)
+    sepss = np.asarray([pool[i][1] for i in picks], np.float32)
+    seeds = rng.integers(g.n, size=n_seeds).astype(np.int32)
+
+    # ---- direct kernel vs the full-clustering way to answer the same
+    # requests: B (μ, ε) rows of query_batch, each clustering all of g ----
+    def direct():
+        return query_seeds(idx, g, seeds, smus, sepss)
+
+    def fullb():
+        return query_batch(idx, g, smus, sepss)
+
+    t_seed = timeit(direct, trials=2)
+    t_full = timeit(fullb, trials=2)
+    spilled = int(direct().spilled.sum())
+    lines.append(emit(
+        f"serve/seed_direct/{gname}/batch={n_seeds}", t_seed,
+        f"seeds_per_s={n_seeds / t_seed:.1f};spilled={spilled};"
+        f"speedup_vs_full={t_full / t_seed:.2f}x"))
+    lines.append(emit(
+        f"serve/seed_fullbatch/{gname}/settings={n_seeds}", t_full,
+        f"qps={n_seeds / t_full:.1f}"))
+
+    # ---- query_seed through the engine: cold wave, then fully cached ----
+    cfg = EngineConfig(max_batch=16, flush_ms=2.0, seed_batch=16)
+    reqs = [(int(s), int(m), float(e))
+            for s, m, e in zip(seeds, smus, sepss)]
+    n_clients = 8
+    per_client = len(reqs) // n_clients
+
+    async def seed_traffic():
+        engine = MicroBatchEngine(idx, g, config=cfg)
+        async with engine:
+            await engine.query_seed(*reqs[0])     # compile warmup
+            base = _hists(engine)
+            t0 = time.time()
+
+            async def client(i):
+                for s, m, e in reqs[i * per_client:(i + 1) * per_client]:
+                    await engine.query_seed(s, m, e)
+                    await asyncio.sleep(0)
+
+            await asyncio.gather(*[client(i) for i in range(n_clients)])
+            dt = time.time() - t0
+            after_cold = _hists(engine)
+            t1 = time.time()                      # same requests → cache
+            await asyncio.gather(*[client(i) for i in range(n_clients)])
+            dt_hot = time.time() - t1
+            after_hot = _hists(engine)
+        return (dt, dt_hot, engine.batch_stats(),
+                _wave(after_cold, base, _SEED_LAT_HISTS),
+                _wave(after_hot, after_cold, _SEED_LAT_HISTS))
+
+    dt, dt_hot, st, cold_lat, hot_lat = asyncio.run(seed_traffic())
+    total = n_clients * per_client
+    lines.append(emit(
+        f"serve/seed_engine_cold/{gname}/clients={n_clients}", dt / total,
+        f"seed_qps={total / dt:.1f};"
+        f"device_calls={st['seed_device_queries']};"
+        f"buckets={st['seed_batches']};spills={st['seed_spills']};"
+        f"{_lat_cols(cold_lat, _SEED_LAT_HISTS)}"))
+    lines.append(emit(
+        f"serve/seed_engine_cached/{gname}/clients={n_clients}",
+        dt_hot / total,
+        f"seed_qps={total / dt_hot:.1f};"
+        f"cache_hits={st['seed_cache_hits']};"
+        f"{_lat_cols(hot_lat, _SEED_LAT_HISTS)}"))
+
+    # ---- seed traffic racing a live edit stream: cache entries ride
+    # through each hot-swap via frontier migration ----
+    import tempfile
+
+    svc = LiveIndexService(tempfile.mkdtemp(prefix="bench_seed_live_"),
+                           config=EngineConfig(max_batch=16, flush_ms=2.0,
+                                               seed_batch=16),
+                           measure="cosine")
+    svc.create("live", g, index=idx)
+    n_updates, update_batch, n_requests = 4, 8, 16
+
+    async def live_seed_traffic():
+        async with svc:
+            await svc.query_seed("live", *reqs[0])
+            drng = np.random.default_rng(7)
+            t0 = time.time()
+
+            async def editor():
+                for _ in range(n_updates):
+                    delta = random_delta(svc.graph("live"),
+                                         update_batch, drng)
+                    await svc.apply("live", delta)
+                    await asyncio.sleep(0)
+
+            async def client(i):
+                crng = np.random.default_rng(100 + i)
+                for _ in range(n_requests):
+                    m, e = pool[crng.integers(len(pool))]
+                    await svc.query_seed("live",
+                                         int(crng.integers(g.n)), m, e)
+                    await asyncio.sleep(0)
+
+            await asyncio.gather(
+                editor(), *[client(i) for i in range(n_clients)])
+            return time.time() - t0
+
+    dt = asyncio.run(live_seed_traffic())
+    reg = svc.engine.registry
+    total = n_clients * n_requests
+    lines.append(emit(
+        f"serve/seed_live/{gname}/updates={n_updates}"
+        f"/clients={n_clients}", dt / total,
+        f"seed_qps={total / dt:.1f};"
+        f"migrated={reg.counter('live.seed_entries_migrated').value};"
+        f"dropped={reg.counter('live.seed_entries_dropped').value};"
+        f"rewarm_failures={reg.counter('live.rewarm_failures').value}"))
     return lines

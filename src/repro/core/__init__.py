@@ -19,6 +19,8 @@ from repro.core.similarity import (
 )
 from repro.core.index import ScanIndex, build_index, co_core_prefix, get_cores
 from repro.core.query import ClusterResult, query, query_batch, hubs_outliers
+from repro.core.local import (SeedBatchResult, SeedResult, query_seeds,
+                              query_seeds_device)
 from repro.core.lsh import (
     approximate_similarities,
     simhash_sketches,

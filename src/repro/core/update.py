@@ -166,6 +166,24 @@ class UpdateInfo:
     n_sim_groups: int      # degree-class kernel groups the frontier ran
     n_plan_rows: int = 0   # block tile rows SimilarityPlan.apply rewrote
     n_plan_classes: int = 0  # class blocks not reused (patched/remapped/built)
+    # Vertices whose *local* query result could differ from the
+    # predecessor index: the affected rows (touched ∪ frontier-edge
+    # endpoints — every vertex whose core bit, row order, or incident σ
+    # could have changed) closed under two adjacency hops of the new
+    # graph. Two hops because a border can re-attach into a cluster it
+    # never touched: an edit flips a core bit at z, z's neighbor b falls
+    # through to its next-best core c, and b joins c's cluster — c is
+    # two hops from z. Any seed outside this set, whose members avoid
+    # it, provably keeps a bit-identical answer (the serve layer's
+    # seed-cache invalidation rule).
+    frontier_vertices: Optional[np.ndarray] = None  # int ids, sorted
+
+    def stale_mask(self, n: int) -> np.ndarray:
+        """bool[n] over :attr:`frontier_vertices` (empty → all-False)."""
+        mask = np.zeros(n, dtype=bool)
+        if self.frontier_vertices is not None:
+            mask[self.frontier_vertices] = True
+        return mask
 
 
 def _edit_edge_set(g: CSRGraph, delta: EdgeDelta):
@@ -413,11 +431,22 @@ def apply_delta(
         m2c=m2c_new,
         max_cdeg=max_cdeg,
     )
+    # seed-cache invalidation set: affected rows closed under two
+    # adjacency hops of the new graph (see UpdateInfo.frontier_vertices
+    # for why two) — O(m) boolean gathers, host-side
+    stale = aff_mask.copy()
+    for _ in range(2):
+        ext = np.zeros(n, dtype=bool)
+        if g2.m2:
+            ext[ev2[stale[eu2]]] = True
+        stale |= ext
+
     info = UpdateInfo(
         n_inserted=n_ins, n_deleted=n_del, n_touched=len(touched),
         n_frontier=n_frontier, n_affected_rows=int(aff_mask.sum()),
         n_sim_groups=n_sim_groups,
         n_plan_rows=pstats["rows_written"],
         n_plan_classes=(pstats["patched"] + pstats["remapped"]
-                       + pstats["built"]))
+                       + pstats["built"]),
+        frontier_vertices=np.flatnonzero(stale))
     return new_index, g2, info

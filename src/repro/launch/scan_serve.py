@@ -20,6 +20,16 @@ routing several indexes through one engine:
     # one engine, three indexes, mixed-fingerprint traffic
     PYTHONPATH=src python -m repro.launch.scan_serve serve --indexes 3
 
+    # seed-set (local) traffic: every client asks for single vertices'
+    # clusters via query_seed(v, μ, ε) instead of full clusterings
+    PYTHONPATH=src python -m repro.launch.scan_serve serve \
+        --traffic seed --n 8192 --clients 32
+
+    # 50/50 seed + global traffic against the live-update service: the
+    # seed cache survives each delta through frontier migration
+    PYTHONPATH=src python -m repro.launch.scan_serve update \
+        --traffic mixed --updates 8
+
     # resident live-update process: a synthetic edit stream mutates the
     # graph while concurrent clients keep querying it
     PYTHONPATH=src python -m repro.launch.scan_serve update \
@@ -64,6 +74,24 @@ def _fmt_latency(st: dict) -> str:
             f"p99={st['e2e_p99'] * 1e3:.2f}ms (n={st['e2e_n']}); "
             f"queue-wait p50={st['wait_p50'] * 1e3:.2f}ms "
             f"p99={st['wait_p99'] * 1e3:.2f}ms (n={st['wait_n']})")
+
+
+_SEED_SHARE = {"global": 0.0, "seed": 1.0, "mixed": 0.5}
+
+
+def _fmt_seed_report(bst: dict, lst: dict) -> str:
+    """Two lines of seed-path counters + latency (``--traffic seed|mixed``)."""
+    return (f"seed path: requests={bst['seed_requests']} "
+            f"device_calls={bst['seed_device_queries']} "
+            f"buckets={bst['seed_batches']} "
+            f"cache_hits={bst['seed_cache_hits']} "
+            f"deduped={bst['seed_deduped']} spills={bst['seed_spills']} "
+            f"warmed={bst['seed_warmed']}\n"
+            f"seed latency: e2e p50={lst['seed_e2e_p50'] * 1e3:.2f}ms "
+            f"p99={lst['seed_e2e_p99'] * 1e3:.2f}ms "
+            f"(n={lst['seed_e2e_n']}); "
+            f"queue-wait p50={lst['seed_wait_p50'] * 1e3:.2f}ms "
+            f"(n={lst['seed_wait_n']})")
 
 
 @contextlib.asynccontextmanager
@@ -191,31 +219,40 @@ def cmd_serve(args):
         from repro.serve import IndexCatalog
         catalog = IndexCatalog(args.save)
         args.save = None
-    fps = []
+    fps, sizes = [], []
     for k in range(max(args.indexes, 1)):
         index, g, fp = get_index(args, seed=args.seed + k)
         if catalog is not None:
             path = catalog.save(f"idx{k}", index, g, measure=args.measure)
             print(f"persisted to {path}")
         fps.append(engine.register(index, g, fingerprint=fp))
+        sizes.append(g.n)
     rng = np.random.default_rng(0)
     pool = [(int(m), float(e))
             for m in (2, 3, 4, 5, 8)
             for e in np.round(np.linspace(0.1, 0.9, 17), 3)]
+    seed_share = _SEED_SHARE[args.traffic]
 
     async def client(cid: int):
         for _ in range(args.requests):
             mu, eps = pool[rng.integers(len(pool))]
-            fp = fps[rng.integers(len(fps))]
-            res = await engine.query(mu, eps, fingerprint=fp)
+            k = rng.integers(len(fps))
+            if rng.random() < seed_share:
+                res = await engine.query_seed(int(rng.integers(sizes[k])),
+                                              mu, eps, fingerprint=fps[k])
+            else:
+                res = await engine.query(mu, eps, fingerprint=fps[k])
             del res
             await asyncio.sleep(0)
 
     async def main():
         async with engine:
-            # warm every index's compiled batch shape before timing
+            # warm every index's compiled batch shape(s) before timing
             for fp in fps:
-                await engine.query(*pool[0], fingerprint=fp)
+                if seed_share < 1.0:
+                    await engine.query(*pool[0], fingerprint=fp)
+                if seed_share > 0.0:
+                    await engine.query_seed(0, *pool[0], fingerprint=fp)
             async with _periodic_stats(engine.registry, args.stats_every):
                 t0 = time.time()
                 await asyncio.gather(
@@ -227,15 +264,18 @@ def cmd_serve(args):
     st = engine.batch_stats()
     mode = f"{len(fps)} indexes" + (f", {args.shards} shards"
                                     if cfg.shards else "")
-    print(f"\n{total} queries from {args.clients} clients ({mode}) "
-          f"in {dt:.2f}s → {total / dt:.1f} q/s")
+    print(f"\n{total} {args.traffic} requests from {args.clients} clients "
+          f"({mode}) in {dt:.2f}s → {total / dt:.1f} req/s")
     print(f"device calls={st['device_queries']} buckets={st['batches']} "
           f"avg_batch={st['avg_batch']:.1f} cache_hits={st['cache_hits']} "
           f"deduped={st['deduped']} warmed={st['warmed']} "
           f"hit_rate={st['cache_hit_rate']:.2f} "
           f"partitions={st['cache_partitions']} "
           f"jit_recompiles={st['jit_recompiles']}")
-    print(_fmt_latency(engine.latency_stats()))
+    lst = engine.latency_stats()
+    if seed_share > 0.0:
+        print(_fmt_seed_report(st, lst))
+    print(_fmt_latency(lst))
     _write_metrics(engine.registry, args.metrics_json)
 
 
@@ -255,7 +295,7 @@ def _serve_approx(args, cfg):
             f"similarity; pass --measure {params.measure}")
     root = args.save or tempfile.mkdtemp(prefix="scan_approx_")
     svc = LiveIndexService(root, config=cfg, measure=args.measure)
-    names = []
+    names, sizes = [], []
     for k in range(max(args.indexes, 1)):
         g = random_graph(args.n, args.avg_degree, seed=args.seed + k,
                          weighted=args.weighted,
@@ -268,17 +308,23 @@ def _serve_approx(args, cfg):
               f"fingerprint={fp[:12]}, "
               f"{svc.provenance(name).describe()}) → {root}")
         names.append(name)
+        sizes.append(g.n)
     rng = np.random.default_rng(0)
     pool = [(int(m), float(e))
             for m in (2, 3, 4, 5, 8)
             for e in np.round(np.linspace(0.1, 0.9, 17), 3)]
+    seed_share = _SEED_SHARE[args.traffic]
     refine_s = {}
 
     async def client(cid: int):
         for _ in range(args.requests):
             mu, eps = pool[rng.integers(len(pool))]
-            name = names[rng.integers(len(names))]
-            await svc.query(name, mu, eps)
+            k = rng.integers(len(names))
+            if rng.random() < seed_share:
+                await svc.query_seed(names[k],
+                                     int(rng.integers(sizes[k])), mu, eps)
+            else:
+                await svc.query(names[k], mu, eps)
             await asyncio.sleep(0)
 
     async def refiner(name: str):
@@ -290,6 +336,8 @@ def _serve_approx(args, cfg):
         async with svc:
             for name in names:
                 await svc.query(name, *pool[0])   # warm the batch shape
+                if seed_share > 0.0:
+                    await svc.query_seed(name, 0, *pool[0])
             async with _periodic_stats(svc.engine.registry,
                                        args.stats_every):
                 t0 = time.time()
@@ -314,6 +362,9 @@ def _serve_approx(args, cfg):
     print(f"device calls={st['device_queries']} cache_hits={st['cache_hits']} "
           f"warmed={st['warmed']} hit_rate={st['cache_hit_rate']:.2f} "
           f"approx_indexes_remaining={st['approx_indexes']}")
+    if seed_share > 0.0:
+        print(_fmt_seed_report(svc.engine.batch_stats(),
+                               svc.engine.latency_stats()))
     reg = svc.engine.registry
     for span in ("index.approx_build", "live.refine", "live.refine_build"):
         hist = reg.histogram(span)
@@ -367,6 +418,7 @@ def cmd_update(args):
     pool = [(int(m), float(e))
             for m in (2, 3, 4, 5)
             for e in np.round(np.linspace(0.1, 0.9, 9), 3)]
+    seed_share = _SEED_SHARE[args.traffic]
     apply_times, frontier_sizes = [], []
 
     async def editor():
@@ -381,12 +433,20 @@ def cmd_update(args):
     async def client(cid: int):
         for _ in range(args.requests):
             mu, eps = pool[rng.integers(len(pool))]
-            await svc.query("live", mu, eps)
+            if rng.random() < seed_share:
+                # seed entries ride through each delta via frontier
+                # migration; n is stable under random_delta edit streams
+                await svc.query_seed("live",
+                                     int(rng.integers(g.n)), mu, eps)
+            else:
+                await svc.query("live", mu, eps)
             await asyncio.sleep(0)
 
     async def main_():
         async with svc:
             await svc.query("live", *pool[0])     # compile warmup
+            if seed_share > 0.0:
+                await svc.query_seed("live", 0, *pool[0])
             async with _periodic_stats(svc.engine.registry,
                                        args.stats_every):
                 t0 = time.time()
@@ -410,7 +470,14 @@ def cmd_update(args):
           f"hit_rate={st['cache_hit_rate']:.2f} "
           f"partitions={st['cache_partitions']} "
           f"jit_recompiles={st['jit_recompiles']}")
-    print(_fmt_latency(svc.engine.latency_stats()))
+    lst = svc.engine.latency_stats()
+    if seed_share > 0.0:
+        reg = svc.engine.registry
+        print(_fmt_seed_report(svc.engine.batch_stats(), lst))
+        print(f"seed cache vs deltas: migrated="
+              f"{reg.counter('live.seed_entries_migrated').value} "
+              f"dropped={reg.counter('live.seed_entries_dropped').value}")
+    print(_fmt_latency(lst))
     apply_hist = svc.engine.registry.histogram("live.apply_delta")
     if apply_hist.count:
         print(f"apply pipeline: apply_delta p50="
@@ -451,6 +518,16 @@ def main():
         else:
             p.add_argument("--clients", type=int, default=16)
             p.add_argument("--requests", type=int, default=32)
+            p.add_argument("--traffic", choices=("global", "seed", "mixed"),
+                           default="global",
+                           help="client workload shape: 'global' clusters "
+                           "the whole graph per request (query(μ, ε)); "
+                           "'seed' asks for single random vertices' "
+                           "clusters (query_seed(v, μ, ε) — served by the "
+                           "fixed-shape local frontier kernel + the "
+                           "seed-keyed cache); 'mixed' draws 50/50 per "
+                           "request. Under `update`, seed cache entries "
+                           "survive deltas via frontier migration")
             p.add_argument("--max-batch", type=int, default=32)
             p.add_argument("--flush-ms", type=float, default=2.0)
             p.add_argument("--no-warm", action="store_true",

@@ -18,7 +18,12 @@ This package is the serving layer that completes that story:
     calls: requests carry an index fingerprint, buckets flush per index,
     failures isolate per bucket, and padding slots pre-warm the (μ, ε)
     neighborhood of observed traffic. ``EngineConfig(shards=k)`` runs the
-    device calls sharded over a k-way mesh for giant graphs;
+    device calls sharded over a k-way mesh for giant graphs. Seed-set
+    (local) queries — ``engine.query_seed(seed, μ, ε)`` — ride the same
+    loop as their own request kind with their own fixed batch shape and
+    a dedicated ``SeedResultCache`` keyed on (fingerprint, seed, μ,
+    quantized ε), whose entries survive live deltas when the seed's
+    cluster provably didn't change (frontier migration);
   * :mod:`repro.serve.live`  — resident update+query process:
     ``LiveIndexService`` applies ``EdgeDelta`` batches to its indexes
     incrementally (``repro.core.update``), hot-swaps them atomically into
@@ -38,6 +43,6 @@ from repro.serve.store import (DeltaLog, IndexCatalog, IndexStore,
                                index_fingerprint)
 from repro.serve.sweep import SweepResult, sweep, grid_sweep, sweep_stats
 from repro.serve.cache import (PartitionedResultCache, ResultCache,
-                               neighborhood, quantize_eps)
+                               SeedResultCache, neighborhood, quantize_eps)
 from repro.serve.engine import MicroBatchEngine, EngineConfig
 from repro.serve.live import LiveIndexService

@@ -162,6 +162,134 @@ class PartitionedResultCache:
                 "hit_rate": hits / total if total else 0.0}
 
 
+class SeedResultCache:
+    """Per-fingerprint LRU partitions over (seed, μ, quantized ε) →
+    :class:`~repro.core.local.SeedResult`.
+
+    Same partitioning philosophy as :class:`PartitionedResultCache` —
+    one hot index cannot evict a sibling's entries, and unregistration
+    drops a partition wholesale — but with one extra verb the global
+    cache cannot have: :meth:`migrate`. A delta changes the serving
+    fingerprint, which for *global* results invalidates everything; a
+    *seed* result is local, so entries whose seed and members all avoid
+    the delta's stale set (``UpdateInfo.frontier_vertices``) are provably
+    bit-identical under the new index and carry over to its fingerprint
+    instead of being recomputed.
+    """
+
+    def __init__(self, capacity: int = 4096,
+                 eps_quantum: float = DEFAULT_EPS_QUANTUM):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self.eps_quantum = eps_quantum
+        self._parts: dict[str, OrderedDict] = {}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.migrated = 0
+        self.dropped = 0
+
+    def key(self, seed: int, mu: int, eps: float) -> Tuple[int, int, float]:
+        return (int(seed), int(mu), quantize_eps(eps, self.eps_quantum))
+
+    def get(self, fingerprint: str, seed: int, mu: int, eps: float
+            ) -> Optional[object]:
+        part = self._parts.get(fingerprint)
+        if part is None:
+            self.misses += 1
+            return None
+        k = self.key(seed, mu, eps)
+        if k in part:
+            part.move_to_end(k)
+            self.hits += 1
+            return part[k]
+        self.misses += 1
+        return None
+
+    def peek(self, fingerprint: str, seed: int, mu: int, eps: float
+             ) -> Optional[object]:
+        """``get`` without the hit/miss accounting (internal re-checks)."""
+        part = self._parts.get(fingerprint)
+        if part is None:
+            return None
+        k = self.key(seed, mu, eps)
+        if k in part:
+            part.move_to_end(k)
+            return part[k]
+        return None
+
+    def put(self, fingerprint: str, seed: int, mu: int, eps: float,
+            value) -> None:
+        part = self._parts.get(fingerprint)
+        if part is None:
+            part = self._parts[fingerprint] = OrderedDict()
+        k = self.key(seed, mu, eps)
+        if k in part:
+            part.move_to_end(k)
+        part[k] = value
+        while len(part) > self.capacity:
+            part.popitem(last=False)
+            self.evictions += 1
+
+    def migrate(self, old_fp: str, new_fp: str,
+                stale_mask) -> Tuple[int, int]:
+        """Carry the old fingerprint's still-valid entries to the new one.
+
+        An entry survives iff neither its seed nor any of its members
+        lies in ``stale_mask`` (bool[n], from
+        ``UpdateInfo.frontier_vertices``) — outside that set the new
+        index answers bit-identically, so the cached result *is* the new
+        result. Returns (kept, dropped); the old partition is consumed
+        either way (in-flight traffic may lazily recreate it; the
+        caller's unregister sweeps that up).
+        """
+        part = self._parts.pop(old_fp, None)
+        if not part:
+            return (0, 0)
+        kept: OrderedDict = OrderedDict()
+        dropped = 0
+        for k, res in part.items():
+            seed = k[0]
+            if stale_mask[seed] or bool(
+                    (res.member_mask & stale_mask).any()):
+                dropped += 1
+                continue
+            kept[k] = res
+        if kept:
+            dest = self._parts.setdefault(new_fp, OrderedDict())
+            for k, res in kept.items():
+                if k in dest:
+                    dest.move_to_end(k)
+                dest[k] = res
+            while len(dest) > self.capacity:
+                dest.popitem(last=False)
+                self.evictions += 1
+        self.migrated += len(kept)
+        self.dropped += dropped
+        return (len(kept), dropped)
+
+    def invalidate(self, fingerprint: Optional[str] = None) -> int:
+        if fingerprint is None:
+            n = sum(len(p) for p in self._parts.values())
+            self._parts.clear()
+            return n
+        part = self._parts.pop(fingerprint, None)
+        return len(part) if part is not None else 0
+
+    def __len__(self) -> int:
+        return sum(len(p) for p in self._parts.values())
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {"size": len(self), "capacity": self.capacity,
+                "partitions": len(self._parts),
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "migrated": self.migrated, "dropped": self.dropped,
+                "hit_rate": self.hits / total if total else 0.0}
+
+
 def neighborhood(mu: int, eps: float, *,
                  eps_step: float = 0.05,
                  quantum: float = DEFAULT_EPS_QUANTUM) -> list:

@@ -45,6 +45,23 @@ Throughput mechanics (unchanged from the single-index engine):
   call through :func:`repro.core.query_batch_sharded` on a k-way mesh
   (giant-graph mode: edge arrays partitioned over the ``data`` axis).
 
+Seed-set (local) queries are a second request kind on the same queue:
+``await engine.query_seed(seed, μ, ε)`` answers "what is *this vertex's*
+cluster" through :func:`repro.core.local.query_seeds` — work scales with
+the output cluster, not with n. Seed requests get their **own buckets
+and their own fixed batch shape** (``seed_batch`` lanes per device call,
+padded the same way), so seed and global traffic never share a compiled
+artifact; their dedup/cache key is (fingerprint, seed, μ, quantized ε)
+in a dedicated :class:`~repro.serve.cache.SeedResultCache`, whose
+entries survive live-index deltas when the seed's cluster provably
+didn't change (``SeedResultCache.migrate`` — see ``serve/live.py``).
+Padding slots warm the (μ±1, ε±δ) neighborhood of the *same seed*.
+Seed telemetry mirrors the global taxonomy under ``engine.seed_*``:
+``seed_e2e`` histogram, ``seed_queue_wait`` event, ``seed_cache_lookup``
+/ ``seed_device_call`` spans, and ``seed_requests`` / ``seed_batches`` /
+``seed_cache_hits`` / ``seed_deduped`` / ``seed_device_queries`` /
+``seed_warmed`` / ``seed_spills`` counters.
+
 The device call runs inline on the event loop: it is the serial resource
 being scheduled, and everything else the loop does (queueing, cache hits)
 is microseconds. Results are host-side numpy ``ClusterResult``s. Index
@@ -84,16 +101,25 @@ import numpy as np
 
 from repro.core.graph import CSRGraph
 from repro.core.index import ScanIndex
+from repro.core.local import SeedResult, query_seeds
 from repro.core.query import ClusterResult, query_batch
 from repro.obs import MetricsRegistry, Tracer
 from repro.serve.cache import (DEFAULT_EPS_QUANTUM, PartitionedResultCache,
-                               ResultCache, neighborhood, quantize_eps)
+                               ResultCache, SeedResultCache, neighborhood,
+                               quantize_eps)
 from repro.serve.store import index_fingerprint
 
 
 # queue marker for drain() barriers — compared by identity, so no real
 # fingerprint string can collide with it
 _DRAIN = object()
+
+# request kinds: queue items are (fp, kind, key, fut, t0); "q" keys are
+# (μ, ε_q), "s" keys are (seed, μ, ε_q). Kinds bucket separately in
+# _flush, so seed and global traffic never share a device call (nor a
+# compiled artifact — their batch shapes differ).
+_KIND_QUERY = "q"
+_KIND_SEED = "s"
 
 # legacy ``engine.stats`` keys, each backed by the registry counter
 # ``engine.<key>``
@@ -137,6 +163,9 @@ def _query_jit_entries() -> int:
 
     total = 0
     fns = [_query_mod.query, _query_mod.query_batch]
+    local_mod = sys.modules.get("repro.core.local")
+    if local_mod is not None:
+        fns.append(local_mod.query_seeds_device)
     dist_mod = sys.modules.get("repro.core.distributed")
     if dist_mod is not None:
         fns.append(dist_mod._sharded_query_batch)
@@ -156,6 +185,11 @@ class EngineConfig:
     warm_ahead: bool = True      # fill padding slots with (μ, ε) neighbors
     warm_eps_step: float = 0.05  # ε stride of the warmed neighborhood
     shards: Optional[int] = None  # run device calls sharded over k devices
+    # --- seed-query lane (repro.core.local; single-device) ---
+    seed_batch: int = 32          # device lanes per seed micro-batch
+    seed_frontier_cap: int = 128  # member/frontier slots per lane (pow2)
+    seed_window: int = 32         # NO-row ε-prefix entries per gather
+    seed_border_cap: int = 512    # candidate-border slots per lane (pow2)
 
 
 class MicroBatchEngine:
@@ -175,9 +209,12 @@ class MicroBatchEngine:
         self.cfg = config
         self.cache = cache if cache is not None else PartitionedResultCache(
             config.cache_capacity, config.eps_quantum)
+        self.seed_cache = SeedResultCache(config.cache_capacity,
+                                          config.eps_quantum)
         self._indexes: dict[str, tuple[ScanIndex, CSRGraph]] = {}
         self._queue: asyncio.Queue = asyncio.Queue()
         self._task: Optional[asyncio.Task] = None
+        self._stopped = False
         self._offload: Optional[ThreadPoolExecutor] = None
         self._mesh = None
         self._shard_plans: dict = {}   # fingerprint → ShardedQueryPlan
@@ -214,9 +251,12 @@ class MicroBatchEngine:
               else index_fingerprint(index, g))
         if fp in self._indexes:
             # hot-swap under an explicit fingerprint: the old index's
-            # sharded plan and cached answers must not outlive it
+            # sharded plan and cached answers (global *and* seed) must
+            # not outlive it. A refine that reproduced the served bits
+            # must NOT come through here — that is relabel()'s job.
             self._shard_plans.pop(fp, None)
             self.cache.invalidate(fp)
+            self.seed_cache.invalidate(fp)
         self._indexes[fp] = (index, g)
         if shard_plan is not None:
             self._shard_plans[fp] = shard_plan
@@ -229,13 +269,32 @@ class MicroBatchEngine:
         return fp
 
     def unregister(self, fingerprint: str) -> int:
-        """Drop an index and its cache partition; → evicted entry count."""
+        """Drop an index and its cache partitions (global + seed);
+        → evicted entry count."""
         self._indexes.pop(fingerprint, None)
         self._shard_plans.pop(fingerprint, None)
         self._provenance.pop(fingerprint, None)
         if self.fingerprint == fingerprint:
             self.fingerprint = next(iter(self._indexes), None)
-        return self.cache.invalidate(fingerprint)
+        return (self.cache.invalidate(fingerprint)
+                + self.seed_cache.invalidate(fingerprint))
+
+    def relabel(self, fingerprint: str, *, provenance=None) -> None:
+        """Update a registered route's provenance tag *only*.
+
+        Unlike re-:meth:`register`-ing the same fingerprint (the hot-swap
+        path), this leaves the compiled shard plan and both cache
+        partitions intact — the right verb when a background refine
+        reproduces the served index bit-for-bit and all that changed is
+        how the bits were produced. ``provenance=None`` resets the route
+        to the exact-build convention."""
+        if fingerprint not in self._indexes:
+            raise KeyError(
+                f"no index registered for fingerprint {fingerprint!r}")
+        if provenance is not None:
+            self._provenance[fingerprint] = provenance
+        else:
+            self._provenance.pop(fingerprint, None)
 
     def provenance(self, fingerprint: Optional[str] = None):
         """The :class:`~repro.core.approx.IndexProvenance` registered for
@@ -271,13 +330,20 @@ class MicroBatchEngine:
             # asyncio.run() must not hand the new collector the old loop's
             # queue (its first get() would die and strand every waiter)
             self._queue = asyncio.Queue()
+            self._stopped = False
             self._task = asyncio.get_running_loop().create_task(self._loop())
 
     async def stop(self) -> None:
         if self._task is not None:
+            # flag first: a request admitted after this point fails fast
+            # instead of parking a future behind the stop marker forever
+            self._stopped = True
             self._queue.put_nowait(None)
             await self._task
             self._task = None
+            # the collector drained on exit; sweep anything that raced in
+            # between its last get() and now
+            self._reject_pending()
         if self._offload is not None:
             # wait out an in-flight off-loop apply (a torn maintenance job
             # must not outlive the engine it feeds) — but wait *off* the
@@ -341,7 +407,7 @@ class MicroBatchEngine:
         if self._task is None:
             return
         fut = asyncio.get_running_loop().create_future()
-        self._queue.put_nowait((_DRAIN, 0, 0.0, fut, time.monotonic()))
+        self._queue.put_nowait((_DRAIN, None, None, fut, time.monotonic()))
         await fut
 
     async def __aenter__(self) -> "MicroBatchEngine":
@@ -361,9 +427,7 @@ class MicroBatchEngine:
         ``fingerprint`` selects the target index; ``None`` routes to the
         engine's default (the first registered index).
         """
-        fp = fingerprint if fingerprint is not None else self.fingerprint
-        if fp not in self._indexes:
-            raise KeyError(f"no index registered for fingerprint {fp!r}")
+        fp = self._admit(fingerprint)
         if self._task is None:
             await self.start()
         t0 = time.monotonic()
@@ -376,15 +440,64 @@ class MicroBatchEngine:
             self.registry.inc("engine.cache_hits")
             self.registry.observe("engine.e2e", time.monotonic() - t0)
             return hit
-        fut = asyncio.get_running_loop().create_future()
-        self._queue.put_nowait((fp, mu, eps_q, fut, t0))
-        self.registry.gauge("engine.queue_depth").set(self._queue.qsize())
+        fut = self._enqueue(fp, _KIND_QUERY, (mu, eps_q), t0)
         try:
             return await fut
         finally:
             # end-to-end latency includes queue wait, batch assembly, and
             # the device call — the number a client actually experiences
             self.registry.observe("engine.e2e", time.monotonic() - t0)
+
+    async def query_seed(self, seed: int, mu: int, eps: float,
+                         fingerprint: Optional[str] = None) -> SeedResult:
+        """One seed-set (local) query: the cluster containing ``seed`` at
+        (μ, ε) — label, core flag, and full member mask — coalesced with
+        other in-flight seed requests into one fixed-shape
+        ``query_seeds`` lane batch. Bit-identical to the seed's row of
+        the full ``query()`` answer."""
+        fp = self._admit(fingerprint)
+        index, _ = self._indexes[fp]
+        seed = int(seed)
+        if not 0 <= seed < index.n:
+            raise ValueError(f"seed {seed} out of range for n={index.n}")
+        if self._task is None:
+            await self.start()
+        t0 = time.monotonic()
+        self.registry.inc("engine.seed_requests")
+        key = (seed, int(mu), quantize_eps(eps, self.cfg.eps_quantum))
+        with self.tracer.span("engine.seed_cache_lookup",
+                              fingerprint=fp[:12]):
+            hit = self.seed_cache.get(fp, *key)
+        if hit is not None:
+            self.registry.inc("engine.seed_cache_hits")
+            self.registry.observe("engine.seed_e2e", time.monotonic() - t0)
+            return hit
+        fut = self._enqueue(fp, _KIND_SEED, key, t0)
+        try:
+            return await fut
+        finally:
+            self.registry.observe("engine.seed_e2e", time.monotonic() - t0)
+
+    def _admit(self, fingerprint: Optional[str]) -> str:
+        """Resolve the route and refuse work on a stopped engine (a
+        request enqueued after stop() would otherwise hold a future the
+        dead collector never resolves)."""
+        fp = fingerprint if fingerprint is not None else self.fingerprint
+        if fp not in self._indexes:
+            raise KeyError(f"no index registered for fingerprint {fp!r}")
+        if self._stopped:
+            raise RuntimeError("engine stopped")
+        return fp
+
+    def _enqueue(self, fp: str, kind: str, key, t0: float) -> asyncio.Future:
+        # NOTE: callers reach here with no suspension point between
+        # their _admit check and this put (start() never actually
+        # suspends, and clears _stopped anyway), so an admitted request
+        # cannot slip past both stop()'s flag and its _reject_pending()
+        fut = asyncio.get_running_loop().create_future()
+        self._queue.put_nowait((fp, kind, key, fut, t0))
+        self.registry.gauge("engine.queue_depth").set(self._queue.qsize())
+        return fut
 
     # ------------------------------------------------------------------
     # collector loop
@@ -393,6 +506,7 @@ class MicroBatchEngine:
         while True:
             first = await self._queue.get()
             if first is None:
+                self._reject_pending()
                 return
             batch = [first]
             t_asm = time.monotonic()
@@ -408,10 +522,37 @@ class MicroBatchEngine:
                 if item is None:
                     self._note_assembly(t_asm, batch)
                     self._flush(batch)
+                    self._reject_pending()
                     return
                 batch.append(item)
             self._note_assembly(t_asm, batch)
             self._flush(batch)
+
+    def _reject_pending(self) -> None:
+        """Collector exit path: drain whatever is still queued and fail
+        those futures fast. A request that raced ``stop()`` into the
+        queue behind the ``None`` marker would otherwise hold a future
+        nobody ever resolves (the old shutdown bug). Drain barriers
+        resolve trivially — everything ahead of them has been flushed or
+        rejected by the time we get here."""
+        rejected = 0
+        while True:
+            try:
+                item = self._queue.get_nowait()
+            except asyncio.QueueEmpty:
+                break
+            if item is None:
+                continue
+            fut = item[3]
+            if fut.done():
+                continue
+            if item[0] is _DRAIN:
+                fut.set_result(None)
+                continue
+            fut.set_exception(RuntimeError("engine stopped"))
+            rejected += 1
+        if rejected:
+            self.registry.inc("engine.rejected_on_stop", rejected)
 
     def _note_assembly(self, t_asm: float, batch) -> None:
         """Record the size-or-deadline collection window as a span-shaped
@@ -421,12 +562,14 @@ class MicroBatchEngine:
                           batch=len(batch))
 
     def _flush(self, batch) -> None:
-        """Bucket one collected batch by fingerprint and execute each bucket
-        as its own device call. A failing bucket rejects only its own
+        """Bucket one collected batch by (fingerprint, kind) and execute
+        each bucket as its own device call — seed and global requests
+        never share a call (their batch shapes, caches, and compiled
+        artifacts differ). A failing bucket rejects only its own
         waiters — sibling buckets and the collector keep running (later
         requests must not hang on a dead loop)."""
         now = time.monotonic()
-        buckets: dict[str, list] = {}
+        buckets: dict[tuple, list] = {}
         for item in batch:
             if item[0] is _DRAIN:
                 # barrier marker: everything queued before it is in this
@@ -440,13 +583,18 @@ class MicroBatchEngine:
                 continue
             # queue wait = enqueue → flush pickup, per request (the batch
             # deadline shows up here; tail growth means admission trouble)
-            self.tracer.event("engine.queue_wait", now - item[4],
+            wait_name = ("engine.seed_queue_wait"
+                         if item[1] == _KIND_SEED else "engine.queue_wait")
+            self.tracer.event(wait_name, now - item[4],
                               t_start=item[4], fingerprint=item[0][:12])
-            buckets.setdefault(item[0], []).append(item)
+            buckets.setdefault((item[0], item[1]), []).append(item)
         self.registry.gauge("engine.queue_depth").set(self._queue.qsize())
-        for bucket in buckets.values():
+        for (fp, kind), bucket in buckets.items():
             try:
-                self._execute(bucket)
+                if kind == _KIND_SEED:
+                    self._execute_seeds(fp, bucket)
+                else:
+                    self._execute(fp, bucket)
             except Exception as e:  # noqa: BLE001
                 self.registry.inc("engine.bucket_failures")
                 for item in bucket:
@@ -470,13 +618,13 @@ class MicroBatchEngine:
             return plan(mus, epss)
         return query_batch(index, g, mus, epss)
 
-    def _execute(self, bucket) -> None:
-        """One fingerprint's requests → at most one fixed-shape device call."""
-        fp = bucket[0][0]
+    def _execute(self, fp: str, bucket) -> None:
+        """One fingerprint's global requests → at most one fixed-shape
+        device call."""
         index, g = self._indexes[fp]
         waiters: dict[tuple, list] = {}
         for item in bucket:
-            waiters.setdefault((item[1], item[2]), []).append(item[3])
+            waiters.setdefault(item[2], []).append(item[3])
         self.registry.inc("engine.batches")
         self.registry.inc("engine.deduped", len(bucket) - len(waiters))
 
@@ -534,6 +682,94 @@ class MicroBatchEngine:
                 if not fut.done():
                     fut.set_result(resolved[key])
 
+    def _execute_seeds(self, fp: str, bucket) -> None:
+        """One fingerprint's seed requests → fixed-shape ``query_seeds``
+        calls of ``seed_batch`` lanes (chunked if a flush carries more
+        distinct keys than lanes; each chunk keeps the one batch shape).
+        """
+        index, g = self._indexes[fp]
+        waiters: dict[tuple, list] = {}
+        for item in bucket:
+            waiters.setdefault(item[2], []).append(item[3])
+        self.registry.inc("engine.seed_batches")
+        self.registry.inc("engine.seed_deduped", len(bucket) - len(waiters))
+
+        need, resolved = [], {}
+        for key in waiters:
+            hit = self.seed_cache.peek(fp, *key)
+            if hit is not None:
+                self.registry.inc("engine.seed_cache_hits")
+                resolved[key] = hit
+            else:
+                need.append(key)
+
+        lanes = self.cfg.seed_batch
+        for lo in range(0, len(need), lanes):
+            chunk = need[lo:lo + lanes]
+            warm = []
+            if self.cfg.warm_ahead:
+                warm = self._seed_warm_candidates(fp, chunk,
+                                                  lanes - len(chunk))
+            slots = chunk + warm
+            real = len(slots)
+            slots = slots + [chunk[0]] * (lanes - real)
+            seeds = np.asarray([k[0] for k in slots], np.int32)
+            mus = np.asarray([k[1] for k in slots], np.int32)
+            epss = np.asarray([k[2] for k in slots], np.float32)
+            jit_before = _query_jit_entries()
+            with self.tracer.span(
+                    "engine.seed_device_call", fingerprint=fp[:12],
+                    need=len(chunk), warmed=len(warm), slots=lanes):
+                res = query_seeds(
+                    index, g, seeds, mus, epss,
+                    frontier_cap=self.cfg.seed_frontier_cap,
+                    window=self.cfg.seed_window,
+                    border_cap=self.cfg.seed_border_cap,
+                    # spill lanes fall back through the global batch
+                    # shape — the artifact the engine already compiles
+                    fallback_batch=self.cfg.max_batch)
+            jit_delta = _query_jit_entries() - jit_before
+            if jit_delta > 0:
+                self.registry.inc("engine.jit_recompiles", jit_delta)
+            self.registry.inc("engine.seed_device_queries")
+            self.registry.inc("engine.seed_warmed", len(warm))
+            n_spill = int(np.asarray(res.spilled)[:real].sum())
+            if n_spill:
+                self.registry.inc("engine.seed_spills", n_spill)
+            for i, key in enumerate(chunk + warm):
+                out = SeedResult.from_batch_row(res, i, key[0])
+                self.seed_cache.put(fp, *key, out)
+                if i < len(chunk):
+                    resolved[key] = out
+
+        for key, futs in waiters.items():
+            for fut in futs:
+                if not fut.done():
+                    fut.set_result(resolved[key])
+
+    def _seed_warm_candidates(self, fp: str, need, limit: int) -> list:
+        """Padding-slot warming for seed lanes: the same seed at its
+        (μ±1, ε±δ) neighborhood — parameter-exploring users move on the
+        (μ, ε) grid, not across seeds."""
+        if limit <= 0:
+            return []
+        seen = set(need)
+        out = []
+        for seed, mu, eps_q in need:
+            for cmu, ceps in neighborhood(mu, eps_q,
+                                          eps_step=self.cfg.warm_eps_step,
+                                          quantum=self.cfg.eps_quantum):
+                cand = (seed, cmu, ceps)
+                if cand in seen:
+                    continue
+                seen.add(cand)
+                if self.seed_cache.peek(fp, *cand) is not None:
+                    continue
+                out.append(cand)
+                if len(out) >= limit:
+                    return out
+        return out
+
     def _warm_candidates(self, fp: str, need, limit: int) -> list:
         """Neighborhood settings worth pre-computing in this bucket's
         padding slots: near an actual request, not requested themselves,
@@ -572,6 +808,13 @@ class MicroBatchEngine:
         # re-checks) must not be clobbered by the store-side hits counter
         cache_stats.pop("cache_hits", None)
         out.update(cache_stats)
+        for key in ("seed_requests", "seed_batches", "seed_cache_hits",
+                    "seed_deduped", "seed_device_queries", "seed_warmed",
+                    "seed_spills", "rejected_on_stop"):
+            out[key] = self.registry.counter(f"engine.{key}").value
+        out.update({f"seed_cache_{k}": v
+                    for k, v in self.seed_cache.stats().items()
+                    if k != "hits"})
         return out
 
     def latency_stats(self, quantiles=(0.5, 0.9, 0.99)) -> dict:
@@ -579,7 +822,9 @@ class MicroBatchEngine:
         from the registry histograms (for the CLI / bench report)."""
         out = {}
         for short, name in (("wait", "engine.queue_wait"),
-                            ("e2e", "engine.e2e")):
+                            ("e2e", "engine.e2e"),
+                            ("seed_wait", "engine.seed_queue_wait"),
+                            ("seed_e2e", "engine.seed_e2e")):
             hist = self.registry.histogram(name)
             out[f"{short}_n"] = hist.count
             for q in quantiles:

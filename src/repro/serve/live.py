@@ -282,6 +282,15 @@ class LiveIndexService:
         self._note(name, mu, eps)
         return await self.engine.query(mu, eps, fingerprint=live.fp)
 
+    async def query_seed(self, name: str, seed: int, mu: int, eps: float):
+        """One seed-set (local) query by *name*: the cluster containing
+        ``seed`` at (μ, ε) — a :class:`~repro.core.local.SeedResult`,
+        bit-identical to the seed's row of the full :meth:`query` answer
+        against the same live index."""
+        live = self._live[name]
+        return await self.engine.query_seed(seed, mu, eps,
+                                            fingerprint=live.fp)
+
     def _note(self, name: str, mu: int, eps: float) -> None:
         obs = self._observed.setdefault(name, OrderedDict())
         key = (int(mu), quantize_eps(eps, self.engine.cfg.eps_quantum))
@@ -388,6 +397,19 @@ class LiveIndexService:
                                              fingerprint=new_fp,
                                              shard_plan=shard_plan,
                                              provenance=live.provenance)
+                        # seed-cache frontier invalidation: entries whose
+                        # seed *and* members all avoid the delta's stale
+                        # set are bit-identical under the new index —
+                        # carry them to the new fingerprint instead of
+                        # recomputing; the rest are dropped here (and the
+                        # old partition's remainder goes with the
+                        # unregister below)
+                        kept, dropped = self.engine.seed_cache.migrate(
+                            live.fp, new_fp, info.stale_mask(new_g.n))
+                        self.engine.registry.inc(
+                            "live.seed_entries_migrated", kept)
+                        self.engine.registry.inc(
+                            "live.seed_entries_dropped", dropped)
                         self._live[name] = dataclasses.replace(
                             live, index=new_index, g=new_g, fp=new_fp,
                             seq=seq)
@@ -492,13 +514,16 @@ class LiveIndexService:
                         await self._rewarm(name)
                 else:
                     # sketch happened to reproduce exact σ bit-for-bit
-                    # (tiny graphs / pure-heuristic edges): just relabel
-                    self.engine.register(new_index, live.g,
-                                         fingerprint=new_fp,
-                                         provenance=EXACT_PROVENANCE)
+                    # (tiny graphs / pure-heuristic edges): relabel the
+                    # provenance only. Re-register()ing the same
+                    # fingerprint would take the hot-swap path and throw
+                    # away the route's shard plan plus two cache
+                    # partitions full of answers that are — by the very
+                    # premise of this branch — still bit-identical.
+                    self.engine.relabel(live.fp,
+                                        provenance=EXACT_PROVENANCE)
                     self._live[name] = dataclasses.replace(
-                        live, index=new_index, seq=seq,
-                        provenance=EXACT_PROVENANCE)
+                        live, seq=seq, provenance=EXACT_PROVENANCE)
 
                 # persist the refined index as a full snapshot covering
                 # ``seq`` — version numbers stay monotone with delta seqs,
@@ -513,7 +538,14 @@ class LiveIndexService:
     async def _rewarm(self, name: str) -> None:
         """Re-issue the recently observed settings against the fresh
         index — the engine's padding-slot warming re-warms their
-        (μ±1, ε±δ) neighborhood as a side effect."""
+        (μ±1, ε±δ) neighborhood as a side effect.
+
+        Warming is best-effort by definition: it runs *after* the
+        delta/refine has committed and the route has flipped, so a
+        failed warm query must neither cancel its siblings nor
+        propagate — the caller's apply succeeded, and raising here would
+        make a completed commit look failed. Failures land in the
+        ``live.rewarm_failures`` counter instead."""
         if not self.engine.is_running:
             # engine already stopped (an abandoned apply finishing late):
             # warming would auto-start a collector on a dying loop
@@ -521,9 +553,14 @@ class LiveIndexService:
         fp = self._live[name].fp
         obs = list(self._observed.get(name, ()))
         if obs:
-            await asyncio.gather(
+            results = await asyncio.gather(
                 *[self.engine.query(mu, eps, fingerprint=fp)
-                  for mu, eps in obs])
+                  for mu, eps in obs],
+                return_exceptions=True)
+            failures = sum(1 for r in results
+                           if isinstance(r, BaseException))
+            if failures:
+                self.engine.registry.inc("live.rewarm_failures", failures)
 
     # ------------------------------------------------------------------
     # compaction

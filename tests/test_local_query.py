@@ -1,0 +1,174 @@
+"""Seed-set local query kernel (``repro.core.local``) vs the full-query
+oracle.
+
+The contract under test: for every (seed, μ, ε), ``query_seeds`` must be
+bit-identical to running the full ``query`` and extracting the seed's
+row — same label, same core bit, same member set — whether the lane was
+answered by the fixed-shape frontier expansion or spilled to the
+``query_batch`` fallback.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    build_index,
+    from_edge_list,
+    power_law_graph,
+    query,
+    query_seeds,
+    random_graph,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def expected_rows(index, g, seeds, mus, epss):
+    """Oracle: full ``query`` per distinct (μ, ε), row-extracted."""
+    out = []
+    for s, m, e in zip(seeds, mus, epss):
+        res = query(index, g, int(m), float(e))
+        labels = np.asarray(res.labels)
+        lab = int(labels[s])
+        mask = (labels == lab) if lab >= 0 else np.zeros(g.n, bool)
+        out.append((lab, bool(np.asarray(res.is_core)[s]), mask))
+    return out
+
+
+def check_identity(index, g, seeds, mus, epss, **kw):
+    res = query_seeds(index, g, seeds, mus, epss, **kw)
+    for i, (lab, core, mask) in enumerate(
+            expected_rows(index, g, seeds, mus, epss)):
+        assert int(res.labels[i]) == lab, (seeds[i], mus[i], epss[i])
+        assert bool(res.is_core[i]) == core
+        np.testing.assert_array_equal(res.member_mask[i], mask)
+        assert int(res.n_members[i]) == int(mask.sum())
+    return res
+
+
+def all_vertex_sweep(index, g, mu, eps, **kw):
+    seeds = np.arange(g.n, dtype=np.int32)
+    return check_identity(index, g, seeds,
+                          np.full(g.n, mu, np.int32),
+                          np.full(g.n, eps, np.float32), **kw)
+
+
+def test_isolated_seed():
+    # vertices 6..9 have no edges at all: not core, no cluster, empty mask
+    edges = np.array([[0, 1], [1, 2], [0, 2], [2, 3], [3, 4], [4, 5]])
+    g = from_edge_list(10, edges)
+    index = build_index(g, "cosine")
+    res = all_vertex_sweep(index, g, 2, 0.3)
+    assert int(res.labels[7]) == -1
+    assert not bool(res.is_core[7])
+    assert int(res.n_members[7]) == 0
+
+
+def test_border_seed_not_core():
+    # planted clusters at a mid ε leave border vertices: attached to a
+    # cluster (label >= 0) without being cores themselves — the seed path
+    # must reproduce the full query's deterministic attachment rule
+    g = random_graph(120, 6.0, seed=3, planted_clusters=4)
+    index = build_index(g, "cosine")
+    full = query(index, g, 3, 0.5)
+    labels = np.asarray(full.labels)
+    border = np.flatnonzero((labels >= 0) & ~np.asarray(full.is_core))
+    assert border.size > 0, "fixture must produce border vertices"
+    seeds = border.astype(np.int32)
+    check_identity(index, g, seeds,
+                   np.full(seeds.size, 3, np.int32),
+                   np.full(seeds.size, 0.5, np.float32))
+
+
+def test_mu_above_max_closed_degree():
+    g = random_graph(60, 4.0, seed=1)
+    index = build_index(g, "cosine")
+    res = all_vertex_sweep(index, g, 1000, 0.2)
+    assert not res.is_core.any()
+    assert (res.labels == -1).all()
+    assert not res.spilled.any()        # nothing to expand, nothing spills
+
+
+def test_hub_spanning_cluster():
+    # power-law graph with a forced hub: the hub's cluster at low ε pulls
+    # in a large fraction of the graph; with default caps this is exactly
+    # the lane that must spill to the full-query fallback and still match
+    g = power_law_graph(n=512, alpha=2.1, avg_degree=8.0, seed=7,
+                        hub_degree=128)
+    index = build_index(g, "cosine")
+    hub = int(np.argmax(np.diff(np.asarray(g.offsets))))
+    seeds = np.asarray([hub, 0, 1, 2], np.int32)
+    for mu, eps in ((2, 0.2), (2, 0.5), (3, 0.4)):
+        check_identity(index, g, seeds,
+                       np.full(seeds.size, mu, np.int32),
+                       np.full(seeds.size, eps, np.float32))
+
+
+def test_spill_fallback_bit_identical():
+    # tiny static caps force frontier/border/window spills on a graph
+    # whose ε=0.2 clusters are far larger than 8 members; spilled lanes
+    # are re-answered by query_batch and must stay bit-identical
+    g = random_graph(200, 8.0, seed=5, planted_clusters=2)
+    index = build_index(g, "cosine")
+    res = all_vertex_sweep(index, g, 2, 0.2,
+                           frontier_cap=8, window=4, border_cap=8)
+    assert res.spilled.any(), "fixture must exercise the spill path"
+
+
+def test_scalar_broadcast_and_validation():
+    g = random_graph(50, 4.0, seed=2)
+    index = build_index(g, "cosine")
+    res = query_seeds(index, g, np.arange(10), 2, 0.4)
+    assert res.labels.shape == (10,)
+    with pytest.raises(ValueError):
+        query_seeds(index, g, [g.n], 2, 0.4)        # out of range
+    with pytest.raises(ValueError):
+        query_seeds(index, g, [-1], 2, 0.4)
+    with pytest.raises(ValueError):
+        query_seeds(index, g, [0], 2, 0.4, frontier_cap=100)  # not pow2
+    empty = query_seeds(index, g, np.asarray([], np.int32), 2, 0.4)
+    assert empty.labels.shape == (0,)
+
+
+def test_random_sweep_matches_full_query_rows():
+    """Deterministic stand-in for the hypothesis property: random graphs
+    × a (μ, ε) grid, every vertex as a seed, small caps so both the
+    expanded and fallback paths are exercised."""
+    rng = np.random.default_rng(11)
+    for trial in range(4):
+        n = int(rng.integers(8, 28))
+        m = int(rng.integers(1, 3 * n))
+        pairs = rng.integers(0, n, size=(m, 2))
+        pairs = pairs[pairs[:, 0] != pairs[:, 1]]
+        if pairs.size == 0:
+            pairs = np.array([[0, 1]])
+        g = from_edge_list(n, pairs.astype(np.int64))
+        index = build_index(g, "cosine")
+        for mu in (2, 3, 5):
+            for eps in (0.1, 0.5, 0.9):
+                all_vertex_sweep(index, g, mu, eps,
+                                 frontier_cap=16, window=8, border_cap=16)
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def small_graphs(draw):
+        n = draw(st.integers(5, 24))
+        m = draw(st.integers(1, 3 * n))
+        pairs = draw(st.lists(
+            st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+            min_size=m, max_size=m))
+        pairs = [(u, v) for u, v in pairs if u != v] or [(0, 1)]
+        return from_edge_list(n, np.asarray(pairs, dtype=np.int64))
+
+    @settings(max_examples=20, deadline=None)
+    @given(small_graphs(), st.integers(2, 5), st.floats(0.05, 0.95))
+    def test_property_matches_full_query_rows(g, mu, eps):
+        index = build_index(g, "cosine")
+        # small caps keep compilation cheap and make spills likely, so
+        # both the expanded and fallback paths run across examples
+        all_vertex_sweep(index, g, mu, eps,
+                         frontier_cap=16, window=8, border_cap=16)

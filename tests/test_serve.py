@@ -279,11 +279,11 @@ def test_engine_survives_device_failure():
     real_execute = engine._execute
     calls = {"n": 0}
 
-    def flaky(batch):
+    def flaky(fp, batch):
         calls["n"] += 1
         if calls["n"] == 1:
             raise RuntimeError("injected device failure")
-        return real_execute(batch)
+        return real_execute(fp, batch)
 
     engine._execute = flaky
 

@@ -1,0 +1,294 @@
+"""Seed-set queries through the serve stack, plus the serve-layer bugfix
+regressions that ride along:
+
+  * ``engine.query_seed`` concurrency / caching / bucketing vs the full
+    ``query`` oracle;
+  * stop-under-load semantics (no stranded waiters, fail-fast afterwards);
+  * the ``refine`` no-swap branch relabels provenance without hot-swapping
+    away the shard plan or either cache partition;
+  * ``_rewarm`` failures are counted, never raised out of a completed
+    apply;
+  * seed-cache frontier invalidation is conservative-exact under an
+    edit-script oracle.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ApproxParams,
+    EdgeDelta,
+    build_index,
+    query,
+    random_graph,
+)
+from repro.serve import EngineConfig, LiveIndexService, MicroBatchEngine
+
+
+def expected_row(index, g, seed, mu, eps):
+    res = query(index, g, int(mu), float(eps))
+    labels = np.asarray(res.labels)
+    lab = int(labels[seed])
+    mask = (labels == lab) if lab >= 0 else np.zeros(g.n, bool)
+    return lab, bool(np.asarray(res.is_core)[seed]), mask
+
+
+def check_row(seed_res, index, g, seed, mu, eps):
+    lab, core, mask = expected_row(index, g, seed, mu, eps)
+    assert seed_res.label == lab
+    assert seed_res.is_core == core
+    np.testing.assert_array_equal(seed_res.member_mask, mask)
+
+
+@pytest.fixture(scope="module")
+def small():
+    g = random_graph(120, 5.0, seed=4, planted_clusters=4)
+    return build_index(g, "cosine"), g
+
+
+def test_engine_query_seed_matches_oracle(small):
+    index, g = small
+    cfg = EngineConfig(max_batch=8, flush_ms=1.0, seed_batch=8)
+    settings = [(2, 0.3), (3, 0.5), (2, 0.7)]
+
+    async def run():
+        engine = MicroBatchEngine(index, g, config=cfg)
+        async with engine:
+            reqs = [(s, *settings[s % len(settings)])
+                    for s in range(0, g.n, 3)]
+            outs = await asyncio.gather(
+                *[engine.query_seed(s, m, e) for s, m, e in reqs])
+        return reqs, outs
+
+    reqs, outs = asyncio.run(run())
+    for (s, m, e), out in zip(reqs, outs):
+        check_row(out, index, g, s, m, e)
+
+
+def test_seed_cache_hit_skips_device(small):
+    index, g = small
+
+    async def run():
+        engine = MicroBatchEngine(index, g, config=EngineConfig(
+            flush_ms=1.0, seed_batch=8, warm_ahead=False))
+        async with engine:
+            a = await engine.query_seed(7, 2, 0.5)
+            calls = engine.registry.counter(
+                "engine.seed_device_queries").value
+            b = await engine.query_seed(7, 2, 0.5)
+            calls2 = engine.registry.counter(
+                "engine.seed_device_queries").value
+            hits = engine.registry.counter("engine.seed_cache_hits").value
+        return a, b, calls, calls2, hits
+
+    a, b, calls, calls2, hits = asyncio.run(run())
+    assert calls2 == calls       # answered from the seed cache
+    assert hits >= 1
+    assert a.label == b.label
+    np.testing.assert_array_equal(a.member_mask, b.member_mask)
+
+
+def test_seed_and_global_traffic_bucket_separately(small):
+    index, g = small
+
+    async def run():
+        engine = MicroBatchEngine(index, g, config=EngineConfig(
+            flush_ms=1.0, seed_batch=8))
+        async with engine:
+            seed_res, full_res = await asyncio.gather(
+                engine.query_seed(3, 2, 0.5), engine.query(2, 0.5))
+        return seed_res, full_res, engine.batch_stats()
+
+    seed_res, full_res, st = asyncio.run(run())
+    # one flush, two kinds → each kind got its own bucket + device call
+    assert st["seed_batches"] >= 1
+    assert st["batches"] >= 1
+    check_row(seed_res, index, g, 3, 2, 0.5)
+    labels = np.asarray(full_res.labels)
+    lab = int(labels[3])
+    np.testing.assert_array_equal(
+        seed_res.member_mask,
+        (labels == lab) if lab >= 0 else np.zeros(g.n, bool))
+
+
+def test_stop_under_load_strands_no_waiter(small):
+    index, g = small
+
+    async def run():
+        engine = MicroBatchEngine(index, g, config=EngineConfig(
+            flush_ms=50.0, seed_batch=8))   # slow flush: requests pend
+        await engine.start()
+        tasks = [asyncio.create_task(engine.query_seed(i % g.n, 2, 0.5))
+                 for i in range(12)]
+        tasks += [asyncio.create_task(engine.query(2, 0.4))
+                  for _ in range(4)]
+        await asyncio.sleep(0)              # let every request enqueue
+        await engine.stop()
+        # every waiter must resolve promptly — an answer or the explicit
+        # rejection — never hang on a dead collector
+        results = await asyncio.wait_for(
+            asyncio.gather(*tasks, return_exceptions=True), timeout=10)
+        with pytest.raises(RuntimeError, match="engine stopped"):
+            await engine.query(2, 0.5)
+        with pytest.raises(RuntimeError, match="engine stopped"):
+            await engine.query_seed(0, 2, 0.5)
+        return results
+
+    for r in asyncio.run(run()):
+        if isinstance(r, BaseException):
+            assert isinstance(r, RuntimeError)
+            assert "engine stopped" in str(r)
+
+
+def test_stop_rejects_item_stranded_behind_marker(small):
+    # white-box regression for the old shutdown bug: a request whose
+    # queue item lands behind the stop marker used to hold a future
+    # nobody resolved. The collector's exit path must drain and reject.
+    import time as _time
+
+    index, g = small
+
+    async def run():
+        engine = MicroBatchEngine(index, g, config=EngineConfig(
+            flush_ms=1.0))
+        fp = engine.fingerprint
+        await engine.start()
+        loop = asyncio.get_running_loop()
+        stranded = loop.create_future()
+        engine._stopped = True              # simulate the lost race:
+        engine._queue.put_nowait(None)      # marker first, item behind it
+        engine._queue.put_nowait(
+            (fp, "q", (2, 0.5), stranded, _time.monotonic()))
+        await engine.stop()
+        assert stranded.done()
+        with pytest.raises(RuntimeError, match="engine stopped"):
+            stranded.result()
+        return engine.registry.counter("engine.rejected_on_stop").value
+
+    assert asyncio.run(run()) == 1
+
+
+def test_refine_noswap_relabels_without_hotswap(tmp_path):
+    # every closed degree ≤ the sketch width ⇒ the §6.3 degree heuristic
+    # computes every edge exactly ⇒ the approximate index is bit-identical
+    # to the exact build and refine() must take the relabel branch
+    g = random_graph(60, 4.0, seed=6)
+    svc = LiveIndexService(tmp_path, config=EngineConfig(
+        flush_ms=1.0, seed_batch=8), measure="cosine")
+
+    async def run():
+        async with svc:
+            fp = svc.register_approximate(
+                "a", g, params=ApproxParams.parse("simhash:64"))
+            assert svc.provenance("a").is_approx
+            await svc.query("a", 2, 0.5)
+            for s in (0, 1, 2):
+                await svc.query_seed("a", s, 2, 0.5)
+            engine = svc.engine
+            n_cache, n_seed = len(engine.cache), len(engine.seed_cache)
+            assert n_cache > 0 and n_seed > 0
+            marker = object()               # sentinel shard plan: a
+            engine._shard_plans[fp] = marker  # hot-swap would drop it
+            fp2 = await svc.refine("a")
+            assert fp2 == fp, "premise: sketch must reproduce exact bits"
+            # the no-swap branch must keep route state byte-for-byte:
+            assert engine._shard_plans[fp] is marker
+            assert len(engine.cache) == n_cache
+            assert len(engine.seed_cache) == n_seed
+            # ... while still flipping the provenance tag everywhere
+            assert not svc.provenance("a").is_approx
+            assert not engine._provenance[fp].is_approx
+            assert svc.status("a")["provenance"] == "exact"
+            del engine._shard_plans[fp]     # drop the sentinel again
+
+    asyncio.run(run())
+
+
+def test_rewarm_failures_counted_not_raised(tmp_path):
+    g = random_graph(100, 4.0, seed=8)
+    svc = LiveIndexService(tmp_path, config=EngineConfig(
+        flush_ms=1.0), measure="cosine")
+
+    async def run():
+        async with svc:
+            svc.create("live", g)
+            await svc.query("live", 2, 0.5)     # observed traffic to warm
+
+            async def boom(*a, **kw):
+                raise RuntimeError("synthetic warm failure")
+
+            svc.engine.query = boom
+            delta = EdgeDelta.make(inserts=[(0, 50)])
+            info = await svc.apply("live", delta)   # must NOT raise
+            assert info is not None
+        return svc.engine.registry.counter("live.rewarm_failures").value
+
+    failures = asyncio.run(run())
+    assert failures > 0
+
+
+def test_seed_cache_invalidation_exact_under_edit_oracle(tmp_path):
+    # sparse planted graph: the 2-hop stale closure stays local, so a
+    # single edge edit must drop only frontier-adjacent entries while
+    # untouched seeds keep answering from cache — and every post-delta
+    # answer (cached or recomputed) must match the new graph's oracle
+    g = random_graph(400, 3.0, seed=9, planted_clusters=8)
+    mu, eps = 2, 0.6
+    svc = LiveIndexService(tmp_path, config=EngineConfig(
+        flush_ms=1.0, seed_batch=16, warm_ahead=False), measure="cosine")
+
+    async def run():
+        async with svc:
+            svc.create("live", g)
+            engine = svc.engine
+            for s in range(g.n):
+                await svc.query_seed("live", s, mu, eps)
+            fp0 = svc.status("live")["fingerprint"]
+            assert len(engine.seed_cache) == g.n
+
+            off = np.asarray(g.offsets)
+            u = int(np.argmax(np.diff(off) > 0))    # first vertex w/ edges
+            v = int(np.asarray(g.nbrs)[off[u]])
+            delta = EdgeDelta.make(deletes=[(min(u, v), max(u, v))])
+            info = await svc.apply("live", delta)
+            fp1 = svc.status("live")["fingerprint"]
+            assert fp1 != fp0
+            new_g = svc.graph("live")
+            stale = info.stale_mask(new_g.n)
+            assert stale.any() and not stale.all()
+
+            migrated = engine.registry.counter(
+                "live.seed_entries_migrated").value
+            dropped = engine.registry.counter(
+                "live.seed_entries_dropped").value
+            assert migrated > 0 and dropped > 0
+            assert migrated + dropped == g.n
+
+            # exactness of the keep/drop split, per entry:
+            new_index = svc.index("live")
+            kept = sum(
+                engine.seed_cache.peek(fp1, s, mu, eps) is not None
+                for s in range(g.n))
+            assert kept == migrated
+            for s in np.flatnonzero(stale):
+                # any seed in the closure lost its entry
+                assert engine.seed_cache.peek(fp1, int(s), mu, eps) is None
+
+            # untouched seeds answer from cache (no new device batches) …
+            survivors = [s for s in range(g.n) if engine.seed_cache.peek(
+                fp1, s, mu, eps) is not None]
+            calls = engine.registry.counter(
+                "engine.seed_device_queries").value
+            for s in survivors[:32]:
+                res = await svc.query_seed("live", s, mu, eps)
+                check_row(res, new_index, new_g, s, mu, eps)
+            assert engine.registry.counter(
+                "engine.seed_device_queries").value == calls
+
+            # … and every seed, cached or not, matches the new oracle
+            for s in list(np.flatnonzero(stale))[:24]:
+                res = await svc.query_seed("live", int(s), mu, eps)
+                check_row(res, new_index, new_g, int(s), mu, eps)
+
+    asyncio.run(run())
