@@ -31,12 +31,23 @@ acceptance graph):
     ``LiveIndexService``: entries survive deltas via frontier migration
     (``migrated`` / ``dropped`` columns).
 
+Replicated-fleet sections (``planted-4k``):
+  * ``fleet``        — aggregate q/s + p99 through the
+    writer-+ N-replica ``Fleet`` (consistent-hash router, hedged
+    failover) for replicas=1/2/3 under a skewed client mix (two hot
+    clients, one hot index name), 50/50 global/seed traffic;
+  * ``fleet …/crash=1`` — the same wave with one replica chaos-crashed
+    mid-traffic: q/s degrades instead of collapsing, and the ``errors``
+    column counts the *typed* failures clients actually saw.
+
 Engine/router rows carry p50/p90/p99 queue-wait and end-to-end latency
 columns read from the engine's own ``repro.obs`` histograms
 (``engine.queue_wait`` / ``engine.e2e``), with :func:`hist_delta`
-isolating each traffic wave out of the cumulative counts. The full row
-set is committed at the repo root as ``BENCH_serve.json`` (the
-``BENCH_update.json`` / ``BENCH_construction.json`` pattern).
+isolating each traffic wave out of the cumulative counts (fleet rows
+read the *merged* fleet snapshot, so their latency columns span every
+replica). The full row set is committed at the repo root as
+``BENCH_serve.json`` (the ``BENCH_update.json`` /
+``BENCH_construction.json`` pattern).
 """
 from __future__ import annotations
 
@@ -247,7 +258,101 @@ def run():
         f"{_lat_cols(wk_lat)}"))
 
     lines.extend(_seed_sections())
+    lines.extend(_fleet_sections())
     write_snapshot(SNAPSHOT, "serve", lines)
+    return lines
+
+
+def _fleet_sections():
+    """Replicated read fleet: q/s scaling vs replica count, with and
+    without one chaos-crashed replica mid-wave."""
+    import tempfile
+
+    from repro.serve import (EngineConfig, Fleet, FleetExhausted,
+                             Overloaded, RouterConfig)
+
+    lines = []
+    gname = "planted-4k"
+    g = load_graph(gname)
+    idx = build_index(g, "cosine")
+    cfg = EngineConfig(max_batch=16, flush_ms=2.0, seed_batch=16)
+    pool = [(int(m), float(e)) for m in GRID_MUS for e in GRID_EPS]
+    names = ["g0", "g1", "g2"]
+    # skewed mix: two hot clients carry half the load, and half of all
+    # requests hit one hot index name (the consistent-hash owner of the
+    # hot name becomes the pressured replica; hedging/spill is what lets
+    # extra replicas absorb that skew)
+    n_clients, n_requests = 8, 16
+    weights = np.asarray([4.0, 4.0] + [1.0] * (n_clients - 2))
+    reqs_per = np.maximum(np.round(
+        weights / weights.sum() * n_clients * n_requests), 1).astype(int)
+    name_share = (0.5, 0.3, 0.2)
+
+    async def one_wave(n_replicas: int, crash: bool):
+        fleet = Fleet(tempfile.mkdtemp(prefix="bench_fleet_"),
+                      n_replicas=n_replicas, writer_config=cfg,
+                      router_config=RouterConfig(timeout_s=10.0,
+                                                 hedge_after_s=1.0),
+                      poll_s=0.01)
+        errors = 0
+        done = 0
+        async with fleet:
+            for name in names:
+                fleet.create(name, g, index=idx)
+                await fleet.converged(name, timeout_s=30.0)
+            for rep in fleet.replicas:       # compile warmup everywhere
+                for name in names:
+                    await rep.query(name, *pool[0])
+                    await rep.query_seed(name, 0, *pool[0])
+            base = fleet.metrics_snapshot()["histograms"]
+            rng = np.random.default_rng(3)
+
+            async def client(i):
+                nonlocal errors, done
+                for _ in range(int(reqs_per[i])):
+                    name = names[int(rng.choice(len(names), p=name_share))]
+                    mu, eps = pool[rng.integers(len(pool))]
+                    try:
+                        if rng.random() < 0.5:
+                            await fleet.query_seed(
+                                name, int(rng.integers(g.n)), mu, eps)
+                        else:
+                            await fleet.query(name, mu, eps)
+                    except (Overloaded, FleetExhausted,
+                            asyncio.TimeoutError):
+                        errors += 1
+                    done += 1
+                    await asyncio.sleep(0)
+
+            async def killer():
+                if crash:
+                    await asyncio.sleep(0.2)
+                    await fleet.replicas[-1].crash()
+
+            t0 = time.time()
+            await asyncio.gather(
+                killer(), *[client(i) for i in range(n_clients)])
+            dt = time.time() - t0
+            snap = fleet.metrics_snapshot()
+            lat = _wave(snap["histograms"], base)
+            c = snap["counters"]
+        return dt, done, errors, c, lat
+
+    for n_replicas in (1, 2, 3):
+        for crash in (False, True):
+            if crash and n_replicas == 1:
+                continue  # crashing the only replica just measures zeros
+            dt, done, errors, c, lat = asyncio.run(
+                one_wave(n_replicas, crash))
+            tag = "/crash=1" if crash else ""
+            lines.append(emit(
+                f"serve/fleet/{gname}/replicas={n_replicas}{tag}",
+                dt / done,
+                f"qps={done / dt:.1f};errors={errors};"
+                f"failovers={c.get('fleet.failovers', 0)};"
+                f"hedges={c.get('fleet.hedges', 0)};"
+                f"hedge_wins={c.get('fleet.hedge_wins', 0)};"
+                f"{_lat_cols(lat)}"))
     return lines
 
 

@@ -9,6 +9,10 @@ Layout: one directory per step —
 Properties the 1000-node posture needs:
 * **atomic commit** — a crash mid-write never corrupts the latest ckpt
   (readers only ever see fully renamed directories);
+* **durable commit** — every file is fsynced and the directory entries
+  (tmp dir before the rename, parent after) are fsynced too, so a power
+  loss after :func:`save` returns cannot surface a committed-but-torn
+  step (``os.rename`` alone orders against readers, not against disk);
 * **mesh-agnostic restore** — leaves are stored unsharded (gathered); on
   restore they are device_put with the *current* mesh's shardings, so an
   elastic resize (e.g. 512 → 256 chips) is just a restore;
@@ -36,6 +40,30 @@ def _leaf_paths(tree):
     paths = ["/".join(str(k) for k in path) for path, _ in flat]
     leaves = [leaf for _, leaf in flat]
     return paths, leaves, treedef
+
+
+def fsync_dir(path: str) -> None:
+    """fsync a *directory*: durably commit its entry table (file names,
+    and on the parent, the rename that commits a checkpoint)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def fsync_file_then_dir(path: str) -> None:
+    """Durably commit one written file: fsync its contents, then fsync
+    the containing directory so the name itself survives power loss.
+
+    ``os.rename`` alone only orders the commit against *readers*; without
+    these fsyncs a crash can "commit" a step directory whose manifest or
+    array files are torn or empty (data pages never reached disk). Shared
+    by :func:`save` and every external chain built on it (the serve-layer
+    ``DeltaLog`` appends ride through :func:`save`)."""
+    with open(path, "rb") as f:
+        os.fsync(f.fileno())
+    fsync_dir(os.path.dirname(path) or ".")
 
 
 def step_dir(directory: str, step: int, shard_suffix: str = "") -> str:
@@ -83,15 +111,24 @@ def save(directory: str, step: int, tree: Any, *, keep: int = 3,
                              np.uint8, np.bool_):
             arr = arr.astype(np.float32)   # bf16 etc: widen on disk
         fname = f"arr_{i:05d}.npy"
-        np.save(os.path.join(tmp, fname), arr)
+        fpath = os.path.join(tmp, fname)
+        np.save(fpath, arr)
+        with open(fpath, "rb") as f:
+            os.fsync(f.fileno())     # data pages down before the rename
         manifest["leaves"].append(
             {"path": path, "file": fname, "dtype": logical_dtype,
              "shape": list(arr.shape)})
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+    # manifest contents + the tmp dir's entry table down before the
+    # rename (arrays were fsynced as written); then the rename itself is
+    # made durable via the parent — without these a power loss can
+    # "commit" a step whose manifest or arrays are torn or empty
+    fsync_file_then_dir(os.path.join(tmp, "manifest.json"))
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)            # atomic commit
+    fsync_dir(directory)
     _gc(directory, keep, shard_suffix)
     return final
 
@@ -118,6 +155,27 @@ def load_leaves(directory: str, step: int,
         manifest = json.load(f)
     return {e["path"]: np.load(os.path.join(path, e["file"]))
             for e in manifest["leaves"]}
+
+
+def verify_step(directory: str, step: int, shard_suffix: str = "") -> bool:
+    """Whether a committed step directory is *intact*: manifest present
+    and parseable, every leaf file loadable at its manifest shape.
+
+    A pre-durability writer (or bitrot) can leave a renamed-but-torn
+    step; chain consumers (the serve-layer ``DeltaLog``) use this to
+    distinguish "not yet delivered / torn" from "committed" instead of
+    exploding mid-replay."""
+    path = step_dir(directory, step, shard_suffix)
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        for e in manifest["leaves"]:
+            arr = np.load(os.path.join(path, e["file"]))
+            if list(arr.shape) != list(e["shape"]):
+                return False
+    except Exception:  # torn bytes raise all kinds: treat alike
+        return False
+    return True
 
 
 def restore(directory: str, step: int, like: Any, *, shardings=None,

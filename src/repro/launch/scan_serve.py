@@ -44,6 +44,13 @@ routing several indexes through one engine:
     PYTHONPATH=src python -m repro.launch.scan_serve sweep \
         --approx simhash:128 --n 8192
 
+    # replicated read fleet under chaos: one writer + 3 replicas tail
+    # the DeltaLog while a seeded fault schedule crashes/stalls/corrupts;
+    # exits nonzero if any answer diverges from the writer's bits or a
+    # timeout escapes the admission/retry machinery unshed
+    PYTHONPATH=src python -m repro.launch.scan_serve fleet \
+        --replicas 3 --updates 8 --chaos crash:0.02,stall:0.05,corrupt:0.1
+
 ``--shards K`` forces K host-platform devices itself when jax would
 otherwise see fewer (same effect as
 ``XLA_FLAGS=--xla_force_host_platform_device_count=K``).
@@ -488,12 +495,186 @@ def cmd_update(args):
     _write_metrics(svc.engine.registry, args.metrics_json)
 
 
+def cmd_fleet(args):
+    """Replicated-fleet verification run: writer + N tailing replicas +
+    router under synthetic traffic and (optionally) a seeded chaos
+    schedule, with a bit-identity oracle over every routed answer."""
+    import tempfile
+
+    from repro.core import random_graph
+    from repro.core.update import random_delta
+    from repro.serve import (ChaosPolicy, EngineConfig, Fleet,
+                             FleetExhausted, Overloaded, RouterConfig)
+    from repro.obs import write_json
+
+    if args.load or args.save:
+        raise SystemExit(
+            "the fleet serves its own catalog root (snapshots + delta "
+            "chains for writer and replicas alike); use --root DIR")
+    chaos = None
+    if args.chaos:
+        chaos = ChaosPolicy.parse(args.chaos, seed=args.chaos_seed)
+        print(f"armed {chaos.describe()}")
+    cfg = EngineConfig(max_batch=args.max_batch, flush_ms=args.flush_ms,
+                       warm_ahead=not args.no_warm)
+    root = args.root or tempfile.mkdtemp(prefix="scan_fleet_")
+    fleet = Fleet(root, n_replicas=args.replicas, writer_config=cfg,
+                  router_config=RouterConfig(timeout_s=args.timeout_s,
+                                             hedge_after_s=args.hedge_after),
+                  measure=args.measure, compact_every=args.compact_every,
+                  chaos=chaos)
+    g = random_graph(args.n, args.avg_degree, seed=args.seed,
+                     weighted=args.weighted,
+                     planted_clusters=args.clusters)
+    rng = np.random.default_rng(args.seed + 1)
+    pool = [(int(m), float(e))
+            for m in (2, 3, 4, 5)
+            for e in np.round(np.linspace(0.1, 0.9, 9), 3)]
+    seed_share = _SEED_SHARE[args.traffic]
+    # oracle: the writer records each seq's content fingerprint the
+    # moment the delta commits; any answer must match the fingerprint
+    # recorded at *its* seq (stale is legal, divergent bits are not)
+    oracle_fp = {}
+    tally = {"ok": 0, "stale": 0, "shed": 0, "unavailable": 0,
+             "divergent": 0, "unshed_timeouts": 0}
+
+    async def editor():
+        for _ in range(args.updates):
+            delta = random_delta(fleet.writer.graph("g"),
+                                 args.update_batch, rng)
+            await fleet.apply("g", delta)
+            oracle_fp[fleet.target_seq("g")] = fleet.writer.fingerprint("g")
+            await asyncio.sleep(0)
+
+    async def client(cid: int):
+        for _ in range(args.requests):
+            mu, eps = pool[rng.integers(len(pool))]
+            if rng.random() < seed_share:
+                coro = fleet.query_seed("g", int(rng.integers(g.n)), mu, eps)
+            else:
+                coro = fleet.query("g", mu, eps)
+            try:
+                # guard-s is the *unshed* timeout detector: the router's
+                # own timeout/retry budget is far below it, so tripping
+                # the guard means a request escaped every typed exit
+                ans = await asyncio.wait_for(coro, args.guard_s)
+            except Overloaded:
+                tally["shed"] += 1
+            except FleetExhausted:
+                tally["unavailable"] += 1
+            except asyncio.TimeoutError:
+                tally["unshed_timeouts"] += 1
+            else:
+                want = oracle_fp.get(ans.seq)
+                if want is None or ans.fingerprint != want:
+                    tally["divergent"] += 1
+                    print(f"DIVERGENT answer: replica={ans.replica} "
+                          f"seq={ans.seq} fp={ans.fingerprint[:12]} "
+                          f"oracle={'missing' if want is None else want[:12]}")
+                else:
+                    tally["ok"] += 1
+                    if ans.seq < max(oracle_fp):
+                        tally["stale"] += 1
+            await asyncio.sleep(0)
+
+    async def main_():
+        async with fleet:
+            fleet.create("g", g)
+            oracle_fp[0] = fleet.writer.fingerprint("g")
+            # wait for every replica to discover + restore the snapshot,
+            # then warm the compiled batch shapes through the router
+            await fleet.converged("g", timeout_s=30.0)
+            if seed_share < 1.0:
+                await fleet.query("g", *pool[0])
+            if seed_share > 0.0:
+                await fleet.query_seed("g", 0, *pool[0])
+            async with _periodic_stats(fleet.registry, args.stats_every):
+                t0 = time.time()
+                await asyncio.gather(
+                    editor(), *[client(i) for i in range(args.clients)])
+                dt = time.time() - t0
+            settled = await fleet.converged("g", timeout_s=5.0)
+            rows = [(rep.replica_id, rep.healthy, rep.crashed,
+                     rep.seq("g") if "g" in rep._tracked else None)
+                    for rep in fleet.replicas]
+            return dt, settled, rows
+
+    dt, settled, rows = asyncio.run(main_())
+    total = sum(tally[k] for k in
+                ("ok", "shed", "unavailable", "divergent", "unshed_timeouts"))
+    snap = fleet.metrics_snapshot()
+    c = snap.get("counters", {})
+    print(f"\n{total} {args.traffic} requests from {args.clients} clients "
+          f"over {args.replicas} replicas ({args.updates} deltas applied) "
+          f"in {dt:.2f}s → {total / dt:.1f} req/s")
+    print(f"answers: ok={tally['ok']} (stale-but-consistent="
+          f"{tally['stale']}) shed={tally['shed']} "
+          f"unavailable={tally['unavailable']} "
+          f"divergent={tally['divergent']} "
+          f"unshed_timeouts={tally['unshed_timeouts']}")
+    print(f"router: requests={c.get('fleet.requests', 0)} "
+          f"failovers={c.get('fleet.failovers', 0)} "
+          f"retries={c.get('fleet.retries', 0)} "
+          f"hedges={c.get('fleet.hedges', 0)} "
+          f"hedge_wins={c.get('fleet.hedge_wins', 0)} "
+          f"overload_spills={c.get('fleet.overload_spills', 0)} "
+          f"exhausted={c.get('fleet.exhausted', 0)}")
+    print(f"replication: replays={c.get('fleet.replays', 0)} "
+          f"swaps={c.get('fleet.swaps', 0)} "
+          f"resyncs={c.get('fleet.resyncs', 0)} "
+          f"corrupt_entries={c.get('fleet.corrupt_entries', 0)} "
+          f"fingerprint_mismatches="
+          f"{c.get('fleet.fingerprint_mismatches', 0)} "
+          f"injected_corruptions={c.get('fleet.injected_corruptions', 0)} "
+          f"crashes={c.get('fleet.crashes', 0)} "
+          f"stalls={c.get('fleet.stalls', 0)}")
+    target = fleet.target_seq("g")
+    for rid, healthy, crashed, pos in rows:
+        print(f"  {rid}: healthy={healthy} crashed={crashed} "
+              f"seq={pos if pos is not None else '-'}/{target}")
+    note = "converged" if settled else \
+        "NOT converged (last-good service continues; staleness gauge " \
+        f"= {snap.get('gauges', {}).get('fleet.staleness_seq', 0):g})"
+    print(f"fleet {note}; writer at seq {target}")
+    if args.metrics_json:
+        write_json(snap, args.metrics_json)
+        print(f"wrote merged fleet metrics snapshot to {args.metrics_json}")
+    if tally["divergent"] or tally["unshed_timeouts"]:
+        raise SystemExit(
+            f"FLEET CHECK FAILED: divergent={tally['divergent']} "
+            f"unshed_timeouts={tally['unshed_timeouts']}")
+    print("fleet check passed: every answer carried the writer's exact "
+          "bits for its sequence number")
+
+
+_FLEET_EPILOG = """\
+worked example — a chaos soak that must exit 0:
+
+    PYTHONPATH=src python -m repro.launch.scan_serve fleet \\
+        --n 2048 --avg-degree 8 --replicas 3 --clients 8 --requests 16 \\
+        --updates 8 --chaos crash:0.02,stall:0.05,corrupt:0.1 \\
+        --chaos-seed 7 --metrics-json /tmp/fleet_metrics.json
+
+Every routed answer carries (fingerprint, seq, replica); the run fails
+(exit 1) if any answer's fingerprint differs from the one the writer
+recorded at that seq — bit divergence — or if a request times out
+without a typed Overloaded/FleetExhausted exit. Stale answers (an older
+seq than the writer's tip) are legal and reported separately; the
+`fleet.staleness_seq` gauge in --metrics-json is the fleet-wide
+watermark. Chaos spec keys: crash, stall, slow, corrupt, delay
+(values are probabilities; the schedule is fully determined by
+--chaos-seed, so a failing seed is a regression test)."""
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     sub = ap.add_subparsers(dest="cmd", required=True)
     for name, fn in (("sweep", cmd_sweep), ("serve", cmd_serve),
-                     ("update", cmd_update)):
-        p = sub.add_parser(name)
+                     ("update", cmd_update), ("fleet", cmd_fleet)):
+        p = sub.add_parser(
+            name,
+            epilog=_FLEET_EPILOG if name == "fleet" else None,
+            formatter_class=argparse.RawDescriptionHelpFormatter)
         p.set_defaults(fn=fn)
         p.add_argument("--load", help="load a persisted index directory")
         p.add_argument("--save", help="persist the built index here")
@@ -543,7 +724,7 @@ def main():
         if name == "serve":
             p.add_argument("--indexes", type=int, default=1,
                            help="serve K indexes through one engine")
-        if name == "update":
+        if name in ("update", "fleet"):
             p.add_argument("--root", help="service catalog root "
                            "(snapshots + delta chains; default: tempdir)")
             p.add_argument("--updates", type=int, default=16,
@@ -552,6 +733,26 @@ def main():
                            help="edits per batch (half ins, half del)")
             p.add_argument("--compact-every", type=int, default=8,
                            help="snapshot + prune after this many deltas")
+        if name == "fleet":
+            p.add_argument("--replicas", type=int, default=3,
+                           help="read replicas tailing the writer's chain")
+            p.add_argument("--chaos", metavar="SPEC",
+                           help="seeded fault schedule, e.g. "
+                           "crash:0.02,stall:0.05,corrupt:0.1 (keys: "
+                           "crash, stall, slow, corrupt, delay; values "
+                           "are probabilities)")
+            p.add_argument("--chaos-seed", type=int, default=0,
+                           help="rng seed for the chaos schedule (a "
+                           "failing seed replays exactly)")
+            p.add_argument("--timeout-s", type=float, default=5.0,
+                           help="router per-attempt timeout")
+            p.add_argument("--hedge-after", type=float, default=0.25,
+                           help="race a sibling replica if the primary "
+                           "has not answered within this many seconds")
+            p.add_argument("--guard-s", type=float, default=30.0,
+                           help="wall-clock guard per request; tripping "
+                           "it counts as an *unshed* timeout and fails "
+                           "the run")
     args = ap.parse_args()
     if getattr(args, "shards", 0) > 1:
         # must happen before jax's backend initializes — which is why all

@@ -65,13 +65,28 @@ class Counter:
 
 
 class Gauge:
-    """Point-in-time level (queue depth, live index count); thread-safe."""
+    """Point-in-time level (queue depth, live index count); thread-safe.
 
-    __slots__ = ("_lock", "_value")
+    ``mode`` declares how this gauge folds across a fleet of registries
+    (:meth:`MetricsRegistry.merge_snapshot`): ``"sum"`` for additive
+    levels (queue depths add across replicas), ``"max"`` for watermarks
+    (the fleet's replication staleness is its *worst* replica's lag —
+    summing three replicas each 2 deltas behind into "6 behind" is a
+    lie). The mode travels in snapshots so the aggregating side needs no
+    out-of-band schema.
+    """
 
-    def __init__(self) -> None:
+    MODES = ("sum", "max")
+
+    __slots__ = ("_lock", "_value", "mode")
+
+    def __init__(self, mode: str = "sum") -> None:
+        if mode not in self.MODES:
+            raise ValueError(f"gauge mode must be one of {self.MODES}, "
+                             f"got {mode!r}")
         self._lock = threading.Lock()
         self._value = 0.0
+        self.mode = mode
 
     def set(self, value: float) -> None:
         with self._lock:
@@ -80,6 +95,14 @@ class Gauge:
     def add(self, amount: float) -> None:
         with self._lock:
             self._value += amount
+
+    def merge_value(self, value: float) -> None:
+        """Fold one peer registry's reading in, per this gauge's mode."""
+        with self._lock:
+            if self.mode == "max":
+                self._value = max(self._value, float(value))
+            else:
+                self._value += float(value)
 
     @property
     def value(self) -> float:
@@ -238,8 +261,8 @@ class MetricsRegistry:
         reg.gauge("engine.queue_depth").set(q.qsize())
 
     ``snapshot()`` is pure data (JSON-ready); ``merge_snapshot()`` folds
-    another registry's snapshot in (counters/histograms add, gauges
-    sum — fleet aggregation semantics).
+    another registry's snapshot in (counters/histograms add; gauges fold
+    per their declared mode — sum for levels, max for watermarks).
     """
 
     def __init__(self) -> None:
@@ -259,11 +282,18 @@ class MetricsRegistry:
     def inc(self, name: str, amount: int = 1) -> None:
         self.counter(name).inc(amount)
 
-    def gauge(self, name: str) -> Gauge:
+    def gauge(self, name: str, mode: Optional[str] = None) -> Gauge:
+        """Get-or-create a gauge. ``mode`` (``"sum"``/``"max"``) fixes
+        the fleet-merge semantics at creation; re-access with a
+        *different* explicit mode is a taxonomy bug and raises."""
         with self._lock:
             g = self._gauges.get(name)
             if g is None:
-                g = self._gauges[name] = Gauge()
+                g = self._gauges[name] = Gauge(mode or "sum")
+            elif mode is not None and g.mode != mode:
+                raise ValueError(
+                    f"gauge {name!r} already registered with mode "
+                    f"{g.mode!r}, not {mode!r}")
             return g
 
     def histogram(self, name: str, **kwargs) -> Histogram:
@@ -283,20 +313,29 @@ class MetricsRegistry:
             counters = dict(self._counters)
             gauges = dict(self._gauges)
             hists = dict(self._hists)
-        return {
+        out = {
             "counters": {k: c.value for k, c in sorted(counters.items())},
             "gauges": {k: g.value for k, g in sorted(gauges.items())},
             "histograms": {k: h.snapshot() for k, h in sorted(hists.items())},
         }
+        modes = {k: g.mode for k, g in sorted(gauges.items())
+                 if g.mode != "sum"}
+        if modes:   # only non-default modes travel (old snapshots: all sum)
+            out["gauge_modes"] = modes
+        return out
 
     def merge_snapshot(self, snap: dict) -> None:
         """Fold another registry's snapshot into this one (counters and
-        histograms add; gauges sum, the natural fleet semantics for
-        levels like queue depth)."""
+        histograms add; gauges fold per their merge mode — ``sum`` for
+        additive levels like queue depth, ``max`` for watermarks like
+        replication staleness). The incoming snapshot's ``gauge_modes``
+        wins when this registry has not seen the gauge yet; snapshots
+        predating modes merge as all-sum (the old behavior)."""
         for name, v in snap.get("counters", {}).items():
             self.inc(name, int(v))
+        modes = snap.get("gauge_modes", {})
         for name, v in snap.get("gauges", {}).items():
-            self.gauge(name).add(float(v))
+            self.gauge(name, modes.get(name)).merge_value(float(v))
         for name, hsnap in snap.get("histograms", {}).items():
             with self._lock:
                 h = self._hists.get(name)

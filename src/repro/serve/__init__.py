@@ -28,7 +28,23 @@ This package is the serving layer that completes that story:
     ``LiveIndexService`` applies ``EdgeDelta`` batches to its indexes
     incrementally (``repro.core.update``), hot-swaps them atomically into
     the router, persists the edit stream as a delta chain with periodic
-    compaction, and re-warms observed traffic after every swap.
+    compaction, and re-warms observed traffic after every swap;
+  * :mod:`repro.serve.errors` — typed rejections (``EngineStopped``,
+    ``Overloaded`` with ``retry_after``, ``ReplicaUnavailable``,
+    ``FleetExhausted``), all ``RuntimeError`` subclasses for back-compat;
+  * :mod:`repro.serve.admission` — per-client token buckets,
+    queue/offload-depth load shedding, deadline-aware rejection
+    (``EngineConfig(admission=AdmissionConfig(...))``);
+  * :mod:`repro.serve.fleet` — replicated read fleet: ``ReadReplica``
+    engines tail the writer's ``DeltaLog`` (verify → replay → fingerprint
+    check → hot-swap; never serve divergent bits), fronted by a
+    ``FleetRouter`` (consistent hashing by index name, health checks,
+    jittered retry, hedged failover) — the ``Fleet`` harness wires
+    writer + replicas + router over one catalog;
+  * :mod:`repro.serve.chaos` — seeded fault injection (``ChaosPolicy``:
+    replica crash, stall, slow replay, torn/corrupt chain entry, delayed
+    delivery) for the fleet's test suite, CI soak, and
+    ``scan_serve fleet`` CLI mode.
 
 Telemetry: every engine owns a :class:`repro.obs.MetricsRegistry` and a
 :class:`repro.obs.Tracer` (``engine.registry`` / ``engine.tracer``);
@@ -44,5 +60,12 @@ from repro.serve.store import (DeltaLog, IndexCatalog, IndexStore,
 from repro.serve.sweep import SweepResult, sweep, grid_sweep, sweep_stats
 from repro.serve.cache import (PartitionedResultCache, ResultCache,
                                SeedResultCache, neighborhood, quantize_eps)
+from repro.serve.errors import (ServeError, EngineStopped, Overloaded,
+                                ReplicaUnavailable, FleetExhausted)
+from repro.serve.admission import (AdmissionConfig, AdmissionController,
+                                   TokenBucket)
 from repro.serve.engine import MicroBatchEngine, EngineConfig
 from repro.serve.live import LiveIndexService
+from repro.serve.chaos import ChaosPolicy, corrupt_entry
+from repro.serve.fleet import (Fleet, FleetAnswer, FleetRouter, ReadReplica,
+                               RouterConfig)

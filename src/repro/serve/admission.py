@@ -1,0 +1,160 @@
+"""Admission control for the micro-batching engine.
+
+An engine without admission control degrades the worst possible way
+under overload: every request is accepted, the queue grows without
+bound, every client's latency climbs together, and the first visible
+symptom is timeouts *everywhere at once*. This module makes overload an
+explicit, typed, per-request decision made **at enqueue time** — before
+a future is parked behind a queue the collector may take seconds to
+drain:
+
+* **per-client token buckets** — each ``client`` id refills at
+  ``client_rate`` tokens/s up to ``client_burst``; a client that burns
+  its burst gets :class:`~repro.serve.errors.Overloaded` with the exact
+  ``retry_after`` until its next token, while well-behaved clients on
+  the same engine are untouched (fairness under a skewed client mix —
+  the fleet's hot-key reality).
+* **queue-depth shedding** — beyond ``max_queue_depth`` waiting
+  requests, new work is shed with ``retry_after`` = the estimated time
+  to drain the backlog. Bounded queue ⇒ bounded worst-case latency for
+  everything already admitted.
+* **offload-depth shedding** — ``engine.offload_depth`` >
+  ``max_offload_depth`` means maintenance (applies/refines) is queueing
+  behind the single offload worker; shedding query admissions while the
+  backlog clears keeps an update storm from starving the collector.
+* **deadline-aware rejection** — a request carrying ``deadline_s``
+  smaller than the estimated queue wait is rejected *immediately*:
+  executing it would burn a device-batch slot producing an answer the
+  client has already abandoned.
+
+Decisions are recorded per cause in the engine's registry
+(``admission.admitted`` / ``admission.shed_client_rate`` /
+``admission.shed_queue_depth`` / ``admission.shed_offload_depth`` /
+``admission.shed_deadline``), so "how much load did we refuse and why"
+is a snapshot read, not archaeology.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, Optional
+
+from repro.serve.errors import Overloaded
+
+__all__ = ["AdmissionConfig", "AdmissionController", "TokenBucket"]
+
+
+class TokenBucket:
+    """Classic token bucket: ``rate`` tokens/s refill, ``burst`` cap.
+
+    ``take()`` returns 0.0 on admit (one token consumed) or the seconds
+    until the next token frees up (nothing consumed) — exactly the
+    ``retry_after`` a client should be told. Thread-safe; time is
+    injectable for deterministic tests.
+    """
+
+    __slots__ = ("rate", "burst", "_tokens", "_t", "_lock", "_clock")
+
+    def __init__(self, rate: float, burst: int, *, clock=time.monotonic):
+        if rate <= 0:
+            raise ValueError(f"rate must be > 0, got {rate}")
+        if burst < 1:
+            raise ValueError(f"burst must be >= 1, got {burst}")
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self._clock = clock
+        self._tokens = float(burst)
+        self._t = clock()
+        self._lock = threading.Lock()
+
+    def take(self) -> float:
+        """→ 0.0 and consume a token, or seconds until one is available."""
+        now = self._clock()
+        with self._lock:
+            self._tokens = min(self.burst,
+                               self._tokens + (now - self._t) * self.rate)
+            self._t = now
+            if self._tokens >= 1.0:
+                self._tokens -= 1.0
+                return 0.0
+            return (1.0 - self._tokens) / self.rate
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """Limits for one engine's :class:`AdmissionController`.
+
+    ``client_rate`` = 0 disables per-client buckets (anonymous traffic
+    and trusted internal callers); ``max_queue_depth`` /
+    ``max_offload_depth`` = 0 disable those sheds.
+    """
+
+    max_queue_depth: int = 256     # waiting requests before shedding
+    max_offload_depth: int = 4     # queued maintenance jobs before shedding
+    client_rate: float = 0.0       # tokens/s per client id (0 = unlimited)
+    client_burst: int = 32         # bucket capacity per client id
+    max_clients: int = 4096        # LRU cap on tracked client buckets
+
+
+class AdmissionController:
+    """Per-request admit/shed decisions for one engine.
+
+    The engine calls :meth:`check` from ``_admit`` with its live queue
+    and offload depths plus its per-flush service estimate; a shed
+    raises :class:`Overloaded` (typed, with ``retry_after``) without
+    enqueueing anything.
+    """
+
+    def __init__(self, cfg: AdmissionConfig, registry, *,
+                 clock=time.monotonic):
+        self.cfg = cfg
+        self.registry = registry
+        self._clock = clock
+        self._buckets: Dict[str, TokenBucket] = {}
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    def _bucket(self, client: str) -> TokenBucket:
+        with self._lock:
+            b = self._buckets.get(client)
+            if b is None:
+                if len(self._buckets) >= self.cfg.max_clients:
+                    # drop the oldest tracked client (dict preserves
+                    # insertion order); a returning client restarts with
+                    # a full burst, which only ever errs permissive
+                    self._buckets.pop(next(iter(self._buckets)))
+                b = self._buckets[client] = TokenBucket(
+                    self.cfg.client_rate, self.cfg.client_burst,
+                    clock=self._clock)
+            return b
+
+    def _shed(self, reason: str, retry_after: float) -> None:
+        self.registry.inc(f"admission.shed_{reason}")
+        raise Overloaded(retry_after=retry_after, reason=reason)
+
+    # ------------------------------------------------------------------
+    def check(self, *, client: Optional[str], deadline_s: Optional[float],
+              queue_depth: int, offload_depth: float,
+              est_wait_s: float) -> None:
+        """Admit (return) or shed (raise :class:`Overloaded`) one request.
+
+        ``est_wait_s`` is the engine's estimate of time-to-service at the
+        current queue depth (collector flush cadence × backlog flushes);
+        it doubles as the shed ``retry_after`` and as the deadline test.
+        """
+        cfg = self.cfg
+        if cfg.client_rate > 0 and client is not None:
+            wait = self._bucket(client).take()
+            if wait > 0.0:
+                self._shed("client_rate", wait)
+        if cfg.max_queue_depth > 0 and queue_depth >= cfg.max_queue_depth:
+            self._shed("queue_depth", max(est_wait_s, 1e-3))
+        if cfg.max_offload_depth > 0 and offload_depth > cfg.max_offload_depth:
+            self._shed("offload_depth", max(est_wait_s, 1e-3))
+        if deadline_s is not None and est_wait_s > deadline_s:
+            # rejecting now is strictly better than timing out later:
+            # the client learns immediately and the batch slot goes to a
+            # request that can still make its deadline
+            self._shed("deadline", est_wait_s)
+        self.registry.inc("admission.admitted")

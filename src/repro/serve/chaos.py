@@ -1,0 +1,171 @@
+"""Fault injection for the replicated read fleet.
+
+A fleet is only as robust as the faults it has actually survived, so the
+failure modes are first-class, seeded, and injectable instead of waiting
+for production to produce them. One :class:`ChaosPolicy` instance is
+shared by every replica in a fleet run (and by the writer-side corrupt
+hook); all draws come from one seeded ``random.Random``, so a chaos soak
+is *replayable* — a failing seed is a regression test, not an anecdote.
+
+Faults, and where they bite:
+
+* **replica crash** (``crash_p``) — drawn per tail-loop poll; the
+  replica stops its engine mid-traffic. In-flight queries fail with
+  :class:`~repro.serve.errors.EngineStopped`; the router must fail over.
+* **stall** (``stall_p`` / ``stall_s``) — the tail loop sleeps without
+  replaying; the replica keeps serving its last-good version while its
+  ``fleet.staleness_seq`` watermark grows (graceful-degradation path).
+* **slow replay** (``slow_replay_p`` / ``slow_replay_s``) — the
+  ``apply_delta`` replay itself is slowed (big frontier, cold cache);
+  queries must keep flushing meanwhile (replay runs off-loop).
+* **torn / corrupt chain entry** (``corrupt_p``, via
+  :func:`corrupt_entry`) — an on-disk entry is torn (truncated array
+  file) or silently bit-flipped (payload scribble). Replicas must detect
+  both — torn at :meth:`~repro.serve.store.DeltaLog.verify` time,
+  scribbled at fingerprint-verify time — and **never serve** the result.
+* **delayed delivery** (``delay_p`` / ``delay_s``) — a committed entry
+  becomes visible to a replica only after a delay (slow NFS/object
+  store), exercising the staleness accounting without any corruption.
+
+The policy is consulted through narrow hooks (``should_crash`` /
+``stall_seconds`` / …) so tests can also drive single faults
+deterministically by constructing a policy with one probability at 1.0.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import random
+from typing import List, Optional
+
+from repro.ckpt import checkpoint
+
+__all__ = ["ChaosPolicy", "corrupt_entry"]
+
+
+def corrupt_entry(log_directory: str, seq: int,
+                  mode: str = "truncate") -> str:
+    """Corrupt one committed DeltaLog entry on disk; → the damaged path.
+
+    ``mode="truncate"`` cuts the last array file in half (a torn write:
+    :meth:`DeltaLog.verify` fails, ``np.load`` would raise) —
+    ``mode="scribble"`` flips payload bytes while keeping the npy header
+    intact (silent bitrot: the entry *loads*, but replaying it cannot
+    reproduce the recorded post-delta fingerprint). ``log_directory`` is
+    the chain directory itself (``DeltaLog(...).directory``).
+    """
+    step = checkpoint.step_dir(log_directory, seq)
+    arrs = sorted(f for f in os.listdir(step) if f.endswith(".npy"))
+    if not arrs:
+        raise FileNotFoundError(f"no array leaves under {step}")
+    target = os.path.join(step, arrs[-1])
+    size = os.path.getsize(target)
+    if mode == "truncate":
+        with open(target, "r+b") as f:
+            f.truncate(size // 2)
+    elif mode == "scribble":
+        # flip bytes at the *end* of the file: the npy header stays
+        # valid, so only semantic (fingerprint) verification can catch it
+        with open(target, "r+b") as f:
+            f.seek(max(size - 16, 0))
+            tail = f.read()
+            f.seek(max(size - 16, 0))
+            f.write(bytes(b ^ 0xFF for b in tail))
+    else:
+        raise ValueError(f"unknown corrupt mode {mode!r}")
+    return target
+
+
+@dataclasses.dataclass
+class ChaosPolicy:
+    """Seeded fault schedule for a fleet run (probabilities per event)."""
+
+    seed: int = 0
+    crash_p: float = 0.0        # per tail poll, per replica
+    stall_p: float = 0.0        # per tail poll, per replica
+    stall_s: float = 0.05
+    slow_replay_p: float = 0.0  # per replayed entry
+    slow_replay_s: float = 0.02
+    corrupt_p: float = 0.0      # per appended entry (writer-side hook)
+    corrupt_mode: str = "truncate"
+    delay_p: float = 0.0        # per (replica, entry) first sighting
+    delay_s: float = 0.05
+    max_crashes: int = 1        # never chaos-crash below quorum in a soak
+
+    def __post_init__(self) -> None:
+        self._rng = random.Random(self.seed)
+        self._crashes = 0
+        self._delayed: dict = {}   # (replica_id, seq) → release time offset
+
+    # -- parsing (CLI / CI) --------------------------------------------
+    @classmethod
+    def parse(cls, spec: str, *, seed: int = 0) -> "ChaosPolicy":
+        """``"crash:0.02,stall:0.05,corrupt:0.1"`` → policy. Known keys:
+        crash, stall, slow, corrupt, delay (values are probabilities;
+        durations/modes keep their defaults)."""
+        keys = {"crash": "crash_p", "stall": "stall_p",
+                "slow": "slow_replay_p", "corrupt": "corrupt_p",
+                "delay": "delay_p"}
+        kwargs: dict = {"seed": seed}
+        for part in filter(None, spec.split(",")):
+            k, _, v = part.partition(":")
+            if k not in keys:
+                raise ValueError(
+                    f"unknown chaos fault {k!r} (know {sorted(keys)})")
+            kwargs[keys[k]] = float(v) if v else 1.0
+        return cls(**kwargs)
+
+    # -- replica-side hooks --------------------------------------------
+    def should_crash(self, replica_id: str) -> bool:
+        if self.crash_p <= 0 or self._crashes >= self.max_crashes:
+            return False
+        if self._rng.random() < self.crash_p:
+            self._crashes += 1
+            return True
+        return False
+
+    def stall_seconds(self, replica_id: str) -> float:
+        if self.stall_p > 0 and self._rng.random() < self.stall_p:
+            return self.stall_s
+        return 0.0
+
+    def replay_delay(self, replica_id: str, seq: int) -> float:
+        """Extra seconds to sleep inside the replay of one entry."""
+        if self.slow_replay_p > 0 and self._rng.random() < self.slow_replay_p:
+            return self.slow_replay_s
+        return 0.0
+
+    def delivery_delay(self, replica_id: str, seq: int) -> float:
+        """Seconds this replica must keep pretending ``seq`` is not on
+        disk yet (drawn once per (replica, entry))."""
+        key = (replica_id, seq)
+        if key not in self._delayed:
+            self._delayed[key] = (
+                self.delay_s
+                if self.delay_p > 0 and self._rng.random() < self.delay_p
+                else 0.0)
+        return self._delayed[key]
+
+    # -- writer-side hook ----------------------------------------------
+    def maybe_corrupt(self, log_directory: str, seq: int) -> Optional[str]:
+        """Writer-side: after committing entry ``seq``, possibly tear it
+        on disk (→ damaged path, or None). The fleet harness calls this
+        from its delta pipeline so corruption lands *between* the commit
+        and the replicas' next poll — the worst possible moment."""
+        if self.corrupt_p > 0 and self._rng.random() < self.corrupt_p:
+            return corrupt_entry(log_directory, seq, self.corrupt_mode)
+        return None
+
+    # -- bookkeeping ----------------------------------------------------
+    @property
+    def crashes_injected(self) -> int:
+        return self._crashes
+
+    def describe(self) -> str:
+        on: List[str] = []
+        for k in ("crash_p", "stall_p", "slow_replay_p", "corrupt_p",
+                  "delay_p"):
+            v = getattr(self, k)
+            if v > 0:
+                on.append(f"{k}={v:g}")
+        return f"chaos(seed={self.seed}, {', '.join(on) or 'off'})"

@@ -104,9 +104,11 @@ from repro.core.index import ScanIndex
 from repro.core.local import SeedResult, query_seeds
 from repro.core.query import ClusterResult, query_batch
 from repro.obs import MetricsRegistry, Tracer
+from repro.serve.admission import AdmissionConfig, AdmissionController
 from repro.serve.cache import (DEFAULT_EPS_QUANTUM, PartitionedResultCache,
                                ResultCache, SeedResultCache, neighborhood,
                                quantize_eps)
+from repro.serve.errors import EngineStopped
 from repro.serve.store import index_fingerprint
 
 
@@ -190,6 +192,8 @@ class EngineConfig:
     seed_frontier_cap: int = 128  # member/frontier slots per lane (pow2)
     seed_window: int = 32         # NO-row ε-prefix entries per gather
     seed_border_cap: int = 512    # candidate-border slots per lane (pow2)
+    # --- admission control (None = accept everything, the old behavior)
+    admission: Optional[AdmissionConfig] = None
 
 
 class MicroBatchEngine:
@@ -222,6 +226,8 @@ class MicroBatchEngine:
         self.registry = registry if registry is not None else MetricsRegistry()
         self.tracer = Tracer(self.registry)
         self.stats = _StatsView(self.registry)
+        self.admission = (AdmissionController(config.admission, self.registry)
+                          if config.admission is not None else None)
         self.fingerprint: Optional[str] = None
         if index is not None:
             if g is None:
@@ -421,13 +427,20 @@ class MicroBatchEngine:
     # client API
     # ------------------------------------------------------------------
     async def query(self, mu: int, eps: float,
-                    fingerprint: Optional[str] = None) -> ClusterResult:
+                    fingerprint: Optional[str] = None, *,
+                    client: Optional[str] = None,
+                    deadline_s: Optional[float] = None) -> ClusterResult:
         """One SCAN query; coalesced with whatever else is in flight.
 
         ``fingerprint`` selects the target index; ``None`` routes to the
-        engine's default (the first registered index).
+        engine's default (the first registered index). ``client`` is an
+        opaque id for per-client admission fairness; ``deadline_s`` lets
+        admission reject immediately when the estimated queue wait
+        already exceeds the client's patience (both ignored unless the
+        engine was configured with ``EngineConfig(admission=...)``; a
+        shed raises :class:`~repro.serve.errors.Overloaded`).
         """
-        fp = self._admit(fingerprint)
+        fp = self._admit(fingerprint, client=client, deadline_s=deadline_s)
         if self._task is None:
             await self.start()
         t0 = time.monotonic()
@@ -449,13 +462,16 @@ class MicroBatchEngine:
             self.registry.observe("engine.e2e", time.monotonic() - t0)
 
     async def query_seed(self, seed: int, mu: int, eps: float,
-                         fingerprint: Optional[str] = None) -> SeedResult:
+                         fingerprint: Optional[str] = None, *,
+                         client: Optional[str] = None,
+                         deadline_s: Optional[float] = None) -> SeedResult:
         """One seed-set (local) query: the cluster containing ``seed`` at
         (μ, ε) — label, core flag, and full member mask — coalesced with
         other in-flight seed requests into one fixed-shape
         ``query_seeds`` lane batch. Bit-identical to the seed's row of
-        the full ``query()`` answer."""
-        fp = self._admit(fingerprint)
+        the full ``query()`` answer. ``client`` / ``deadline_s`` feed
+        admission control exactly as in :meth:`query`."""
+        fp = self._admit(fingerprint, client=client, deadline_s=deadline_s)
         index, _ = self._indexes[fp]
         seed = int(seed)
         if not 0 <= seed < index.n:
@@ -478,16 +494,41 @@ class MicroBatchEngine:
         finally:
             self.registry.observe("engine.seed_e2e", time.monotonic() - t0)
 
-    def _admit(self, fingerprint: Optional[str]) -> str:
-        """Resolve the route and refuse work on a stopped engine (a
-        request enqueued after stop() would otherwise hold a future the
-        dead collector never resolves)."""
+    def _admit(self, fingerprint: Optional[str], *,
+               client: Optional[str] = None,
+               deadline_s: Optional[float] = None) -> str:
+        """Resolve the route, refuse work on a stopped engine (a request
+        enqueued after stop() would otherwise hold a future the dead
+        collector never resolves — typed :class:`EngineStopped` so fleet
+        retry logic can branch on it), and run admission control when
+        configured (a shed raises typed
+        :class:`~repro.serve.errors.Overloaded` with ``retry_after``
+        instead of silently growing the queue)."""
         fp = fingerprint if fingerprint is not None else self.fingerprint
         if fp not in self._indexes:
             raise KeyError(f"no index registered for fingerprint {fp!r}")
         if self._stopped:
-            raise RuntimeError("engine stopped")
+            raise EngineStopped()
+        if self.admission is not None:
+            self.admission.check(
+                client=client, deadline_s=deadline_s,
+                queue_depth=self._queue.qsize(),
+                offload_depth=self.registry.gauge(
+                    "engine.offload_depth").value,
+                est_wait_s=self._est_wait_s())
         return fp
+
+    def _est_wait_s(self) -> float:
+        """Estimated time-to-service at the current backlog: full flushes
+        ahead of a new request × (flush window + observed p50 device
+        call). Deliberately a fast, conservative scalar — admission needs
+        a shed threshold and a ``retry_after``, not a simulator."""
+        flushes_ahead = self._queue.qsize() // max(self.cfg.max_batch, 1) + 1
+        per_flush = self.cfg.flush_ms / 1e3
+        hist = self.registry.histogram("engine.device_call")
+        if hist.count:
+            per_flush += hist.quantile(0.5)
+        return flushes_ahead * per_flush
 
     def _enqueue(self, fp: str, kind: str, key, t0: float) -> asyncio.Future:
         # NOTE: callers reach here with no suspension point between
@@ -549,7 +590,7 @@ class MicroBatchEngine:
             if item[0] is _DRAIN:
                 fut.set_result(None)
                 continue
-            fut.set_exception(RuntimeError("engine stopped"))
+            fut.set_exception(EngineStopped())
             rejected += 1
         if rejected:
             self.registry.inc("engine.rejected_on_stop", rejected)

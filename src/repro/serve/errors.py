@@ -1,0 +1,62 @@
+"""Typed serve-layer exceptions.
+
+The engine used to reject work with bare ``RuntimeError("engine
+stopped")`` strings — fine for a human reading a traceback, useless for
+fleet retry logic that must branch on *why* a request failed (a stopped
+replica is retryable on a sibling; an overloaded one wants backoff for
+``retry_after`` seconds; a divergent one must never be retried into).
+Every class subclasses :class:`RuntimeError` so pre-existing
+``except RuntimeError`` / ``pytest.raises(RuntimeError)`` call sites keep
+working, and the legacy message strings are preserved for log back-compat.
+"""
+from __future__ import annotations
+
+__all__ = ["ServeError", "EngineStopped", "Overloaded",
+           "ReplicaUnavailable", "FleetExhausted"]
+
+
+class ServeError(RuntimeError):
+    """Base class for every typed serve-layer rejection."""
+
+
+class EngineStopped(ServeError):
+    """The engine's collector is (or is about to be) gone; the request
+    was never executed. Retryable — on a restarted engine or, in a fleet,
+    on a sibling replica."""
+
+    def __init__(self, message: str = "engine stopped") -> None:
+        super().__init__(message)
+
+
+class Overloaded(ServeError):
+    """Admission control shed this request instead of queueing it.
+
+    ``retry_after`` is the server's estimate (seconds) of when capacity
+    frees up — a client (or the fleet router) should back off at least
+    that long before retrying *this* server; ``reason`` names which limit
+    tripped (``"client_rate"`` / ``"queue_depth"`` / ``"offload_depth"``
+    / ``"deadline"``)."""
+
+    def __init__(self, retry_after: float = 0.0,
+                 reason: str = "overloaded") -> None:
+        super().__init__(
+            f"overloaded ({reason}): retry after {retry_after:.3f}s")
+        self.retry_after = float(retry_after)
+        self.reason = reason
+
+
+class ReplicaUnavailable(ServeError):
+    """A fleet replica cannot serve (crashed, stopped, or still syncing
+    with nothing restorable). Retryable on a sibling."""
+
+
+class FleetExhausted(ServeError):
+    """The fleet router ran out of replicas/retries for one request.
+    ``attempts`` records how many replica calls were made; ``last`` the
+    final per-replica failure."""
+
+    def __init__(self, message: str, *, attempts: int = 0,
+                 last: Exception | None = None) -> None:
+        super().__init__(message)
+        self.attempts = attempts
+        self.last = last

@@ -1,0 +1,707 @@
+"""Replicated read fleet over the DeltaLog.
+
+One writer (:class:`~repro.serve.live.LiveIndexService`) cannot be the
+whole read path: its engine is one collector on one event loop, and it
+is also the process that crashes when the machine under it does. The
+fleet turns the write-side artifacts the repo already trusts — atomic
+snapshots plus the fingerprint-verified :class:`DeltaLog` chain — into a
+**replication protocol**: the log is the only channel between writer and
+replicas, so anything a replica can be convinced to serve has, by
+construction, survived a round-trip through crash-safe storage.
+
+Roles:
+
+* :class:`ReadReplica` — an independent :class:`MicroBatchEngine` (own
+  registry, own caches, own compiled-artifact routes) that restores each
+  named index from its latest snapshot and then *tails* the delta chain:
+  poll for newer entries, :meth:`DeltaLog.verify` the bytes, replay via
+  ``apply_delta`` off-loop, check the replayed content fingerprint
+  against the one the writer recorded, and hot-swap behind the engine's
+  ``drain()`` barrier — the same swap discipline as the writer, so
+  replica clients also never see a mix. **Bit-identity is the invariant**
+  (``apply_delta`` is oracle-proven identical to a rebuild): a replica
+  either serves exactly the writer's bits at some sequence number, or it
+  serves its *last verified* version and says so (``fleet.staleness_seq``
+  gauge, max-merged across the fleet) — it never serves a divergent
+  index. A torn/corrupt entry or a fingerprint mismatch halts the tail at
+  the last good seq; the replica recovers by **re-syncing from the next
+  snapshot** (the writer's compaction eventually publishes one past the
+  damage), not by touching the writer-owned chain.
+* :class:`FleetRouter` — consistent-hash routing (vnode ring keyed on
+  the *index name*, which is stable across versions, so one index's
+  traffic keeps hitting the same replica's caches), health checks, per
+  attempt timeouts, jittered-backoff retry over ring siblings, and
+  hedged failover: if the primary has not answered within
+  ``hedge_after_s``, a sibling is raced and the first success wins.
+  Typed failures route: :class:`EngineStopped`/timeout → failover to the
+  next sibling; :class:`Overloaded` → spill to a sibling once per
+  replica, else surface the shed (with its ``retry_after``) to the
+  client — the router must not amplify an overload into a retry storm.
+* :class:`Fleet` — the harness: one writer + N replicas + a router over
+  one on-disk catalog, with the optional
+  :class:`~repro.serve.chaos.ChaosPolicy` threaded through both sides
+  (writer-side entry corruption lands *between* commit and the replicas'
+  next poll). ``metrics_snapshot()`` folds every registry into one view
+  via ``merge_snapshot`` — counters sum, staleness watermarks max.
+
+Telemetry extends the ``repro.obs`` taxonomy under ``fleet.*``:
+``fleet.replay`` / ``fleet.resync`` spans; ``fleet.replays`` /
+``fleet.swaps`` / ``fleet.resyncs`` / ``fleet.corrupt_entries`` /
+``fleet.fingerprint_mismatches`` / ``fleet.crashes`` / ``fleet.stalls``
+/ ``fleet.delayed_entries`` counters replica-side; ``fleet.requests`` /
+``fleet.retries`` / ``fleet.failovers`` / ``fleet.hedges`` /
+``fleet.hedge_wins`` / ``fleet.overload_spills`` / ``fleet.exhausted``
+router-side; ``fleet.staleness_seq`` / ``fleet.replicas_healthy``
+gauges.
+"""
+from __future__ import annotations
+
+import asyncio
+import bisect
+import dataclasses
+import hashlib
+import logging
+import random
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.graph import CSRGraph
+from repro.core.index import ScanIndex
+from repro.core.update import EdgeDelta, apply_delta
+from repro.obs import MetricsRegistry, Tracer
+from repro.serve.chaos import ChaosPolicy
+from repro.serve.engine import EngineConfig, MicroBatchEngine
+from repro.serve.errors import (EngineStopped, FleetExhausted, Overloaded,
+                                ReplicaUnavailable)
+from repro.serve.live import LiveIndexService
+from repro.serve.store import DeltaLog, IndexCatalog, index_fingerprint
+
+__all__ = ["ReadReplica", "FleetRouter", "Fleet", "FleetAnswer"]
+
+_log = logging.getLogger(__name__)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetAnswer:
+    """One routed answer plus the provenance a bit-identity oracle needs:
+    *which* index version (content fingerprint + delta seq) produced it,
+    and on which replica. ``result`` is a ``ClusterResult`` or
+    ``SeedResult`` depending on the query kind."""
+
+    result: object
+    fingerprint: str
+    seq: int
+    replica: str
+
+
+@dataclasses.dataclass
+class _Tracked:
+    """One name's tail position on one replica."""
+
+    index: ScanIndex
+    g: CSRGraph
+    fp: str
+    seq: int
+
+
+class ReadReplica:
+    """One read-only engine tailing the writer's on-disk state.
+
+    The replica owns nothing on disk: snapshots and the delta chain are
+    the writer's; this side only ever reads them. It owns its *serving*
+    state — engine, caches, compiled routes — and advances it only
+    through verified replay or snapshot resync.
+    """
+
+    def __init__(self, replica_id: str, root: str, *,
+                 config: EngineConfig = EngineConfig(),
+                 measure: str = "cosine",
+                 poll_s: float = 0.02,
+                 chaos: Optional[ChaosPolicy] = None):
+        self.replica_id = replica_id
+        self.catalog = IndexCatalog(root)
+        self.engine = MicroBatchEngine(config=config)
+        self.measure = measure
+        self.poll_s = poll_s
+        self.chaos = chaos
+        self.registry = self.engine.registry
+        self.tracer = self.engine.tracer
+        self._tracked: Dict[str, _Tracked] = {}
+        self._first_seen: Dict[Tuple[str, int], float] = {}
+        self._tail_task: Optional[asyncio.Task] = None
+        self._running = False
+        self.crashed = False
+
+    # -- lifecycle -----------------------------------------------------
+    async def start(self) -> None:
+        await self.engine.start()
+        self._running = True
+        self.crashed = False
+        self._discover()
+        self._tail_task = asyncio.get_running_loop().create_task(
+            self._tail_loop())
+
+    async def stop(self) -> None:
+        self._running = False
+        if self._tail_task is not None:
+            task, self._tail_task = self._tail_task, None
+            task.cancel()
+            try:
+                await task
+            except asyncio.CancelledError:
+                pass
+        await self.engine.stop()
+
+    async def crash(self) -> None:
+        """Chaos verb: die mid-traffic. In-flight queries get
+        :class:`EngineStopped`; the tail stops advancing; the router's
+        health check turns negative on its next probe."""
+        self.registry.inc("fleet.crashes")
+        self.crashed = True
+        await self.stop()
+
+    @property
+    def healthy(self) -> bool:
+        return self._running and self.engine.is_running
+
+    def names(self) -> List[str]:
+        return sorted(self._tracked)
+
+    def seq(self, name: str) -> int:
+        return self._tracked[name].seq
+
+    def fingerprint(self, name: str) -> str:
+        return self._tracked[name].fp
+
+    # -- serving -------------------------------------------------------
+    async def query(self, name: str, mu: int, eps: float, *,
+                    client: Optional[str] = None,
+                    deadline_s: Optional[float] = None) -> FleetAnswer:
+        """One global query against this replica's current version of
+        ``name``; → :class:`FleetAnswer` (the fp/seq pair is resolved
+        atomically here, so a concurrent tail swap gives this query
+        entirely the old or entirely the new index)."""
+        tr = self._route(name)
+        res = await self.engine.query(mu, eps, fingerprint=tr.fp,
+                                      client=client, deadline_s=deadline_s)
+        return FleetAnswer(res, tr.fp, tr.seq, self.replica_id)
+
+    async def query_seed(self, name: str, seed: int, mu: int, eps: float, *,
+                         client: Optional[str] = None,
+                         deadline_s: Optional[float] = None) -> FleetAnswer:
+        tr = self._route(name)
+        res = await self.engine.query_seed(seed, mu, eps, fingerprint=tr.fp,
+                                           client=client,
+                                           deadline_s=deadline_s)
+        return FleetAnswer(res, tr.fp, tr.seq, self.replica_id)
+
+    def _route(self, name: str) -> _Tracked:
+        if not self.healthy:
+            raise ReplicaUnavailable(
+                f"replica {self.replica_id!r} is not serving")
+        tr = self._tracked.get(name)
+        if tr is None:
+            raise KeyError(f"replica {self.replica_id!r} does not track "
+                           f"index {name!r}")
+        return tr
+
+    # -- restore / resync ----------------------------------------------
+    def _discover(self) -> None:
+        """Pick up catalog names this replica is not tracking yet
+        (indexes created after the fleet started included)."""
+        for name in self.catalog.names():
+            if name in self._tracked:
+                continue
+            try:
+                self._restore(name)
+            except Exception:  # noqa: BLE001 — a half-written first
+                # snapshot is indistinguishable from one mid-commit;
+                # leave it for the next poll instead of dying
+                _log.exception("replica %s: restore of %r failed",
+                               self.replica_id, name)
+
+    def _restore(self, name: str) -> None:
+        store = self.catalog.store(name)
+        index, g, fp = store.load()
+        seq = store.latest_version()
+        old = self._tracked.get(name)
+        self.engine.register(index, g, fingerprint=fp)
+        self._tracked[name] = _Tracked(index=index, g=g, fp=fp, seq=seq)
+        if old is not None and old.fp != fp and not self._fp_in_use(old.fp):
+            self.engine.unregister(old.fp)
+
+    def _fp_in_use(self, fp: str) -> bool:
+        return any(t.fp == fp for t in self._tracked.values())
+
+    async def _resync(self, name: str, stuck_seq: int) -> bool:
+        """Recover from a damaged/pruned chain by jumping to the next
+        snapshot. Only useful once the writer has published a snapshot
+        *past* the stuck position — until then keep serving last-good."""
+        store = self.catalog.store(name)
+        latest = store.latest_version()
+        if latest is None or latest <= stuck_seq:
+            return False
+        with self.tracer.span("fleet.resync", replica=self.replica_id,
+                              index=name, at=stuck_seq, to=latest):
+            # the O(m) snapshot read is disk work — off-loop, same as the
+            # writer's compaction; the swap itself follows the standard
+            # register → flip → drain → unregister discipline
+            index, g, fp = await self.engine.run_offloaded(
+                lambda: store.load(latest))
+            old = self._tracked.get(name)
+            self.engine.register(index, g, fingerprint=fp)
+            self._tracked[name] = _Tracked(index=index, g=g, fp=fp,
+                                           seq=latest)
+            await self.engine.drain()
+            if old is not None and old.fp != fp \
+                    and not self._fp_in_use(old.fp):
+                self.engine.unregister(old.fp)
+        self.registry.inc("fleet.resyncs")
+        return True
+
+    # -- tailing -------------------------------------------------------
+    async def _tail_loop(self) -> None:
+        while self._running:
+            if self.chaos is not None:
+                if self.chaos.should_crash(self.replica_id):
+                    # crash() awaits our own task's cancellation —
+                    # detach it so the loop can die under us
+                    asyncio.get_running_loop().create_task(self.crash())
+                    return
+                stall = self.chaos.stall_seconds(self.replica_id)
+                if stall > 0:
+                    self.registry.inc("fleet.stalls")
+                    await asyncio.sleep(stall)
+            try:
+                self._discover()
+                for name in list(self._tracked):
+                    await self._tail_once(name)
+            except asyncio.CancelledError:
+                raise
+            except Exception:  # noqa: BLE001 — the tail must survive
+                # transient races with writer commits/prunes; the chain
+                # is re-read from scratch next poll
+                _log.exception("replica %s: tail iteration failed",
+                               self.replica_id)
+            await asyncio.sleep(self.poll_s)
+
+    async def _tail_once(self, name: str) -> None:
+        tr = self._tracked[name]
+        store = self.catalog.store(name)
+        log = DeltaLog(store.directory)
+        pending = [s for s in log.sequences() if s > tr.seq]
+        latest_snap = store.latest_version()
+        target = max(pending, default=tr.seq)
+        if latest_snap is not None:
+            target = max(target, latest_snap)
+        if (latest_snap is not None and latest_snap > tr.seq
+                and (not pending or pending[0] != tr.seq + 1)):
+            # the chain cannot carry us forward from here — compaction
+            # pruned past us (possibly around a corrupt entry we refused)
+            # or there is nothing newer on it at all — but a newer
+            # snapshot can: this is the recovery exit for every stuck
+            # state, and it is reached without ever touching the
+            # writer-owned chain
+            await self._resync(name, tr.seq)
+            tr = self._tracked[name]
+            pending = [s for s in log.sequences() if s > tr.seq]
+        for s in pending:
+            if not self._delivered(name, s):
+                break  # chaos: entry not visible to this replica yet
+            if s != self._tracked[name].seq + 1:
+                # gap: compaction pruned entries we never saw — the only
+                # way forward is the snapshot that covered them
+                if not await self._resync(name, self._tracked[name].seq):
+                    break
+                if self._tracked[name].seq + 1 != s:
+                    break  # resync jumped past (or not yet far enough)
+            if not log.verify(s):
+                # torn/corrupt bytes. NOT ours to truncate (the writer
+                # owns the chain; for all we know this is an append still
+                # racing to completion) — hold position, serve last-good,
+                # and take the snapshot exit once one covers the damage.
+                self.registry.inc("fleet.corrupt_entries")
+                await self._resync(name, self._tracked[name].seq)
+                break
+            if not await self._replay(name, s):
+                break
+        tr = self._tracked[name]
+        self.registry.gauge("fleet.staleness_seq", "max").set(
+            max(target - tr.seq, 0))
+
+    def _delivered(self, name: str, s: int) -> bool:
+        if self.chaos is None:
+            return True
+        delay = self.chaos.delivery_delay(self.replica_id, s)
+        if delay <= 0:
+            return True
+        key = (name, s)
+        first = self._first_seen.setdefault(key, time.monotonic())
+        if time.monotonic() - first < delay:
+            return False
+        self._first_seen.pop(key, None)
+        self.registry.inc("fleet.delayed_entries")
+        return True
+
+    async def _replay(self, name: str, s: int) -> bool:
+        """Replay one verified chain entry and hot-swap; → advanced?"""
+        tr = self._tracked[name]
+        log = DeltaLog(store_dir(self.catalog, name))
+
+        def _absorb():
+            # entry load + apply + fingerprint are all worker-side: the
+            # collector keeps flushing query batches against the current
+            # version for the whole replay (chaos slow-replay sleeps here
+            # too, stalling the tail, never the serve path)
+            delta, want = log.load(s)
+            if self.chaos is not None:
+                extra = self.chaos.replay_delay(self.replica_id, s)
+                if extra > 0:
+                    time.sleep(extra)
+            new_index, new_g, _info = apply_delta(tr.index, tr.g, delta,
+                                                  self.measure)
+            return new_index, new_g, index_fingerprint(new_index, new_g), want
+
+        with self.tracer.span("fleet.replay", replica=self.replica_id,
+                              index=name, seq=s) as sp:
+            try:
+                new_index, new_g, new_fp, want_fp = \
+                    await self.engine.run_offloaded(_absorb)
+            except asyncio.CancelledError:
+                raise
+            except Exception:  # noqa: BLE001
+                # an entry that passed verify() can still fail to *load*
+                # semantically (e.g. a scribbled fingerprint leaf that no
+                # longer decodes). Same posture as torn bytes: count it,
+                # hold last-good, exit via the next covering snapshot —
+                # retrying the same entry forever would be a livelock.
+                self.registry.inc("fleet.corrupt_entries")
+                sp.set(corrupt=True)
+                _log.exception(
+                    "replica %s: entry %d of %r failed to load/replay",
+                    self.replica_id, s, name)
+                await self._resync(name, tr.seq)
+                return False
+            if new_fp != want_fp:
+                # the entry *loaded* but does not reproduce the writer's
+                # bits (scribbled payload, or a divergent replica state).
+                # Divergent bits must never swap in — hold last-good and
+                # wait for a snapshot past the damage.
+                self.registry.inc("fleet.fingerprint_mismatches")
+                sp.set(diverged=True)
+                _log.error(
+                    "replica %s: entry %d of %r replayed to %s… but chain "
+                    "recorded %s…; holding at seq %d", self.replica_id, s,
+                    name, new_fp[:12], want_fp[:12], tr.seq)
+                await self._resync(name, tr.seq)
+                return False
+            self.registry.inc("fleet.replays")
+            if new_fp != tr.fp:
+                self.engine.register(new_index, new_g, fingerprint=new_fp)
+                self._tracked[name] = _Tracked(index=new_index, g=new_g,
+                                               fp=new_fp, seq=s)
+                await self.engine.drain()
+                if not self._fp_in_use(tr.fp):
+                    self.engine.unregister(tr.fp)
+                self.registry.inc("fleet.swaps")
+            else:
+                self._tracked[name] = dataclasses.replace(tr, seq=s)
+        return True
+
+
+def store_dir(catalog: IndexCatalog, name: str) -> str:
+    return catalog.store(name).directory
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    """Retry/hedging policy for one :class:`FleetRouter`."""
+
+    vnodes: int = 32            # ring points per replica
+    timeout_s: float = 2.0      # per attempt (primary + its hedge)
+    retries: int = 3            # replica attempts per request
+    hedge_after_s: Optional[float] = 0.25  # None disables hedging
+    backoff_s: float = 0.005    # base of the jittered exponential backoff
+    backoff_max_s: float = 0.1
+    seed: int = 0               # jitter rng
+
+
+class FleetRouter:
+    """Front door over N replicas: consistent hashing, health checks,
+    timeouts, jittered retry, hedged failover.
+
+    Routing key is the **index name** — stable across versions, unlike
+    the content fingerprint that changes every delta — so one index's
+    traffic sticks to one replica's caches while siblings stay warm only
+    through spill/hedge traffic (exactly the replicas that serve it on
+    failover).
+    """
+
+    def __init__(self, replicas: Sequence[ReadReplica], *,
+                 config: RouterConfig = RouterConfig(),
+                 registry: Optional[MetricsRegistry] = None):
+        if not replicas:
+            raise ValueError("a router needs at least one replica")
+        self.replicas = list(replicas)
+        self.cfg = config
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._rng = random.Random(config.seed)
+        self._ring: List[Tuple[int, ReadReplica]] = []
+        for rep in self.replicas:
+            for v in range(config.vnodes):
+                point = int.from_bytes(hashlib.sha256(
+                    f"{rep.replica_id}#{v}".encode()).digest()[:8], "big")
+                self._ring.append((point, rep))
+        self._ring.sort(key=lambda pr: pr[0])
+        self._points = [p for p, _ in self._ring]
+
+    # -- placement -----------------------------------------------------
+    def route(self, key: str) -> List[ReadReplica]:
+        """Distinct replicas in ring order starting at ``key``'s point —
+        element 0 is the primary, the rest the failover/hedge order."""
+        point = int.from_bytes(
+            hashlib.sha256(key.encode()).digest()[:8], "big")
+        start = bisect.bisect_right(self._points, point) % len(self._ring)
+        order: List[ReadReplica] = []
+        for i in range(len(self._ring)):
+            rep = self._ring[(start + i) % len(self._ring)][1]
+            if rep not in order:
+                order.append(rep)
+                if len(order) == len(self.replicas):
+                    break
+        return order
+
+    def healthy(self) -> List[ReadReplica]:
+        alive = [r for r in self.replicas if r.healthy]
+        self.registry.gauge("fleet.replicas_healthy", "max").set(len(alive))
+        return alive
+
+    # -- request path ---------------------------------------------------
+    async def query(self, name: str, mu: int, eps: float, *,
+                    client: Optional[str] = None,
+                    deadline_s: Optional[float] = None) -> FleetAnswer:
+        return await self._request(
+            name, lambda rep: rep.query(name, mu, eps, client=client,
+                                        deadline_s=deadline_s))
+
+    async def query_seed(self, name: str, seed: int, mu: int, eps: float, *,
+                         client: Optional[str] = None,
+                         deadline_s: Optional[float] = None) -> FleetAnswer:
+        return await self._request(
+            name, lambda rep: rep.query_seed(name, seed, mu, eps,
+                                             client=client,
+                                             deadline_s=deadline_s))
+
+    async def _request(self, key: str, call) -> FleetAnswer:
+        self.registry.inc("fleet.requests")
+        routed = self.route(key)
+        order = [r for r in routed if r.healthy]
+        if order and routed[0] is not order[0]:
+            # the routed owner failed its health check — serving from a
+            # ring sibling is a failover even though no call was wasted
+            self.registry.inc("fleet.failovers")
+        self.registry.gauge("fleet.replicas_healthy", "max").set(len(order))
+        if not order:
+            self.registry.inc("fleet.exhausted")
+            raise FleetExhausted(f"no healthy replica for {key!r}",
+                                 attempts=0)
+        last: Optional[Exception] = None
+        attempts = 0
+        for i in range(min(self.cfg.retries, len(order))):
+            primary = order[i]
+            hedge = order[(i + 1) % len(order)] if len(order) > 1 else None
+            attempts += 1
+            try:
+                return await self._attempt(call, primary, hedge)
+            except Overloaded as e:
+                # admission did its job — spill once to each sibling, but
+                # an all-shed fleet surfaces the shed (with retry_after),
+                # never converts it into a retry storm
+                self.registry.inc("fleet.overload_spills")
+                last = e
+                continue
+            except (EngineStopped, ReplicaUnavailable,
+                    asyncio.TimeoutError, KeyError) as e:
+                # KeyError: a replica that has not discovered a freshly
+                # created name yet — retryable on a sibling exactly like
+                # a crashed one
+                self.registry.inc("fleet.failovers")
+                last = e
+            if i + 1 < min(self.cfg.retries, len(order)):
+                self.registry.inc("fleet.retries")
+                await asyncio.sleep(self._backoff(i))
+        if isinstance(last, Overloaded):
+            raise last
+        self.registry.inc("fleet.exhausted")
+        raise FleetExhausted(
+            f"no replica answered {key!r} after {attempts} attempts "
+            f"(last: {last!r})", attempts=attempts, last=last)
+
+    def _backoff(self, attempt: int) -> float:
+        """Full-jitter exponential backoff: uniform in (0, base·2^n],
+        capped — retries from many concurrent callers decorrelate instead
+        of re-arriving in lockstep at the next replica."""
+        ceil = min(self.cfg.backoff_s * (2 ** attempt),
+                   self.cfg.backoff_max_s)
+        return self._rng.uniform(0, ceil)
+
+    async def _attempt(self, call, primary: ReadReplica,
+                       hedge: Optional[ReadReplica]) -> FleetAnswer:
+        """One timed attempt: primary, plus a hedged sibling raced in if
+        the primary is still pending after ``hedge_after_s``. First
+        success wins and cancels the loser; both failing raises the
+        primary's error (it is the routed owner — its failure decides
+        the failover)."""
+        loop = asyncio.get_running_loop()
+        deadline = loop.time() + self.cfg.timeout_s
+        t_primary = asyncio.ensure_future(call(primary))
+        tasks = [t_primary]
+        hedged = False
+        try:
+            while True:
+                timeout = deadline - loop.time()
+                if (not hedged and hedge is not None
+                        and self.cfg.hedge_after_s is not None):
+                    timeout = min(timeout, self.cfg.hedge_after_s)
+                if timeout <= 0:
+                    raise asyncio.TimeoutError(
+                        f"attempt on {primary.replica_id!r} timed out")
+                done, pending = await asyncio.wait(
+                    tasks, timeout=timeout,
+                    return_when=asyncio.FIRST_COMPLETED)
+                for t in done:
+                    if not t.cancelled() and t.exception() is None:
+                        if hedged and t is not t_primary:
+                            self.registry.inc("fleet.hedge_wins")
+                        return t.result()
+                if done:
+                    tasks = list(pending)
+                    if not tasks:
+                        # every racer failed; the primary's error drives
+                        # the router's failover decision
+                        raise t_primary.exception() or next(
+                            iter(done)).exception()
+                    continue
+                # timeout fired with nothing done: hedge once, then let
+                # the overall deadline govern
+                if (not hedged and hedge is not None
+                        and self.cfg.hedge_after_s is not None):
+                    hedged = True
+                    self.registry.inc("fleet.hedges")
+                    tasks.append(asyncio.ensure_future(call(hedge)))
+        finally:
+            for t in tasks:
+                if not t.done():
+                    t.cancel()
+
+
+class Fleet:
+    """One writer + N read replicas + a router over one on-disk catalog.
+
+    The single-process model is faithful to the protocol because the
+    replicas genuinely share nothing with the writer but the directory
+    tree: every byte a replica serves went through a committed snapshot
+    or a verified chain entry. ``chaos`` (a shared seeded
+    :class:`ChaosPolicy`) arms fault injection on both sides.
+    """
+
+    def __init__(self, root: str, *, n_replicas: int = 2,
+                 writer_config: EngineConfig = EngineConfig(),
+                 replica_config: Optional[EngineConfig] = None,
+                 router_config: RouterConfig = RouterConfig(),
+                 measure: str = "cosine",
+                 compact_every: int = 8,
+                 poll_s: float = 0.02,
+                 chaos: Optional[ChaosPolicy] = None):
+        if n_replicas < 1:
+            raise ValueError("a fleet needs at least one replica")
+        self.root = root
+        self.chaos = chaos
+        self.writer = LiveIndexService(root, config=writer_config,
+                                       measure=measure,
+                                       compact_every=compact_every)
+        self.replicas = [
+            ReadReplica(f"replica-{i}", root,
+                        config=(replica_config if replica_config is not None
+                                else writer_config),
+                        measure=measure, poll_s=poll_s, chaos=chaos)
+            for i in range(n_replicas)]
+        self.router = FleetRouter(self.replicas, config=router_config)
+        self.registry = self.router.registry
+
+    # -- lifecycle -----------------------------------------------------
+    async def __aenter__(self) -> "Fleet":
+        await self.writer.__aenter__()
+        for rep in self.replicas:
+            await rep.start()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        for rep in self.replicas:
+            await rep.stop()
+        await self.writer.__aexit__(*exc)
+
+    # -- write path (delegates to the writer) ---------------------------
+    def create(self, name: str, g: CSRGraph, **kw) -> str:
+        return self.writer.create(name, g, **kw)
+
+    async def apply(self, name: str, delta: EdgeDelta):
+        """Apply one delta through the writer; the committed chain entry
+        is the replication event the replicas will pick up. With chaos
+        armed, the freshly committed entry may be corrupted *here* —
+        after commit, before any replica's next poll — which is the
+        worst-ordering case the resync path exists for."""
+        info = await self.writer.apply(name, delta)
+        if self.chaos is not None:
+            seq = self.writer._live[name].seq
+            damaged = self.chaos.maybe_corrupt(
+                DeltaLog(store_dir(self.writer.catalog, name)).directory,
+                seq)
+            if damaged:
+                self.registry.inc("fleet.injected_corruptions")
+                _log.warning("chaos: corrupted chain entry %d (%s)",
+                             seq, damaged)
+        return info
+
+    def target_seq(self, name: str) -> int:
+        """The seq replicas are converging toward (writer's applied seq)."""
+        return self.writer._live[name].seq
+
+    # -- read path ------------------------------------------------------
+    async def query(self, name: str, mu: int, eps: float, **kw
+                    ) -> FleetAnswer:
+        return await self.router.query(name, mu, eps, **kw)
+
+    async def query_seed(self, name: str, seed: int, mu: int, eps: float,
+                         **kw) -> FleetAnswer:
+        return await self.router.query_seed(name, seed, mu, eps, **kw)
+
+    async def converged(self, name: str, *, timeout_s: float = 10.0,
+                        replicas: Optional[Sequence[ReadReplica]] = None
+                        ) -> bool:
+        """Wait until every (healthy) replica has replayed up to the
+        writer's seq for ``name``; → False on timeout (a chaos-stalled
+        fleet may legitimately never converge within the window)."""
+        target = self.target_seq(name)
+        deadline = time.monotonic() + timeout_s
+        pool = self.replicas if replicas is None else list(replicas)
+        while time.monotonic() < deadline:
+            live = [r for r in pool if r.healthy]
+            if live and all(name in r._tracked and r.seq(name) >= target
+                            for r in live):
+                return True
+            await asyncio.sleep(0.01)
+        return False
+
+    # -- observability ---------------------------------------------------
+    def metrics_snapshot(self) -> dict:
+        """One merged view over writer + every replica + router: counters
+        sum (fleet totals), histograms concatenate, and max-mode gauges —
+        the staleness watermark — keep the worst replica visible instead
+        of averaging it away."""
+        merged = MetricsRegistry()
+        merged.merge_snapshot(self.registry.snapshot())
+        merged.merge_snapshot(self.writer.engine.registry.snapshot())
+        for rep in self.replicas:
+            merged.merge_snapshot(rep.registry.snapshot())
+        return merged.snapshot()

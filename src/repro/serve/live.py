@@ -242,6 +242,14 @@ class LiveIndexService:
                 "mix measures")
         snap_seq = store.latest_version()
         log = DeltaLog(store.directory)
+        # a crash mid-append can leave a renamed-but-torn tail entry
+        # (pre-durability writers; torn bytes). This service *owns* the
+        # chain, so recovery truncates it and replay lands on the last
+        # intact entry — the delta it described was never served anyway
+        torn = log.truncate_torn_tail()
+        if torn:
+            logging.getLogger(__name__).warning(
+                "index %r: truncated torn delta-chain tail %s", name, torn)
         seq = snap_seq
         for s in log.sequences():
             if s <= snap_seq:

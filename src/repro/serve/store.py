@@ -209,6 +209,39 @@ class DeltaLog:
         """Committed delta seqs, ascending (``.tmp`` wreckage ignored)."""
         return checkpoint.steps(self.directory)
 
+    def verify(self, seq: int) -> bool:
+        """Whether one committed chain entry is *intact* (manifest parses,
+        every leaf file loads at its recorded shape). A renamed-but-torn
+        entry — pre-durability power loss, bitrot, an injected chaos
+        fault — fails here instead of exploding mid-replay. This checks
+        *storage* integrity only; semantic integrity (did the delta
+        replay to the recorded fingerprint) is the replay-time check."""
+        return checkpoint.verify_step(self.directory, seq)
+
+    def truncate_torn_tail(self) -> List[int]:
+        """Drop the torn *tail* of the chain: from the first entry that
+        fails :meth:`verify`, remove it and everything after (later
+        entries chain off a delta that never durably committed, so they
+        are unreachable by a correct replay anyway); → removed seqs.
+
+        This is the **owner's** (writer's) crash-recovery verb — replay
+        lands on the last intact entry instead of raising. Read-side
+        tailers must *not* call it (the chain is shared state; a reader
+        deleting the writer's in-flight append would be corruption, not
+        recovery) — they treat a torn entry as not-yet-delivered and
+        re-poll.
+        """
+        removed: List[int] = []
+        torn = False
+        for s in self.sequences():
+            if not torn and not self.verify(s):
+                torn = True
+            if torn:
+                shutil.rmtree(checkpoint.step_dir(self.directory, s),
+                              ignore_errors=True)
+                removed.append(s)
+        return removed
+
     def load(self, seq: int) -> Tuple[EdgeDelta, str]:
         """→ (delta, post-application fingerprint) for one chain entry."""
         by_path = checkpoint.load_leaves(self.directory, seq)

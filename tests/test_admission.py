@@ -1,0 +1,222 @@
+"""Admission control: token-bucket math (injected clock), shed causes,
+per-client fairness, deadline-aware rejection, and the typed-exception
+contract (``EngineStopped`` / ``Overloaded`` stay ``RuntimeError``
+subclasses with the legacy message)."""
+import asyncio
+
+import pytest
+
+from repro.core import random_graph, build_index
+from repro.obs import MetricsRegistry
+from repro.serve import (AdmissionConfig, AdmissionController, EngineConfig,
+                         EngineStopped, MicroBatchEngine, Overloaded,
+                         ServeError, TokenBucket)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# --------------------------------------------------------------------------
+# token bucket
+# --------------------------------------------------------------------------
+def test_bucket_burst_then_refill_math():
+    clk = FakeClock()
+    b = TokenBucket(rate=2.0, burst=3, clock=clk)
+    assert [b.take() for _ in range(3)] == [0.0, 0.0, 0.0]
+    # empty: next token is 1/rate = 0.5s away
+    assert b.take() == pytest.approx(0.5)
+    clk.advance(0.25)
+    # half a token accumulated → half a token short → 0.25s
+    assert b.take() == pytest.approx(0.25)
+    clk.advance(0.25)
+    assert b.take() == 0.0
+    # and it is again empty right after
+    assert b.take() == pytest.approx(0.5)
+
+
+def test_bucket_never_exceeds_burst():
+    clk = FakeClock()
+    b = TokenBucket(rate=100.0, burst=2, clock=clk)
+    clk.advance(60.0)  # an hour of refill still caps at burst
+    assert [b.take() for _ in range(2)] == [0.0, 0.0]
+    assert b.take() > 0.0
+
+
+def test_bucket_rejects_bad_params():
+    with pytest.raises(ValueError):
+        TokenBucket(rate=0.0, burst=1)
+    with pytest.raises(ValueError):
+        TokenBucket(rate=1.0, burst=0)
+
+
+# --------------------------------------------------------------------------
+# controller shed causes
+# --------------------------------------------------------------------------
+def _check(ctrl, **kw):
+    kw.setdefault("client", None)
+    kw.setdefault("deadline_s", None)
+    kw.setdefault("queue_depth", 0)
+    kw.setdefault("offload_depth", 0)
+    kw.setdefault("est_wait_s", 0.01)
+    ctrl.check(**kw)
+
+
+def test_queue_depth_shed_reason_and_counter():
+    reg = MetricsRegistry()
+    ctrl = AdmissionController(AdmissionConfig(max_queue_depth=4), reg)
+    _check(ctrl, queue_depth=3)
+    with pytest.raises(Overloaded) as ei:
+        _check(ctrl, queue_depth=4, est_wait_s=0.7)
+    assert ei.value.reason == "queue_depth"
+    assert ei.value.retry_after == pytest.approx(0.7)
+    assert reg.counter("admission.shed_queue_depth").value == 1
+    assert reg.counter("admission.admitted").value == 1
+
+
+def test_offload_depth_shed():
+    reg = MetricsRegistry()
+    ctrl = AdmissionController(AdmissionConfig(max_offload_depth=2), reg)
+    _check(ctrl, offload_depth=2)  # at the limit is still fine
+    with pytest.raises(Overloaded) as ei:
+        _check(ctrl, offload_depth=3)
+    assert ei.value.reason == "offload_depth"
+    assert reg.counter("admission.shed_offload_depth").value == 1
+
+
+def test_deadline_rejection_is_immediate():
+    reg = MetricsRegistry()
+    ctrl = AdmissionController(AdmissionConfig(), reg)
+    _check(ctrl, deadline_s=1.0, est_wait_s=0.5)
+    with pytest.raises(Overloaded) as ei:
+        _check(ctrl, deadline_s=0.1, est_wait_s=0.5)
+    assert ei.value.reason == "deadline"
+    assert ei.value.retry_after == pytest.approx(0.5)
+
+
+def test_per_client_fairness():
+    """A client that burns its burst is shed with the bucket's exact
+    retry_after; an independent client on the same engine is untouched."""
+    clk = FakeClock()
+    reg = MetricsRegistry()
+    ctrl = AdmissionController(
+        AdmissionConfig(client_rate=1.0, client_burst=2), reg, clock=clk)
+    _check(ctrl, client="greedy")
+    _check(ctrl, client="greedy")
+    with pytest.raises(Overloaded) as ei:
+        _check(ctrl, client="greedy")
+    assert ei.value.reason == "client_rate"
+    assert ei.value.retry_after == pytest.approx(1.0)
+    _check(ctrl, client="polite")            # unaffected
+    clk.advance(1.0)
+    _check(ctrl, client="greedy")            # token refilled
+    assert reg.counter("admission.shed_client_rate").value == 1
+
+
+def test_client_lru_cap_evicts_oldest():
+    clk = FakeClock()
+    ctrl = AdmissionController(
+        AdmissionConfig(client_rate=1.0, client_burst=1, max_clients=2),
+        MetricsRegistry(), clock=clk)
+    _check(ctrl, client="a")
+    _check(ctrl, client="b")
+    _check(ctrl, client="c")  # evicts a's (empty) bucket
+    assert set(ctrl._buckets) == {"b", "c"}
+    _check(ctrl, client="a")  # returns with a fresh burst — errs permissive
+
+
+def test_anonymous_traffic_skips_buckets():
+    ctrl = AdmissionController(
+        AdmissionConfig(client_rate=1.0, client_burst=1), MetricsRegistry())
+    for _ in range(5):
+        _check(ctrl, client=None)
+    assert not ctrl._buckets
+
+
+# --------------------------------------------------------------------------
+# engine integration
+# --------------------------------------------------------------------------
+def _engine(**admission_kw):
+    g = random_graph(40, 4.0, seed=0)
+    index = build_index(g, "cosine")
+    return MicroBatchEngine(index, g, config=EngineConfig(
+        max_batch=4, flush_ms=20.0,
+        admission=AdmissionConfig(**admission_kw)))
+
+
+def test_engine_deadline_shed_is_typed():
+    """est_wait ≥ one flush window, so an impossible deadline sheds at
+    enqueue time — typed, with retry_after — not as a timeout later."""
+    engine = _engine()
+
+    async def main():
+        async with engine:
+            await engine.query(2, 0.5, deadline_s=10.0)  # plenty of time
+            with pytest.raises(Overloaded) as ei:
+                await engine.query(3, 0.5, deadline_s=1e-9)
+            return ei.value
+
+    e = asyncio.run(main())
+    assert e.reason == "deadline" and e.retry_after > 0
+    assert isinstance(e, RuntimeError)  # back-compat contract
+
+
+def test_engine_client_rate_shed_and_sibling_unaffected():
+    engine = _engine(client_rate=0.001, client_burst=1)
+
+    async def main():
+        async with engine:
+            await engine.query(2, 0.5, client="hog")
+            with pytest.raises(Overloaded):
+                await engine.query(3, 0.5, client="hog")
+            await engine.query(3, 0.5, client="other")
+
+    asyncio.run(main())
+    assert engine.registry.counter("admission.shed_client_rate").value == 1
+
+
+def test_no_admission_config_accepts_everything():
+    g = random_graph(40, 4.0, seed=0)
+    engine = MicroBatchEngine(build_index(g, "cosine"), g,
+                              config=EngineConfig(max_batch=4, flush_ms=2.0))
+
+    async def main():
+        async with engine:
+            # client/deadline kwargs are accepted and ignored
+            await engine.query(2, 0.5, client="x", deadline_s=1e-9)
+
+    asyncio.run(main())
+
+
+# --------------------------------------------------------------------------
+# typed rejection back-compat
+# --------------------------------------------------------------------------
+def test_stopped_engine_raises_typed_engine_stopped():
+    engine = _engine()
+
+    async def main():
+        async with engine:
+            await engine.query(2, 0.5)
+        # context manager exited → stopped
+        with pytest.raises(EngineStopped):
+            await engine.query(2, 0.6)
+        with pytest.raises(RuntimeError, match="engine stopped"):
+            await engine.query(2, 0.7)
+
+    asyncio.run(main())
+
+
+def test_typed_exception_hierarchy():
+    assert issubclass(EngineStopped, ServeError)
+    assert issubclass(Overloaded, ServeError)
+    assert issubclass(ServeError, RuntimeError)
+    assert str(EngineStopped()) == "engine stopped"
+    e = Overloaded(retry_after=0.25, reason="queue_depth")
+    assert "0.250" in str(e) and "queue_depth" in str(e)

@@ -1,0 +1,451 @@
+"""Replicated read fleet: tail convergence with bit-identity, consistent
+hash affinity, crash failover, corrupt-entry detection + snapshot resync,
+graceful staleness, hedged requests, and the chaos acceptance run (3
+replicas, mixed global+seed traffic, one killed mid-stream, zero
+bit-divergent answers against a side-replayed oracle)."""
+import asyncio
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (EdgeDelta, apply_delta, build_index, query,
+                        random_graph)
+from repro.core.local import query_seeds
+from repro.core.update import random_delta
+from repro.serve import (ChaosPolicy, DeltaLog, EngineConfig, Fleet,
+                         FleetAnswer, FleetExhausted, FleetRouter,
+                         LiveIndexService, Overloaded, ReadReplica,
+                         RouterConfig, corrupt_entry)
+
+CFG = EngineConfig(max_batch=8, flush_ms=2.0)
+
+
+def _graph(n=50, deg=5.0, seed=2):
+    return random_graph(n, deg, seed=seed, weighted=True)
+
+
+def _fleet(root, **kw):
+    kw.setdefault("writer_config", CFG)
+    kw.setdefault("poll_s", 0.01)
+    kw.setdefault("router_config", RouterConfig(timeout_s=5.0,
+                                                hedge_after_s=1.0))
+    return Fleet(str(root), **kw)
+
+
+# --------------------------------------------------------------------------
+# replication basics
+# --------------------------------------------------------------------------
+def test_replicas_converge_and_answers_are_bit_identical(tmp_path):
+    """Every replica tails the chain to the writer's seq, and a routed
+    answer equals the writer's own engine answer bit for bit."""
+    rng = np.random.default_rng(0)
+
+    async def main():
+        async with _fleet(tmp_path, n_replicas=2) as fleet:
+            fleet.create("g", _graph())
+            for _ in range(3):
+                await fleet.apply("g", random_delta(fleet.writer.graph("g"),
+                                                    6, rng))
+            assert await fleet.converged("g", timeout_s=20)
+            ans = await fleet.query("g", 3, 0.4)
+            ref = await fleet.writer.query("g", 3, 0.4)
+            assert ans.seq == fleet.target_seq("g")
+            assert ans.fingerprint == fleet.writer.fingerprint("g")
+            np.testing.assert_array_equal(np.asarray(ans.result.labels),
+                                          np.asarray(ref.labels))
+            np.testing.assert_array_equal(np.asarray(ans.result.is_core),
+                                          np.asarray(ref.is_core))
+            snap = fleet.metrics_snapshot()
+            # both replicas replayed all 3 entries and hot-swapped
+            assert snap["counters"]["fleet.replays"] == 6
+            assert snap["counters"]["fleet.swaps"] == 6
+            assert snap["gauges"]["fleet.staleness_seq"] == 0.0
+            assert snap["gauge_modes"]["fleet.staleness_seq"] == "max"
+
+    asyncio.run(main())
+
+
+def test_seed_queries_route_through_fleet(tmp_path):
+    async def main():
+        async with _fleet(tmp_path, n_replicas=2) as fleet:
+            g = _graph()
+            fleet.create("g", g)
+            assert await fleet.converged("g", timeout_s=20)
+            full = await fleet.writer.query("g", 2, 0.5)
+            for seed in (0, 7, 23):
+                ans = await fleet.query_seed("g", seed, 2, 0.5)
+                assert isinstance(ans, FleetAnswer)
+                assert ans.result.label == int(
+                    np.asarray(full.labels)[seed])
+
+    asyncio.run(main())
+
+
+def test_hash_affinity_is_stable(tmp_path):
+    """One name's traffic sticks to one replica (cache affinity); the
+    routed order is deterministic for a given replica set."""
+    async def main():
+        async with _fleet(tmp_path, n_replicas=3) as fleet:
+            fleet.create("g", _graph())
+            assert await fleet.converged("g", timeout_s=20)
+            order = fleet.router.route("g")
+            assert [r.replica_id for r in fleet.router.route("g")] == \
+                [r.replica_id for r in order]
+            served = {(await fleet.query("g", 2, 0.5)).replica
+                      for _ in range(6)}
+            assert served == {order[0].replica_id}
+            # distinct keys spread over the ring (not all on one node)
+            firsts = {fleet.router.route(f"key-{i}")[0].replica_id
+                      for i in range(32)}
+            assert len(firsts) > 1
+
+    asyncio.run(main())
+
+
+# --------------------------------------------------------------------------
+# failure handling
+# --------------------------------------------------------------------------
+def test_crash_failover_keeps_answering(tmp_path):
+    async def main():
+        async with _fleet(tmp_path, n_replicas=2) as fleet:
+            fleet.create("g", _graph())
+            assert await fleet.converged("g", timeout_s=20)
+            primary = fleet.router.route("g")[0]
+            await primary.crash()
+            for _ in range(4):
+                ans = await fleet.query("g", 3, 0.4)
+                assert ans.replica != primary.replica_id
+            snap = fleet.metrics_snapshot()
+            assert snap["counters"]["fleet.crashes"] == 1
+            assert snap["counters"]["fleet.failovers"] >= 1
+            # all replicas down → typed exhaustion, not a hang
+            await fleet.router.route("g")[0].crash()
+            for rep in fleet.replicas:
+                if rep.healthy:
+                    await rep.stop()
+            with pytest.raises(FleetExhausted):
+                await fleet.query("g", 3, 0.4)
+
+    asyncio.run(main())
+
+
+def test_corrupt_entry_detected_and_never_served(tmp_path):
+    """The acceptance property for corruption: a damaged chain entry —
+    whether it fails storage verification or loads-but-diverges — is
+    refused; the replica keeps serving its last verified version (stale,
+    consistent, counted). The replica starts *after* the damage so
+    detection is deterministic, not a poll race."""
+    rng = np.random.default_rng(3)
+    root = tmp_path
+
+    async def write_side():
+        svc = LiveIndexService(str(root), config=CFG, compact_every=100)
+        async with svc:
+            svc.create("g", _graph())
+            for _ in range(2):
+                await svc.apply("g", random_delta(svc.graph("g"), 6, rng))
+            return svc.fingerprint("g")
+
+    final_fp = asyncio.run(write_side())
+    # damage entry 2 on disk: depending on which leaf the scribble hits,
+    # this reads as torn storage or as loads-fine-wrong-bits — the
+    # replica must refuse it either way
+    log = DeltaLog(str(root / "g"))
+    corrupt_entry(log.directory, 2, mode="scribble")
+
+    async def read_side():
+        rep = ReadReplica("r0", str(root), config=CFG, poll_s=0.01)
+        await rep.start()
+        try:
+            deadline = time.monotonic() + 10
+            while time.monotonic() < deadline and rep.seq("g") < 1:
+                await asyncio.sleep(0.01)
+            await asyncio.sleep(0.1)
+            assert rep.seq("g") == 1       # entry 2 refused, held position
+            ans = await rep.query("g", 2, 0.5)
+            assert ans.seq == 1
+            assert ans.fingerprint != final_fp
+            c = rep.registry
+            assert (c.counter("fleet.fingerprint_mismatches").value
+                    + c.counter("fleet.corrupt_entries").value) >= 1
+            assert c.gauge("fleet.staleness_seq").value >= 1
+            # the chain is the writer's: the reader never truncated it
+            assert log.sequences() == [1, 2]
+        finally:
+            await rep.stop()
+
+    asyncio.run(read_side())
+
+
+def test_corrupt_entry_recovery_via_snapshot_resync(tmp_path):
+    """A replica stuck behind a torn entry recovers the moment the
+    writer's compaction publishes a snapshot past the damage — through
+    the resync path, never by touching the chain. Chaos delayed delivery
+    pins the replica behind the entry long enough to corrupt it
+    deterministically."""
+    rng = np.random.default_rng(13)
+    chaos = ChaosPolicy(delay_p=1.0, delay_s=0.4)
+
+    async def main():
+        svc = LiveIndexService(str(tmp_path), config=CFG,
+                               compact_every=100)
+        async with svc:
+            svc.create("g", _graph())
+            rep = ReadReplica("r0", str(tmp_path), config=CFG,
+                              poll_s=0.01, chaos=chaos)
+            await rep.start()
+            try:
+                await svc.apply("g", random_delta(svc.graph("g"), 6, rng))
+                await svc.apply("g", random_delta(svc.graph("g"), 6, rng))
+                # the replica will not look at entry 2 for delay_s yet —
+                # a deterministic window to tear it on disk
+                log = DeltaLog(str(tmp_path / "g"))
+                corrupt_entry(log.directory, 2, mode="truncate")
+                deadline = time.monotonic() + 10
+                while time.monotonic() < deadline and rep.seq("g") < 1:
+                    await asyncio.sleep(0.01)
+                await asyncio.sleep(0.6)
+                assert rep.seq("g") == 1   # stuck behind the torn entry
+                assert rep.registry.counter(
+                    "fleet.corrupt_entries").value >= 1
+
+                # the writer still holds seq 2 in memory: compaction
+                # snapshots v2 and prunes the (damaged) chain prefix
+                svc.compact("g")
+                deadline = time.monotonic() + 10
+                while time.monotonic() < deadline and rep.seq("g") < 2:
+                    await asyncio.sleep(0.01)
+                assert rep.seq("g") == 2
+                assert rep.registry.counter("fleet.resyncs").value >= 1
+                ans = await rep.query("g", 2, 0.5)
+                ref = await svc.query("g", 2, 0.5)
+                assert ans.seq == 2
+                np.testing.assert_array_equal(np.asarray(ans.result.labels),
+                                              np.asarray(ref.labels))
+            finally:
+                await rep.stop()
+
+    asyncio.run(main())
+
+
+def test_torn_entry_holds_position_without_touching_chain(tmp_path):
+    """A *truncated* entry fails storage verification; the replica holds
+    at last-good and — critically — does not truncate the writer-owned
+    chain (the writer may still be mid-append)."""
+    rng = np.random.default_rng(4)
+
+    async def write_side():
+        svc = LiveIndexService(str(tmp_path), config=CFG,
+                               compact_every=100)
+        async with svc:
+            svc.create("g", _graph())
+            await svc.apply("g", random_delta(svc.graph("g"), 6, rng))
+
+    asyncio.run(write_side())
+    log = DeltaLog(str(tmp_path / "g"))
+    corrupt_entry(log.directory, 1, mode="truncate")
+    assert not log.verify(1)
+
+    async def read_side():
+        rep = ReadReplica("r0", str(tmp_path), config=CFG, poll_s=0.01)
+        await rep.start()
+        try:
+            await asyncio.sleep(0.15)
+            assert rep.seq("g") == 0
+            assert rep.registry.counter("fleet.corrupt_entries").value >= 1
+            # the chain entry is still there — reader never deleted it
+            assert log.sequences() == [1]
+            ans = await rep.query("g", 2, 0.5)
+            assert ans.seq == 0
+        finally:
+            await rep.stop()
+
+    asyncio.run(read_side())
+
+
+def test_delayed_delivery_serves_stale_then_catches_up(tmp_path):
+    """Chaos delayed delivery: the replica answers from its last-good
+    version while the entry is 'in flight', then converges."""
+    rng = np.random.default_rng(5)
+    chaos = ChaosPolicy(delay_p=1.0, delay_s=0.3)
+
+    async def main():
+        async with _fleet(tmp_path, n_replicas=1, chaos=chaos) as fleet:
+            fleet.create("g", _graph())
+            await asyncio.sleep(0.05)
+            await fleet.apply("g", random_delta(fleet.writer.graph("g"),
+                                                6, rng))
+            ans = await fleet.query("g", 2, 0.5)
+            assert ans.seq == 0  # stale, but served
+            assert await fleet.converged("g", timeout_s=20)
+            ans2 = await fleet.query("g", 2, 0.5)
+            assert ans2.seq == 1
+            snap = fleet.metrics_snapshot()
+            assert snap["counters"]["fleet.delayed_entries"] >= 1
+
+    asyncio.run(main())
+
+
+def test_hedged_request_wins_on_slow_primary(tmp_path):
+    """If the primary sits on a request past hedge_after_s, the sibling
+    is raced in and its (identical) answer wins."""
+    async def main():
+        async with _fleet(tmp_path, n_replicas=2,
+                          router_config=RouterConfig(
+                              timeout_s=5.0, hedge_after_s=0.05)) as fleet:
+            fleet.create("g", _graph())
+            assert await fleet.converged("g", timeout_s=20)
+            primary = fleet.router.route("g")[0]
+            real = primary.query
+
+            async def slow_query(*a, **kw):
+                await asyncio.sleep(0.5)
+                return await real(*a, **kw)
+
+            primary.query = slow_query
+            try:
+                t0 = time.monotonic()
+                ans = await fleet.query("g", 3, 0.4)
+                elapsed = time.monotonic() - t0
+            finally:
+                primary.query = real
+            assert ans.replica != primary.replica_id
+            assert elapsed < 0.5
+            snap = fleet.metrics_snapshot()
+            assert snap["counters"]["fleet.hedges"] >= 1
+            assert snap["counters"]["fleet.hedge_wins"] >= 1
+
+    asyncio.run(main())
+
+
+def test_overload_spills_then_surfaces_typed(tmp_path):
+    """An Overloaded primary spills to a sibling; an all-shed fleet
+    surfaces the Overloaded (with retry_after) instead of exhausting."""
+    async def main():
+        async with _fleet(tmp_path, n_replicas=2) as fleet:
+            fleet.create("g", _graph())
+            assert await fleet.converged("g", timeout_s=20)
+
+            def shedding(rep):
+                async def f(*a, **kw):
+                    raise Overloaded(retry_after=0.5, reason="queue_depth")
+                return f
+
+            order = fleet.router.route("g")
+            real0 = order[0].query
+            order[0].query = shedding(order[0])
+            try:
+                ans = await fleet.query("g", 3, 0.4)
+                assert ans.replica == order[1].replica_id
+                real1 = order[1].query
+                order[1].query = shedding(order[1])
+                try:
+                    with pytest.raises(Overloaded) as ei:
+                        await fleet.query("g", 3, 0.4)
+                    assert ei.value.retry_after == pytest.approx(0.5)
+                finally:
+                    order[1].query = real1
+            finally:
+                order[0].query = real0
+            snap = fleet.metrics_snapshot()
+            assert snap["counters"]["fleet.overload_spills"] >= 2
+
+    asyncio.run(main())
+
+
+# --------------------------------------------------------------------------
+# chaos acceptance
+# --------------------------------------------------------------------------
+def test_chaos_acceptance_crash_under_mixed_traffic(tmp_path):
+    """The PR's acceptance bar: 3 replicas under mixed global+seed
+    traffic with live deltas; one replica is killed mid-stream. The
+    router must keep answering (bounded typed-error rate) and every
+    answer must be bit-identical to a single-engine oracle replaying the
+    same chain — staleness is allowed, divergence is not."""
+    rng = np.random.default_rng(11)
+    settings = [(2, 0.3), (3, 0.5), (2, 0.7), (4, 0.4)]
+    seeds = [0, 5, 17, 31]
+
+    async def main():
+        async with _fleet(tmp_path, n_replicas=3) as fleet:
+            g0 = _graph(n=60, deg=6.0, seed=9)
+            fleet.create("g", g0)
+            assert await fleet.converged("g", timeout_s=30)
+
+            # side oracle: seq → (index, graph), replayed independently
+            oracle = {0: (fleet.writer.index("g"), fleet.writer.graph("g"))}
+            answers, errors = [], []
+
+            async def traffic(k):
+                for j, (mu, eps) in enumerate(settings):
+                    try:
+                        a = await fleet.query("g", mu, eps,
+                                              client=f"c{k % 3}")
+                        answers.append((a, mu, eps, None))
+                        s = seeds[(k + j) % len(seeds)]
+                        a2 = await fleet.query_seed("g", s, mu, eps,
+                                                    client=f"c{k % 3}")
+                        answers.append((a2, mu, eps, s))
+                    except (Overloaded, FleetExhausted) as e:
+                        errors.append(e)
+                    await asyncio.sleep(0.002)
+
+            victim = fleet.router.route("g")[0]
+            for wave in range(3):
+                if wave == 1:
+                    await victim.crash()      # mid-stream
+                delta = random_delta(fleet.writer.graph("g"), 6, rng)
+                await fleet.apply("g", delta)
+                seq = fleet.target_seq("g")
+                idx, gg = oracle[seq - 1]
+                oracle[seq] = apply_delta(idx, gg, delta, "cosine")[:2]
+                await asyncio.gather(*[traffic(k) for k in range(4)])
+
+            survivors = [r for r in fleet.replicas if r.healthy]
+            assert len(survivors) == 2
+            assert await fleet.converged("g", timeout_s=30)
+
+            # zero bit-divergence: every answer matches the oracle AT THE
+            # SEQ IT WAS SERVED FROM (stale-but-consistent is legal)
+            checked = 0
+            for a, mu, eps, seed in answers:
+                idx, gg = oracle[a.seq]
+                ref = query(idx, gg, mu, eps)
+                if seed is None:
+                    np.testing.assert_array_equal(
+                        np.asarray(a.result.labels), np.asarray(ref.labels))
+                else:
+                    assert a.result.label == int(
+                        np.asarray(ref.labels)[seed])
+                    assert a.result.is_core == bool(
+                        np.asarray(ref.is_core)[seed])
+                checked += 1
+            assert checked >= 48  # traffic actually flowed
+
+            # bounded typed-error rate: the crash may shed a few requests
+            # as typed failures, never more than a sliver of the stream
+            assert len(errors) <= checked // 4
+            snap = fleet.metrics_snapshot()
+            assert snap["counters"]["fleet.crashes"] == 1
+            assert snap["counters"]["fleet.requests"] >= checked
+
+    asyncio.run(main())
+
+
+def test_chaos_policy_is_seeded_and_parseable():
+    p = ChaosPolicy.parse("crash:0.02,stall:0.05,corrupt:0.1", seed=42)
+    assert (p.crash_p, p.stall_p, p.corrupt_p) == (0.02, 0.05, 0.1)
+    assert p.seed == 42
+    with pytest.raises(ValueError):
+        ChaosPolicy.parse("meteor:1.0")
+    # same seed → same draw sequence (replayable soaks)
+    a = ChaosPolicy(seed=1, stall_p=0.5)
+    b = ChaosPolicy(seed=1, stall_p=0.5)
+    assert [a.stall_seconds("r") for _ in range(16)] == \
+        [b.stall_seconds("r") for _ in range(16)]
+    # crash budget: never below max_crashes
+    c = ChaosPolicy(seed=0, crash_p=1.0, max_crashes=1)
+    assert c.should_crash("r0") is True
+    assert c.should_crash("r1") is False
+    assert c.crashes_injected == 1

@@ -171,6 +171,32 @@ def test_registry_merge_snapshot_fleet_semantics():
     assert snap["histograms"]["lat"]["count"] == 7
 
 
+def test_gauge_max_mode_merges_as_watermark():
+    """Summing is wrong for watermarks: three replicas each 2 entries
+    stale is a fleet 2 entries stale, not 6. Max-mode gauges keep the
+    worst replica visible through merge_snapshot."""
+    merged = MetricsRegistry()
+    for stale in (2.0, 0.0, 2.0):
+        r = MetricsRegistry()
+        r.gauge("fleet.staleness_seq", "max").set(stale)
+        r.gauge("depth").set(stale)          # default sum-mode sibling
+        merged.merge_snapshot(r.snapshot())
+    snap = merged.snapshot()
+    assert snap["gauges"]["fleet.staleness_seq"] == 2.0
+    assert snap["gauges"]["depth"] == 4.0
+    assert snap["gauge_modes"] == {"fleet.staleness_seq": "max"}
+
+
+def test_gauge_mode_conflict_rejected():
+    reg = MetricsRegistry()
+    reg.gauge("g", "max")
+    assert reg.gauge("g").mode == "max"      # None = whatever exists
+    with pytest.raises(ValueError):
+        reg.gauge("g", "sum")
+    with pytest.raises(ValueError):
+        MetricsRegistry().gauge("h", "median")
+
+
 def test_counter_is_thread_safe_under_contention():
     """The regression the registry exists for: concurrent increments from
     many threads must not lose updates (the old ``stats[k] += 1`` dict

@@ -132,3 +132,74 @@ def test_registry_merge_snapshot_equals_single_registry(obs):
         assert m["counts"] == d["counts"]
         assert m["count"] == d["count"]
         assert m["sum"] == pytest.approx(d["sum"])
+
+
+# --------------------------------------------------------------------------
+# gauge merge modes (fleet aggregation of levels vs watermarks)
+# --------------------------------------------------------------------------
+gauge_vals = st.floats(min_value=-1e6, max_value=1e6,
+                       allow_nan=False, allow_infinity=False)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(gauge_vals, min_size=1, max_size=20),
+       st.lists(gauge_vals, min_size=1, max_size=20))
+def test_gauge_merge_modes_against_oracle(a_vals, b_vals):
+    """Folding per-replica snapshots must equal the plain-python oracle:
+    sum-mode gauges add their final levels, max-mode gauges keep the
+    fleet-wide worst watermark."""
+    regs = []
+    for vals in (a_vals, b_vals):
+        r = MetricsRegistry()
+        for v in vals:
+            r.gauge("level").set(v)
+            r.gauge("watermark", "max").set(v)
+        regs.append(r)
+    merged = MetricsRegistry()
+    for r in regs:
+        merged.merge_snapshot(r.snapshot())
+    snap = merged.snapshot()
+    assert snap["gauges"]["level"] == pytest.approx(
+        a_vals[-1] + b_vals[-1])
+    assert snap["gauges"]["watermark"] == max(a_vals[-1], b_vals[-1])
+    # only the non-default mode travels in the snapshot (back-compat:
+    # pre-mode snapshots merge exactly as before)
+    assert snap["gauge_modes"] == {"watermark": "max"}
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.lists(gauge_vals, min_size=1, max_size=8),
+                min_size=1, max_size=6))
+def test_gauge_max_merge_is_order_independent(replica_vals):
+    """Max-mode folding is associative/commutative: any merge order
+    yields the same fleet watermark (sum-mode likewise, by addition)."""
+    finals = [vals[-1] for vals in replica_vals]
+    snaps = []
+    for vals in replica_vals:
+        r = MetricsRegistry()
+        for v in vals:
+            r.gauge("hw", "max").set(v)
+        snaps.append(r.snapshot())
+    fwd, rev = MetricsRegistry(), MetricsRegistry()
+    for s in snaps:
+        fwd.merge_snapshot(s)
+    for s in reversed(snaps):
+        rev.merge_snapshot(s)
+    assert fwd.snapshot()["gauges"]["hw"] == max(finals)
+    assert rev.snapshot()["gauges"]["hw"] == max(finals)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(gauge_vals, min_size=1, max_size=20))
+def test_modeless_snapshot_merges_as_sum(vals):
+    """A snapshot with no gauge_modes key (old format) merges every
+    gauge additively — the pre-mode behavior, bit for bit."""
+    r = MetricsRegistry()
+    for v in vals:
+        r.gauge("g").set(v)
+    snap = r.snapshot()
+    assert "gauge_modes" not in snap
+    merged = MetricsRegistry()
+    merged.merge_snapshot(snap)
+    merged.merge_snapshot(snap)
+    assert merged.snapshot()["gauges"]["g"] == pytest.approx(2 * vals[-1])
