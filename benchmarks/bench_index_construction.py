@@ -8,7 +8,13 @@ Two sections:
 * the skewed suite: bucketed vs the legacy dense-padded layout on
   power-law / hub-ring graphs, where one hub used to inflate the dense
   operand to O(n·Δ). Rows report the similarity-pass and end-to-end
-  construction speedups and the peak similarity-operand-memory ratio.
+  construction speedups and the peak similarity-operand-memory ratio;
+* the lane suite: the same similarity pass forced down each execution
+  lane (``REPRO_LANE`` — read per call, so flipping the env between
+  timings pins every kernel). Rows carry a ``bit_identical_vs_ref``
+  column: on the unweighted lane graph every lane must reproduce the
+  ref lane's σ bit-for-bit (the backend contract, enforced here on the
+  real construction path and in ``tests/test_backend.py``).
 
 Every run also snapshots its rows to ``BENCH_construction.json`` at the
 repo root — the construction perf trajectory that CI uploads per commit
@@ -16,11 +22,12 @@ repo root — the construction perf trajectory that CI uploads per commit
 """
 from __future__ import annotations
 
+import os
 import pathlib
 
 import numpy as np
 
-from repro.core import build_index, compute_similarities
+from repro.core import build_index, compute_similarities, random_graph
 from repro.core.similarity import (compute_similarities_densepad,
                                    densepad_operand_bytes, plan_for)
 from benchmarks.common import (GRAPHS, SKEWED_GRAPHS, load_graph, timeit,
@@ -79,8 +86,43 @@ def _skew_rows():
     return lines
 
 
+# small on purpose: pallas-interpret runs the kernel body per grid step in
+# python, so a 2k graph keeps the lane leg under a minute while still
+# exercising multiple degree classes
+LANE_GRAPH = ("lane-2k", dict(n=2048, avg_degree=16.0, weighted=False,
+                              seed=9))
+LANES = ("ref", "pallas-interpret")
+
+
+def _lane_rows():
+    gname, spec = LANE_GRAPH
+    g = random_graph(**spec)
+    lines = []
+    prior = os.environ.get("REPRO_LANE")
+    sims = {}
+    try:
+        for lane in LANES:
+            os.environ["REPRO_LANE"] = lane
+            t = timeit(lambda: compute_similarities(g, "cosine"), trials=2)
+            sims[lane] = np.asarray(compute_similarities(g, "cosine"))
+            identical = bool(np.array_equal(sims[lane], sims["ref"]))
+            lines.append(emit(
+                f"fig5/lane/{gname}/{lane}", t,
+                f"m={g.m};edges_per_s={g.m / t:.0f};"
+                f"bit_identical_vs_ref={int(identical)}"))
+            if not identical:
+                raise AssertionError(
+                    f"lane {lane} diverged from ref on unweighted σ")
+    finally:
+        if prior is None:
+            os.environ.pop("REPRO_LANE", None)
+        else:
+            os.environ["REPRO_LANE"] = prior
+    return lines
+
+
 def run():
-    lines = _uniform_rows() + _skew_rows()
+    lines = _uniform_rows() + _skew_rows() + _lane_rows()
     write_snapshot(
         SNAPSHOT, "index_construction", lines,
         {"graphs": {**{k: dict(v) for k, v in GRAPHS.items()},

@@ -1,8 +1,18 @@
-"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+"""Roofline tables (EXPERIMENTS.md §Roofline).
 
-Reads experiments/dryrun/<mesh>/*.json and prints a markdown table with the
-three terms (compute / memory / collective, seconds), the dominant term,
-MODEL_FLOPS, the useful-compute ratio, and the roofline fraction.
+Two sections:
+
+* the dry-run table: reads experiments/dryrun/<mesh>/*.json and prints the
+  three terms (compute / memory / collective, seconds), the dominant term,
+  MODEL_FLOPS, the useful-compute ratio, and the roofline fraction;
+* the similarity-pass table: achieved vs peak for the bucketed similarity
+  engine on live suite graphs. Bytes and flops are modeled from the
+  SimilarityPlan's group shapes — per half-edge the kernel gathers a
+  pe-wide probe row and a te-wide target row (ids + weights, 8 bytes per
+  element) and runs pe binary searches over te targets plus the σ
+  multiply-accumulate epilogue. Peaks are nominal single-socket CPU
+  numbers; override with REPRO_PEAK_GFLOPS / REPRO_PEAK_GBPS for your
+  machine (or a device backend).
 """
 from __future__ import annotations
 
@@ -10,6 +20,8 @@ import glob
 import json
 import os
 import sys
+
+import numpy as np
 
 
 def load(mesh_dir: str):
@@ -51,8 +63,76 @@ def table(recs, *, only_baseline=True):
     return "\n".join(rows)
 
 
-def run(out_dir: str = "experiments/dryrun"):
+# nominal single-socket CPU peaks; env-overridable so the fraction column
+# is meaningful on whatever actually runs the bench
+PEAK_GFLOPS = float(os.environ.get("REPRO_PEAK_GFLOPS", 50.0))
+PEAK_GBPS = float(os.environ.get("REPRO_PEAK_GBPS", 20.0))
+
+SIM_GRAPHS = ("sparse-8k", "powerlaw-8k")
+
+
+def sim_pass_model(plan, eu, ev):
+    """(bytes, flops) one bucketed similarity pass moves/executes, modeled
+    from the plan's per-edge group shapes: pe = probe tiles^ × probe class
+    width, te likewise for the target side."""
+    from repro.backend.padding import np_pow2ceil
+
+    pu, pv, _ = plan.route(np.asarray(eu, np.int64), np.asarray(ev, np.int64))
+    widths = np.asarray(plan.widths, np.int64)
+    pe = np_pow2ceil(plan.vtiles[pu]).astype(np.int64) * \
+        widths[plan.vclass[pu]]
+    te = np_pow2ceil(plan.vtiles[pv]).astype(np.int64) * \
+        widths[plan.vclass[pv]]
+    # ids (int32) + weights (f32) for both rows
+    model_bytes = int(8 * (pe + te).sum())
+    # pe binary searches of depth log2(te) + the 2·pe dot-product MACs
+    compares = (pe * np.ceil(np.log2(np.maximum(te, 2)))).sum()
+    flops = int(compares + 2 * pe.sum())
+    return model_bytes, flops
+
+
+def similarity_section():
+    from benchmarks.common import load_graph, timeit
+    from repro.core import compute_similarities
+    from repro.core.similarity import plan_for
+    from repro.backend.policy import default_policy
+
     lines = []
+    pol = default_policy()
+    print(f"\n### similarity pass (platform {pol.platform()}, "
+          f"peaks {PEAK_GFLOPS:.0f} GFLOP/s / {PEAK_GBPS:.0f} GB/s)\n")
+    print("| graph | lane | m | GB | GFLOP | ms | GB/s | GFLOP/s "
+          "| AI F/B | dominant | frac |")
+    print("|" + "---|" * 11)
+    for gname in SIM_GRAPHS:
+        g = load_graph(gname)
+        plan = plan_for(g)
+        model_bytes, flops = sim_pass_model(
+            plan, np.asarray(g.edge_u), np.asarray(g.nbrs))
+        t = timeit(lambda: compute_similarities(g, "cosine"), trials=2)
+        widest = int(np.asarray(plan.widths, np.int64).max())
+        lane = pol.lane("bucket_probe", width=widest)
+        gbps = model_bytes / t / 1e9
+        gflops = flops / t / 1e9
+        t_mem = model_bytes / (PEAK_GBPS * 1e9)
+        t_cmp = flops / (PEAK_GFLOPS * 1e9)
+        dominant = "memory" if t_mem >= t_cmp else "compute"
+        frac = max(t_mem, t_cmp) / t
+        print(f"| {gname} | {lane} | {g.m} | {model_bytes / 1e9:.3f} "
+              f"| {flops / 1e9:.3f} | {t * 1e3:.1f} | {gbps:.2f} "
+              f"| {gflops:.2f} | {flops / model_bytes:.2f} | {dominant} "
+              f"| {frac:.4f} |")
+        lines.append(
+            f"roofline/simpass/{gname},{t * 1e6:.1f},"
+            f"lane={lane};m={g.m};model_gb={model_bytes / 1e9:.3f};"
+            f"model_gflop={flops / 1e9:.3f};achieved_gbps={gbps:.2f};"
+            f"achieved_gflops={gflops:.2f};dominant={dominant};"
+            f"roofline_frac={frac:.4f}")
+    return lines
+
+
+def run(out_dir: str = "experiments/dryrun"):
+    lines = similarity_section()
     for mesh in ("pod16x16", "pod2x16x16"):
         d = os.path.join(out_dir, mesh)
         if not os.path.isdir(d):

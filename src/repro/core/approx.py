@@ -148,13 +148,16 @@ class ApproxIndexBuilder:
     """
 
     def __init__(self, measure: str = "cosine",
-                 params: ApproxParams = ApproxParams()):
+                 params: ApproxParams = ApproxParams(), *, policy=None):
         if params.measure != measure:
             raise ValueError(
                 f"method {params.method!r} estimates {params.measure!r} "
                 f"similarity, not {measure!r}")
         self.measure = measure
         self.params = params
+        # execution policy for the sketch-comparison / exact-pass lanes
+        # (None → the process default); lane choice never moves σ̂ bits
+        self.policy = policy
 
     @property
     def provenance(self) -> IndexProvenance:
@@ -166,7 +169,7 @@ class ApproxIndexBuilder:
         return approximate_similarities(
             g, measure=self.measure, method=p.method, samples=p.samples,
             key=jax.random.PRNGKey(p.seed),
-            degree_heuristic=p.degree_heuristic)
+            degree_heuristic=p.degree_heuristic, policy=self.policy)
 
     def build(self, g: CSRGraph, *,
               tracer=None) -> Tuple[ScanIndex, IndexProvenance]:

@@ -61,6 +61,7 @@ def sharded_edge_similarities(
     mesh: Mesh | None = None,
     axis: str = "data",
     measure: str = "cosine",
+    policy=None,
 ) -> jax.Array:
     """σ per half-edge with the edge axis sharded over ``axis``.
 
@@ -69,11 +70,18 @@ def sharded_edge_similarities(
     group is padded to a multiple of the axis size and runs as one
     ``shard_map`` over its sharded edge chunk, with the two class blocks
     (O(m + n) total, not the old O(n·Δ) padded matrix) replicated.
+
+    The placement inherits the execution policy (``hub_tile`` for a plan
+    built here, lane attribution for the counters); the shard body is the
+    jnp reference engine — the ``ref`` lane — so sharded σ stays
+    bit-identical to the single-host path regardless of forced lanes.
     """
+    from repro.backend.policy import LANE_REF, default_policy
     from repro.core import similarity as sim_mod
 
+    pol = policy if policy is not None else default_policy()
     if plan is None:
-        plan = sim_mod.plan_for(g)
+        plan = sim_mod.plan_for(g, hub_tile=pol.profile.hub_tile)
     if mesh is None:
         mesh = query_mesh(axis=axis)
     k = mesh.shape[axis]
@@ -88,6 +96,7 @@ def sharded_edge_similarities(
     bounds = np.flatnonzero(np.diff(keys[order])) + 1
     out = np.empty(g.m2, np.float32)
     for idx in np.split(order, bounds):
+        pol.note("bucket_probe", LANE_REF)    # shard_map body = jnp engine
         cp = int(plan.vclass[pu[idx[0]]])
         ct = int(plan.vclass[pv[idx[0]]])
         sp = sim_mod._pow2ceil(int(plan.vtiles[pu[idx[0]]]))

@@ -190,14 +190,32 @@ def approximate_similarities(
     samples: int = 64,
     key: Optional[jax.Array] = None,
     degree_heuristic: bool = True,
+    policy=None,
 ) -> jax.Array:
+    """σ̂ per half-edge. Sketch *construction* is always the chunk-invariant
+    sparse jnp path (its bits define the approximate fingerprint); the
+    sketch *comparison* resolves its lane through the execution policy —
+    the ``hamming`` op's Pallas lanes consume the exact same sketches and
+    reproduce the ``ref`` comparison bit-for-bit on host backends (the
+    XOR/popcount sum is integer-exact; the cos epilogue is the same
+    elementwise expression), so lane choice never moves a fingerprint."""
+    from repro.backend.policy import LANE_REF, default_policy
+
+    pol = policy if policy is not None else default_policy()
     if key is None:
         key = jax.random.PRNGKey(0)
     if method == "simhash":
         if measure != "cosine":
             raise ValueError("simhash approximates cosine similarity")
         sk = simhash_sketches(g, samples, key)
-        approx = simhash_edge_similarity(sk, g.edge_u, g.nbrs, samples)
+        lane = pol.lane("hamming")
+        if lane == LANE_REF:
+            pol.note("hamming", lane)
+            approx = simhash_edge_similarity(sk, g.edge_u, g.nbrs, samples)
+        else:
+            from repro.kernels import ops
+            approx = ops.simhash_edge_similarity_kernel(
+                sk, g.edge_u, g.nbrs, samples, policy=pol, lane=lane)
         thr = samples
     elif method in ("minhash", "kpartition"):
         if measure != "jaccard":
@@ -231,6 +249,7 @@ def approximate_similarities(
         ev_h[idx],
         np.asarray(g.wgts)[idx],
         measure=measure,
+        policy=pol,
     )
     out = np.asarray(approx, dtype=np.float32).copy()
     out[idx] = np.asarray(exact_subset)

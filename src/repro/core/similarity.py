@@ -64,9 +64,15 @@ Entry points:
   kept as the benchmark baseline (``benchmarks/bench_index_construction``
   measures bucketed vs dense-padded on skewed graphs).
 
-On TPU the heaviest groups can dispatch to the Pallas sorted-probe kernel
+Per-group lane choice goes through :class:`repro.backend.ExecutionPolicy`
+(``plan.edge_sims(..., policy=...)``): the ``ref`` lane is the jnp
+searchsorted engine below, the Pallas lanes run the sorted-probe kernel
 (:mod:`repro.kernels.bucket_probe`, the masked-gram pattern extended with
-target-tile streaming); the jnp path below is the CPU/reference engine.
+target-tile streaming) on the same gathered operands — auto-dispatch
+sends groups at least ``profile.probe_min_width`` wide to the compiled
+kernel on TPU, and ``REPRO_LANE`` pins a lane everywhere. All lanes are
+bit-identical on unweighted σ (ULP on weighted), so lane choice never
+moves a fingerprint.
 
 Supported measures (paper §2.1/§4.1.1):
   * ``cosine``  — weighted cosine over closed neighborhoods (w(x,x)=1);
@@ -84,6 +90,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.backend.padding import (
+    np_log2 as _np_log2,
+    np_pow2ceil as _np_pow2ceil,
+    pad1 as _pad1,
+    pow2_bucket as _pow2_bucket,
+    pow2ceil as _pow2ceil,
+)
+from repro.backend.policy import (
+    LANE_INTERPRET, LANE_REF, ExecutionPolicy, default_policy,
+)
 from repro.core.graph import CSRGraph, to_dense
 
 MEASURES = ("cosine", "jaccard")
@@ -97,21 +113,6 @@ CHUNK_ELEMS = 1 << 22
 
 # legacy dense-padded quantum (kept for the benchmark baseline path)
 PAD_WIDTH_QUANTUM = 8
-
-
-def _pow2ceil(x: int, floor: int = 1) -> int:
-    """Smallest power of two ≥ max(x, floor)."""
-    v = max(int(x), floor, 1)
-    return 1 << (v - 1).bit_length()
-
-
-def _pow2_bucket(total: int, floor: int = 64) -> int:
-    """Smallest power-of-two ≥ ``total`` (≥ ``floor``) — the fixed chunk
-    shapes that let repeated subset passes share compiled kernels."""
-    b = floor
-    while b < total:
-        b <<= 1
-    return b
 
 
 def _routing_tables(deg: np.ndarray, n: int, hub_tile: int):
@@ -177,7 +178,10 @@ class SimilarityPlan:
 
     # -- construction -------------------------------------------------------
     @staticmethod
-    def build(g: CSRGraph, hub_tile: int = HUB_TILE) -> "SimilarityPlan":
+    def build(g: CSRGraph,
+              hub_tile: Optional[int] = None) -> "SimilarityPlan":
+        if hub_tile is None:
+            hub_tile = default_policy().profile.hub_tile
         deg = np.diff(np.asarray(g.offsets)).astype(np.int64)
         n = g.n
         widths, vclass, vtiles = _routing_tables(deg, n, hub_tile)
@@ -411,10 +415,19 @@ class SimilarityPlan:
         ew,
         measure: str = "cosine",
         chunk: int = 1 << 16,
+        policy: Optional[ExecutionPolicy] = None,
     ) -> jax.Array:
-        """σ (or triangle counts with measure='_count') for an edge subset."""
+        """σ (or triangle counts with measure='_count') for an edge subset.
+
+        Each (class pair, tile shape) group resolves its lane through the
+        execution policy: ``ref`` runs the jnp searchsorted kernel, the
+        Pallas lanes run the sorted-probe kernel on identical gathered
+        operands (bit-identical on unweighted σ, ULP on weighted). Lane
+        decisions count under ``backend.lane.bucket_probe.<lane>``.
+        """
         if measure not in MEASURES + ("_count",):
             raise ValueError(f"measure must be one of {MEASURES}")
+        pol = policy if policy is not None else default_policy()
         eu = np.asarray(eu, dtype=np.int64)
         ev = np.asarray(ev, dtype=np.int64)
         ew = np.asarray(ew, dtype=np.float32)
@@ -437,9 +450,16 @@ class SimilarityPlan:
             st = _pow2ceil(int(self.vtiles[pv[idx[0]]]))
             pe = sp * self.widths[cp]
             te = st * self.widths[ct]
+            lane = pol.lane("bucket_probe", width=pe)
+            pol.note("bucket_probe", lane)
             cap = max(CHUNK_ELEMS // max(pe + te, 1), 1)
             cap = 1 << (cap.bit_length() - 1)
             csize = min(_pow2_bucket(len(idx)), max(min(chunk, cap), 1))
+            if lane == LANE_INTERPRET:
+                # interpret-mode grids unroll at trace time: bound the
+                # chunk so compile cost stays proportional to the profile
+                csize = min(csize, _pow2ceil(
+                    pol.profile.probe_interpret_chunk))
             sentinel_p = self.nbr_blocks[cp].shape[0] - 1
             for s in range(0, len(idx), csize):
                 sub = idx[s: s + csize]
@@ -454,7 +474,7 @@ class SimilarityPlan:
                     cev=_pad1(ev[sub].astype(np.int32), pad, 0),
                     cew=_pad1(ew[sub], pad, 0.0),
                 )
-                res = _bucket_sims_chunk(
+                operands = (
                     jnp.asarray(args["p0"]), jnp.asarray(args["pt"]),
                     jnp.asarray(args["t0"]), jnp.asarray(args["tt"]),
                     jnp.asarray(args["ceu"]), jnp.asarray(args["cev"]),
@@ -462,24 +482,18 @@ class SimilarityPlan:
                     self.nbr_blocks[cp], self.wgt_blocks[cp],
                     self.nbr_blocks[ct], self.wgt_blocks[ct],
                     self.norms, self.cdeg,
-                    sp=sp, st=st, measure=measure)
+                )
+                if lane == LANE_REF:
+                    res = _bucket_sims_chunk(
+                        *operands, sp=sp, st=st, measure=measure)
+                else:
+                    res = _bucket_sims_chunk_pallas(
+                        *operands, sp=sp, st=st, measure=measure,
+                        be=min(pol.profile.probe_be, csize),
+                        bt=pol.profile.probe_bt,
+                        interpret=pol.interpret(lane))
                 out[sub] = np.asarray(res)[: len(sub)]
         return jnp.asarray(out)
-
-
-def _np_pow2ceil(x: np.ndarray) -> np.ndarray:
-    x = np.maximum(np.asarray(x, np.int64), 1)
-    return 1 << np.ceil(np.log2(x)).astype(np.int64)
-
-
-def _np_log2(x: np.ndarray) -> np.ndarray:
-    return np.log2(np.asarray(x, np.int64)).astype(np.int64)
-
-
-def _pad1(a: np.ndarray, pad: int, fill) -> np.ndarray:
-    if pad == 0:
-        return a
-    return np.concatenate([a, np.full(pad, fill, dtype=a.dtype)])
 
 
 def _expand_tile_rows(first: np.ndarray, tiles: np.ndarray) -> np.ndarray:
@@ -544,26 +558,11 @@ def _gather_tiled_rows(block_n, block_w, first, cnt, s: int):
     return (block_n[idx].reshape(c, s * w), block_w[idx].reshape(c, s * w))
 
 
-def _bucket_sims_core(p0, pt, t0, tt, eu, ev, ew,
-                      p_nbr, p_wgt, t_nbr, t_wgt, norms, cdeg,
-                      sp: int, st: int, measure: str):
-    """Sorted-probe body for one (probe class, target class) group chunk.
-
-    Shared between the jitted single-host kernel and the shard_map path in
-    :mod:`repro.core.distributed`.
-    """
-    n = norms.shape[0]
-    rows_p, w_p = _gather_tiled_rows(p_nbr, p_wgt, p0, pt, sp)
-    rows_t, w_t = _gather_tiled_rows(t_nbr, t_wgt, t0, tt, st)
-
-    pos = jax.vmap(jnp.searchsorted)(rows_t, rows_p)
-    pos_c = jnp.minimum(pos, rows_t.shape[1] - 1)
-    hit = jnp.take_along_axis(rows_t, pos_c, axis=1) == rows_p
-    hit &= rows_p < n                                  # mask probe padding
-    w_match = jnp.take_along_axis(w_t, pos_c, axis=1)
-    shared_dot = jnp.sum(jnp.where(hit, w_p * w_match, 0.0), axis=1)
-    shared_cnt = jnp.sum(hit, axis=1)
-
+def _sigma_epilogue(shared_dot, shared_cnt, eu, ev, ew, norms, cdeg,
+                    measure: str):
+    """Shared-dot/count → σ. One implementation for every engine lane
+    (jnp searchsorted, Pallas probe, shard_map): the bit-identity contract
+    requires the epilogue arithmetic to exist exactly once."""
     if measure == "_count":
         return shared_cnt.astype(jnp.int32)
     if measure == "cosine":
@@ -577,6 +576,30 @@ def _bucket_sims_core(p0, pt, t0, tt, eu, ev, ew,
     raise ValueError(f"unknown measure {measure!r}")
 
 
+def _bucket_sims_core(p0, pt, t0, tt, eu, ev, ew,
+                      p_nbr, p_wgt, t_nbr, t_wgt, norms, cdeg,
+                      sp: int, st: int, measure: str):
+    """Sorted-probe body for one (probe class, target class) group chunk.
+
+    Shared between the jitted single-host kernel and the shard_map path in
+    :mod:`repro.core.distributed`. This is the ``ref`` lane of the
+    ``bucket_probe`` op: the jnp searchsorted engine.
+    """
+    n = norms.shape[0]
+    rows_p, w_p = _gather_tiled_rows(p_nbr, p_wgt, p0, pt, sp)
+    rows_t, w_t = _gather_tiled_rows(t_nbr, t_wgt, t0, tt, st)
+
+    pos = jax.vmap(jnp.searchsorted)(rows_t, rows_p)
+    pos_c = jnp.minimum(pos, rows_t.shape[1] - 1)
+    hit = jnp.take_along_axis(rows_t, pos_c, axis=1) == rows_p
+    hit &= rows_p < n                                  # mask probe padding
+    w_match = jnp.take_along_axis(w_t, pos_c, axis=1)
+    shared_dot = jnp.sum(jnp.where(hit, w_p * w_match, 0.0), axis=1)
+    shared_cnt = jnp.sum(hit, axis=1)
+    return _sigma_epilogue(shared_dot, shared_cnt, eu, ev, ew, norms, cdeg,
+                           measure)
+
+
 @functools.partial(jax.jit, static_argnames=("sp", "st", "measure"))
 def _bucket_sims_chunk(p0, pt, t0, tt, eu, ev, ew,
                        p_nbr, p_wgt, t_nbr, t_wgt, norms, cdeg,
@@ -587,6 +610,34 @@ def _bucket_sims_chunk(p0, pt, t0, tt, eu, ev, ew,
     return _bucket_sims_core(p0, pt, t0, tt, eu, ev, ew,
                              p_nbr, p_wgt, t_nbr, t_wgt, norms, cdeg,
                              sp, st, measure)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "sp", "st", "measure", "be", "bt", "interpret"))
+def _bucket_sims_chunk_pallas(p0, pt, t0, tt, eu, ev, ew,
+                              p_nbr, p_wgt, t_nbr, t_wgt, norms, cdeg,
+                              *, sp: int, st: int, measure: str,
+                              be: int, bt: int, interpret: bool):
+    """The Pallas lane of one group chunk: gather the same tiled rows the
+    jnp engine would, run the sorted-probe kernel
+    (:mod:`repro.kernels.bucket_probe`) instead of searchsorted, and apply
+    the shared epilogue. Unweighted shared dots/counts are small integers
+    (exact in f32 under any accumulation order), so this lane is
+    bit-identical to :func:`_bucket_sims_core`; weighted dots agree to
+    ULP."""
+    from repro.kernels.bucket_probe import bucket_probe
+    from repro.kernels.ops import probe_operands
+
+    n = norms.shape[0]
+    rows_p, w_p = _gather_tiled_rows(p_nbr, p_wgt, p0, pt, sp)
+    rows_t, w_t = _gather_tiled_rows(t_nbr, t_wgt, t0, tt, st)
+    ids_p, w_p, ids_t, w_t, bt = probe_operands(
+        rows_p, w_p, rows_t, w_t, n, be, bt)
+    dot, cnt = bucket_probe(ids_p, w_p, ids_t, w_t, be=be, bt=bt,
+                            interpret=interpret)
+    e0 = eu.shape[0]
+    return _sigma_epilogue(dot[:e0], cnt[:e0], eu, ev, ew, norms, cdeg,
+                           measure)
 
 
 # ---------------------------------------------------------------------------
@@ -612,12 +663,17 @@ def _cache_plan(g: CSRGraph, key, plan: SimilarityPlan) -> None:
     weakref.finalize(g, _evict_plan, key, ref)
 
 
-def plan_for(g: CSRGraph, hub_tile: int = HUB_TILE) -> SimilarityPlan:
+def plan_for(g: CSRGraph,
+             hub_tile: Optional[int] = None) -> SimilarityPlan:
     """The bucketed :class:`SimilarityPlan` for ``g``, cached per live graph
     object so construction, the LSH exact pass, triangle counting, and the
     incremental-update path share one set of device blocks. Entries are
     evicted by a ``weakref.finalize`` on the graph, so a plan never
-    outlives its graph."""
+    outlives its graph. ``hub_tile`` defaults to the active execution
+    policy's autotune profile (legacy constant ``HUB_TILE`` when
+    untuned)."""
+    if hub_tile is None:
+        hub_tile = default_policy().profile.hub_tile
     key = (id(g), hub_tile)
     ent = _PLAN_CACHE.get(key)
     if ent is not None and ent[0]() is g:
@@ -636,9 +692,11 @@ def adopt_plan(g: CSRGraph, plan: SimilarityPlan) -> SimilarityPlan:
 
 
 def cached_plan(g: CSRGraph,
-                hub_tile: int = HUB_TILE) -> Optional[SimilarityPlan]:
+                hub_tile: Optional[int] = None) -> Optional[SimilarityPlan]:
     """The cached plan for ``g`` if one exists (None otherwise; never
     builds). Lets tests distinguish a maintained plan from a fresh one."""
+    if hub_tile is None:
+        hub_tile = default_policy().profile.hub_tile
     ent = _PLAN_CACHE.get((id(g), hub_tile))
     if ent is not None and ent[0]() is g:
         return ent[1]

@@ -1,52 +1,71 @@
-"""jit'd public wrappers around the Pallas kernels.
+"""Public wrappers around the Pallas kernels, dispatched per call.
 
-Each wrapper pads inputs to block multiples, dispatches to the kernel
-(interpret=True on CPU — the TPU target compiles the same kernel body), and
-slices the result back. These are the entry points the SCAN engine and the
-serving path call; `ref.py` holds the pure-jnp oracles used by tests.
+Each wrapper pads inputs to block multiples, resolves its lane through the
+:class:`repro.backend.ExecutionPolicy` (``ref`` pure-jnp oracle /
+``pallas-interpret`` / ``pallas-compiled``), dispatches, and slices the
+result back. Nothing here captures the backend at import time: platform
+detection and the ``REPRO_LANE`` override are read on every call, so
+``JAX_PLATFORMS`` set after import is honored and importing this module
+never initializes the jax backend.
+
+Block shapes default to the policy's :class:`AutotuneProfile`; explicit
+``block=``/``be=``/``bt=`` arguments still win. All lanes of one op are
+bit-identical on integer-valued inputs (unweighted graphs) and agree to
+ULP on weighted ones — the lane-matrix oracle test in
+``tests/test_backend.py`` is the gate.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.backend.padding import pad_to
+from repro.backend.policy import (
+    LANE_REF, ExecutionPolicy, default_policy,
+)
 from repro.core.graph import CSRGraph, to_dense
+from repro.kernels import ref as kref
 from repro.kernels.triangle_count import masked_gram
 from repro.kernels.bucket_probe import bucket_probe
 from repro.kernels.simhash import simhash_pack
 from repro.kernels.hamming import hamming_cosine
 from repro.kernels.flash_attention import flash_attention
 
-_ON_TPU = jax.default_backend() == "tpu"
-_INTERPRET = not _ON_TPU
 
-
-def _pad_to(x: jax.Array, mult: int, axes) -> jax.Array:
-    pads = [(0, 0)] * x.ndim
-    for ax in axes:
-        rem = (-x.shape[ax]) % mult
-        pads[ax] = (0, rem)
-    return jnp.pad(x, pads)
+def _resolve(policy: Optional[ExecutionPolicy], op: str,
+             lane: Optional[str]) -> tuple[ExecutionPolicy, str]:
+    pol = policy if policy is not None else default_policy()
+    if lane is None:
+        lane = pol.kernel_lane(op)
+    pol.note(op, lane)
+    return pol, lane
 
 
 def edge_similarities_gram(
-    g: CSRGraph, measure: str = "cosine", block: int = 128
+    g: CSRGraph, measure: str = "cosine", block: Optional[int] = None,
+    *, policy: Optional[ExecutionPolicy] = None, lane: Optional[str] = None,
 ) -> jax.Array:
-    """Exact σ per half-edge via the Pallas masked-gram kernel.
+    """Exact σ per half-edge via the masked-gram product (triangle_count op).
 
     Dense-adjacency path: the TPU-native analogue of Algorithm 1 for graphs
     whose adjacency fits in memory (padded n ≤ a few 10⁴ per shard; larger
     graphs use the CSR searchsorted path in core.similarity).
     """
+    pol, lane = _resolve(policy, "triangle_count", lane)
+    block = block or pol.profile.gram_block
     weighted = measure == "cosine"
     w = to_dense(g, closed=True, weighted=weighted)
     mask = (to_dense(g, closed=True, weighted=False) > 0).astype(jnp.float32)
     n0 = w.shape[0]
-    w = _pad_to(w, block, (0, 1))
-    mask = _pad_to(mask, block, (0, 1))
-    prod = masked_gram(w, mask, bm=block, bn=block, bk=block,
-                       interpret=_INTERPRET)[:n0, :n0]
+    w = pad_to(w, block, (0, 1))
+    mask = pad_to(mask, block, (0, 1))
+    if lane == LANE_REF:
+        prod = kref.masked_gram_ref(w, mask)[:n0, :n0]
+    else:
+        prod = masked_gram(w, mask, bm=block, bn=block, bk=block,
+                           interpret=pol.interpret(lane))[:n0, :n0]
     dots = prod[g.edge_u, g.nbrs]
     if measure == "cosine":
         norms = jnp.sqrt(prod[jnp.arange(n0), jnp.arange(n0)])
@@ -56,6 +75,30 @@ def edge_similarities_gram(
     return dots / union
 
 
+def probe_operands(rows_p, w_p, rows_t, w_t, n: int, be: int, bt: int):
+    """Sanitize + pad bucket-probe operands (trace-safe; shared with the
+    similarity engine's Pallas lane).
+
+    Sanitizes padding ids (probe → -1, target → -2 so pads never match),
+    pads the edge axis to ``be`` and the target width to ``bt`` (the
+    hub-row tile the kernel streams). Widens with the sentinel id ``n``
+    BEFORE sanitizing, so width padding becomes -2 like every other target
+    pad (0 would alias vertex id 0). Returns (ids_p, w_p, ids_t, w_t, bt).
+    """
+    t = rows_t.shape[1]
+    bt = min(bt, max(t, 1))
+    pad_w = (-t) % bt
+    rows_t = jnp.pad(rows_t, ((0, 0), (0, pad_w)), constant_values=n)
+    w_t = jnp.pad(w_t, ((0, 0), (0, pad_w)))
+    ids_p = jnp.where(rows_p < n, rows_p, -1).astype(jnp.int32)
+    ids_t = jnp.where(rows_t < n, rows_t, -2).astype(jnp.int32)
+    ids_p = pad_to(ids_p, be, (0,))
+    w_p = pad_to(w_p, be, (0,))
+    ids_t = pad_to(ids_t, be, (0,))
+    w_t = pad_to(w_t, be, (0,))
+    return ids_p, w_p, ids_t, w_t, bt
+
+
 def bucket_probe_stats(
     rows_p: jax.Array,   # int32[e, P] sorted probe rows (pad id = n)
     w_p: jax.Array,      # float32[e, P]
@@ -63,77 +106,93 @@ def bucket_probe_stats(
     w_t: jax.Array,      # float32[e, T]
     n: int,              # vertex count (ids ≥ n are padding)
     *,
-    be: int = 256,
-    bt: int = 256,
+    be: Optional[int] = None,
+    bt: Optional[int] = None,
+    policy: Optional[ExecutionPolicy] = None,
+    lane: Optional[str] = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """(shared weighted dot, shared count) per edge via the Pallas
-    degree-bucketed probe kernel (repro.kernels.bucket_probe).
-
-    Sanitizes padding ids (probe → -1, target → -2 so pads never match),
-    pads the edge axis to ``be`` and the target width to ``bt`` (the
-    hub-row tile the kernel streams), and slices the results back. The
-    TPU dispatch path for the heaviest degree classes; the jnp
-    searchsorted engine in core.similarity is the CPU/reference path.
-    """
-    e0, p = rows_p.shape
-    t = rows_t.shape[1]
-    bt = min(bt, max(t, 1))
-    pad_w = (-t) % bt
-    # widen with the sentinel id n BEFORE sanitizing, so width padding
-    # becomes -2 like every other target pad (0 would alias vertex id 0)
-    rows_t = jnp.pad(rows_t, ((0, 0), (0, pad_w)), constant_values=n)
-    w_t = jnp.pad(w_t, ((0, 0), (0, pad_w)))
-    ids_p = jnp.where(rows_p < n, rows_p, -1).astype(jnp.int32)
-    ids_t = jnp.where(rows_t < n, rows_t, -2).astype(jnp.int32)
-    ids_p = _pad_to(ids_p, be, (0,))
-    w_p = _pad_to(w_p, be, (0,))
-    ids_t = _pad_to(ids_t, be, (0,))
-    w_t = _pad_to(w_t, be, (0,))
-    dot, cnt = bucket_probe(ids_p, w_p, ids_t, w_t, be=be, bt=bt,
-                            interpret=_INTERPRET)
+    """(shared weighted dot, shared count) per edge via the degree-bucketed
+    probe op (repro.kernels.bucket_probe; ref lane = the all-pairs
+    equality oracle). The accelerator dispatch path for the heaviest
+    degree classes; the jnp searchsorted engine in core.similarity is the
+    host reference path."""
+    pol, lane = _resolve(policy, "bucket_probe", lane)
+    be = be or pol.profile.probe_be
+    bt = bt or pol.profile.probe_bt
+    e0 = rows_p.shape[0]
+    ids_p, w_p, ids_t, w_t, bt = probe_operands(
+        rows_p, w_p, rows_t, w_t, n, be, bt)
+    if lane == LANE_REF:
+        dot, cnt = kref.bucket_probe_ref(ids_p, w_p, ids_t, w_t)
+    else:
+        dot, cnt = bucket_probe(ids_p, w_p, ids_t, w_t, be=be, bt=bt,
+                                interpret=pol.interpret(lane))
     return dot[:e0], cnt[:e0]
 
 
 def simhash_sketches_kernel(
-    g: CSRGraph, samples: int, key: jax.Array, block: int = 128
+    g: CSRGraph, samples: int, key: jax.Array, block: Optional[int] = None,
+    *, policy: Optional[ExecutionPolicy] = None, lane: Optional[str] = None,
 ) -> jax.Array:
-    """Packed SimHash sketches uint32[n, ceil(k/32)] via the Pallas kernel."""
+    """Packed SimHash sketches uint32[n, ceil(k/32)] via the simhash op."""
+    pol, lane = _resolve(policy, "simhash", lane)
+    block = block or pol.profile.simhash_block
     w = to_dense(g, closed=True, weighted=True)
     n0 = w.shape[0]
     k_pad = max((samples + 127) // 128 * 128, 128)
     r = jax.random.normal(key, (n0, k_pad), dtype=jnp.float32)
     # zero padding samples so both endpoints agree on padded bits
     r = r * (jnp.arange(k_pad) < samples)
-    w = _pad_to(w, block, (0, 1))
-    r = _pad_to(r, block, (0,))
-    sk = simhash_pack(w, r, bm=block, bs=128, bk=block, interpret=_INTERPRET)
+    w = pad_to(w, block, (0, 1))
+    r = pad_to(r, block, (0,))
+    if lane == LANE_REF:
+        sk = kref.simhash_pack_ref(w, r)
+    else:
+        sk = simhash_pack(w, r, bm=block, bs=128, bk=block,
+                          interpret=pol.interpret(lane))
     return sk[:n0, : (samples + 31) // 32]
+
+
+# jitted so the ref lane's cos lowers through the same compiler path as
+# the Pallas lanes — eager dispatch picks a different cos approximation
+# on CPU (1-ULP drift), which would break the lane bit-identity contract
+_hamming_ref_jit = jax.jit(kref.hamming_cosine_ref, static_argnums=2)
 
 
 def simhash_edge_similarity_kernel(
     sketches: jax.Array, eu: jax.Array, ev: jax.Array, samples: int,
-    block: int = 1024
+    block: Optional[int] = None,
+    *, policy: Optional[ExecutionPolicy] = None, lane: Optional[str] = None,
 ) -> jax.Array:
-    """σ̂ per edge from packed sketches via the Pallas hamming kernel."""
+    """σ̂ per edge from packed sketches via the hamming op."""
+    pol, lane = _resolve(policy, "hamming", lane)
+    block = block or pol.profile.hamming_block
     e0 = eu.shape[0]
-    su = _pad_to(sketches[eu], block, (0,))
-    sv = _pad_to(sketches[ev], block, (0,))
+    if lane == LANE_REF:
+        return _hamming_ref_jit(sketches[eu], sketches[ev], samples)
+    su = pad_to(sketches[eu], block, (0,))
+    sv = pad_to(sketches[ev], block, (0,))
     out = hamming_cosine(su, sv, samples=samples, be=block,
-                         interpret=_INTERPRET)
+                         interpret=pol.interpret(lane))
     return out[:e0]
 
 
 def attention(
     q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
-    window: int = 0, bq: int = 128, bkv: int = 128
+    window: int = 0, bq: int = 128, bkv: int = 128,
+    policy: Optional[ExecutionPolicy] = None, lane: Optional[str] = None,
 ) -> jax.Array:
     """Flash attention over [bh, s, d] tensors (pads s and d to blocks)."""
+    pol, lane = _resolve(policy, "attention", lane)
+    if lane == LANE_REF:
+        # the oracle handles arbitrary shapes; no padding (or rescale) needed
+        return kref.flash_attention_ref(q, k, v, causal=causal, window=window)
     bh, sq, d0 = q.shape
     skv = k.shape[1]
     d_pad = max((d0 + 127) // 128 * 128, 128)
-    qp = _pad_to(q, d_pad, (2,))
-    kp = _pad_to(k, d_pad, (2,))
-    vp = _pad_to(v, d_pad, (2,))
+    qp = pad_to(q, d_pad, (2,))
+    kp = pad_to(k, d_pad, (2,))
+    vp = pad_to(v, d_pad, (2,))
     sq_p = (sq + bq - 1) // bq * bq
     skv_p = (skv + bkv - 1) // bkv * bkv
     # pad kv with zeros & mask via window/causal handled by padding at end:
@@ -143,12 +202,13 @@ def attention(
     # supported here, so we require exact multiples for non-causal use.
     if not causal:
         assert sq % bq == 0 and skv % bkv == 0, "pad seq for non-causal"
-    qp = _pad_to(qp, sq_p, (1,))[:, :sq_p]
-    kp = _pad_to(kp, skv_p, (1,))[:, :skv_p]
-    vp = _pad_to(vp, skv_p, (1,))[:, :skv_p]
+    qp = pad_to(qp, sq_p, (1,))[:, :sq_p]
+    kp = pad_to(kp, skv_p, (1,))[:, :skv_p]
+    vp = pad_to(vp, skv_p, (1,))[:, :skv_p]
     # scale uses true d0, not padded width (padding contributes zero dot)
     out = flash_attention(
         qp * (d_pad ** 0.5) / (d0 ** 0.5), kp, vp,
-        causal=causal, window=window, bq=bq, bkv=bkv, interpret=_INTERPRET,
+        causal=causal, window=window, bq=bq, bkv=bkv,
+        interpret=pol.interpret(lane),
     )
     return out[:, :sq, :d0]

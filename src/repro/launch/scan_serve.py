@@ -69,6 +69,7 @@ from __future__ import annotations
 import argparse
 import asyncio
 import contextlib
+import os
 import time
 
 import numpy as np
@@ -210,7 +211,8 @@ def cmd_serve(args):
             "with --load (a persisted directory holds one index)")
     cfg = EngineConfig(max_batch=args.max_batch, flush_ms=args.flush_ms,
                        warm_ahead=not args.no_warm,
-                       shards=args.shards if args.shards > 1 else None)
+                       shards=args.shards if args.shards > 1 else None,
+                       lane=args.lane)
     if args.approx:
         if args.load:
             raise SystemExit(
@@ -396,7 +398,8 @@ def cmd_update(args):
             "its own catalog root; use --root DIR instead of --save")
     cfg = EngineConfig(max_batch=args.max_batch, flush_ms=args.flush_ms,
                        warm_ahead=not args.no_warm,
-                       shards=args.shards if args.shards > 1 else None)
+                       shards=args.shards if args.shards > 1 else None,
+                       lane=args.lane)
     root = args.root or tempfile.mkdtemp(prefix="scan_live_")
     svc = LiveIndexService(root, config=cfg, measure=args.measure,
                            compact_every=args.compact_every)
@@ -516,7 +519,7 @@ def cmd_fleet(args):
         chaos = ChaosPolicy.parse(args.chaos, seed=args.chaos_seed)
         print(f"armed {chaos.describe()}")
     cfg = EngineConfig(max_batch=args.max_batch, flush_ms=args.flush_ms,
-                       warm_ahead=not args.no_warm)
+                       warm_ahead=not args.no_warm, lane=args.lane)
     root = args.root or tempfile.mkdtemp(prefix="scan_fleet_")
     fleet = Fleet(root, n_replicas=args.replicas, writer_config=cfg,
                   router_config=RouterConfig(timeout_s=args.timeout_s,
@@ -686,6 +689,17 @@ def main():
         p.add_argument("--measure", default="cosine")
         p.add_argument("--shards", type=int, default=0,
                        help="shard the query path over K devices")
+        p.add_argument("--lane",
+                       choices=("ref", "pallas-interpret", "pallas-compiled"),
+                       help="force every kernel onto one execution lane: "
+                       "'ref' is the pure-jnp oracle, 'pallas-interpret' "
+                       "emulates the Pallas kernel bodies on host, "
+                       "'pallas-compiled' dispatches them to the "
+                       "accelerator. All lanes are bit-identical on "
+                       "unweighted graphs (ULP-close on weighted), so "
+                       "this is a debugging/benchmarking knob, not a "
+                       "quality one. Default: auto per call (the "
+                       "REPRO_LANE env var overrides either way)")
         if name in ("sweep", "serve"):
             p.add_argument("--approx", metavar="METHOD[:K[:SEED]]",
                            help="build LSH-sketched (approximate-first) "
@@ -754,6 +768,11 @@ def main():
                            "it counts as an *unshed* timeout and fails "
                            "the run")
     args = ap.parse_args()
+    if args.lane:
+        # export rather than thread: the per-call REPRO_LANE read reaches
+        # every dispatch site, including index *construction* paths that
+        # run before any EngineConfig exists
+        os.environ["REPRO_LANE"] = args.lane
     if getattr(args, "shards", 0) > 1:
         # must happen before jax's backend initializes — which is why all
         # heavier repro imports are deferred into the command functions

@@ -99,6 +99,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.backend.policy import ExecutionPolicy
 from repro.core.graph import CSRGraph
 from repro.core.index import ScanIndex
 from repro.core.local import SeedResult, query_seeds
@@ -194,6 +195,10 @@ class EngineConfig:
     seed_border_cap: int = 512    # candidate-border slots per lane (pow2)
     # --- admission control (None = accept everything, the old behavior)
     admission: Optional[AdmissionConfig] = None
+    # --- backend execution lane: None = auto-dispatch per call; one of
+    # repro.backend.policy.LANES pins every kernel to that lane (the
+    # REPRO_LANE env var overrides either way, per call)
+    lane: Optional[str] = None
 
 
 class MicroBatchEngine:
@@ -209,7 +214,8 @@ class MicroBatchEngine:
                  fingerprint: Optional[str] = None,
                  config: EngineConfig = EngineConfig(),
                  cache=None,
-                 registry: Optional[MetricsRegistry] = None):
+                 registry: Optional[MetricsRegistry] = None,
+                 policy: Optional[ExecutionPolicy] = None):
         self.cfg = config
         self.cache = cache if cache is not None else PartitionedResultCache(
             config.cache_capacity, config.eps_quantum)
@@ -224,6 +230,15 @@ class MicroBatchEngine:
         self._shard_plans: dict = {}   # fingerprint → ShardedQueryPlan
         self._provenance: dict = {}    # fingerprint → IndexProvenance
         self.registry = registry if registry is not None else MetricsRegistry()
+        # the engine owns an ExecutionPolicy so every kernel-lane decision
+        # made on its behalf lands in *its* registry (backend.* counters
+        # sit next to engine.* in one scrape); config.lane forces a lane
+        # for all ops, REPRO_LANE still overrides per call
+        self.policy = (policy if policy is not None
+                       else ExecutionPolicy(forced_lane=config.lane,
+                                            registry=self.registry))
+        if self.policy.registry is None:
+            self.policy.registry = self.registry
         self.tracer = Tracer(self.registry)
         self.stats = _StatsView(self.registry)
         self.admission = (AdmissionController(config.admission, self.registry)
@@ -693,10 +708,12 @@ class MicroBatchEngine:
             mus = np.asarray([k[0] for k in slots], np.int32)
             epss = np.asarray([k[1] for k in slots], np.float32)
             jit_before = _query_jit_entries()
+            lane = self.policy.lane("query")
+            self.policy.note("query", lane)
             with self.tracer.span(
                     "engine.device_call", fingerprint=fp[:12],
                     need=len(need), warmed=len(warm), slots=len(slots),
-                    shards=self.cfg.shards or 1):
+                    shards=self.cfg.shards or 1, lane=lane):
                 res = self._device_call(fp, index, g, mus, epss)
                 # host conversion blocks on the device, so the span (and
                 # the same-named histogram) covers real compute+transfer
@@ -758,9 +775,12 @@ class MicroBatchEngine:
             mus = np.asarray([k[1] for k in slots], np.int32)
             epss = np.asarray([k[2] for k in slots], np.float32)
             jit_before = _query_jit_entries()
+            q_lane = self.policy.lane("query")
+            self.policy.note("query", q_lane)
             with self.tracer.span(
                     "engine.seed_device_call", fingerprint=fp[:12],
-                    need=len(chunk), warmed=len(warm), slots=lanes):
+                    need=len(chunk), warmed=len(warm), slots=lanes,
+                    lane=q_lane):
                 res = query_seeds(
                     index, g, seeds, mus, epss,
                     frontier_cap=self.cfg.seed_frontier_cap,

@@ -73,6 +73,8 @@ import logging
 from collections import OrderedDict
 from typing import Dict, List, Optional
 
+from repro.backend.policy import ExecutionPolicy
+from repro.backend.profile import DEFAULT_PROFILE, AutotuneProfile
 from repro.core.approx import (EXACT_PROVENANCE, ApproxIndexBuilder,
                                ApproxParams, IndexProvenance)
 from repro.core.graph import CSRGraph
@@ -104,6 +106,12 @@ class _Live:
     seq: int            # last applied delta sequence number
     snapshot_seq: int   # delta seq covered by the newest full snapshot
     provenance: IndexProvenance = EXACT_PROVENANCE
+    # the autotune profile the newest snapshot was persisted with; when it
+    # differs from the serving policy's profile, profile_mismatch flags it
+    # in status() — serving continues on the policy thresholds (lane
+    # choice never moves index bits), never silently retunes
+    profile: AutotuneProfile = DEFAULT_PROFILE
+    profile_mismatch: bool = False
 
 
 class LiveIndexService:
@@ -118,9 +126,10 @@ class LiveIndexService:
                  measure: str = "cosine",
                  compact_every: int = 8,
                  keep_snapshots: int = 3,
-                 rewarm_recent: int = 4):
+                 rewarm_recent: int = 4,
+                 policy: Optional[ExecutionPolicy] = None):
         self.catalog = IndexCatalog(root, keep=keep_snapshots)
-        self.engine = MicroBatchEngine(config=config)
+        self.engine = MicroBatchEngine(config=config, policy=policy)
         self.measure = measure
         self.compact_every = compact_every
         self.rewarm_recent = rewarm_recent
@@ -161,13 +170,23 @@ class LiveIndexService:
 
     def status(self, name: str) -> dict:
         """Version/routing state for ``name`` (fp, seq, snapshot_seq,
-        provenance)."""
+        provenance) plus the ``backend`` execution block: platform,
+        forced lane, the lane each op resolves to right now, the active
+        autotune profile — and, when the stored snapshot was persisted
+        under a *different* profile, ``profile_mismatch`` with the stored
+        thresholds (serving stays on the policy's; bit-identity across
+        lanes makes that safe, and we never silently retune)."""
         live = self._live[name]
+        backend = self.engine.policy.describe()
+        backend["profile_mismatch"] = live.profile_mismatch
+        if live.profile_mismatch:
+            backend["stored_profile"] = dataclasses.asdict(live.profile)
         return {"fingerprint": live.fp, "seq": live.seq,
                 "snapshot_seq": live.snapshot_seq,
                 "n": live.g.n, "m": live.g.m,
                 "provenance": live.provenance.describe(),
-                "approx": live.provenance.is_approx}
+                "approx": live.provenance.is_approx,
+                "backend": backend}
 
     def provenance(self, name: str) -> IndexProvenance:
         """How ``name``'s currently served similarities were produced."""
@@ -195,13 +214,16 @@ class LiveIndexService:
         if provenance is None:
             provenance = EXACT_PROVENANCE
         fp = index_fingerprint(index, g)
+        profile = self.engine.policy.profile
         self.catalog.store(name).save(index, g, version=0,
                                       measure=self.measure,
-                                      provenance=provenance)
+                                      provenance=provenance,
+                                      profile=profile)
         self.engine.register(index, g, fingerprint=fp,
                              provenance=provenance)
         self._live[name] = _Live(index=index, g=g, fp=fp, seq=0,
-                                 snapshot_seq=0, provenance=provenance)
+                                 snapshot_seq=0, provenance=provenance,
+                                 profile=profile)
         return fp
 
     def register_approximate(self, name: str, g: CSRGraph, *,
@@ -221,7 +243,8 @@ class LiveIndexService:
         """
         if name in self._live:
             raise ValueError(f"index {name!r} already live")
-        builder = ApproxIndexBuilder(self.measure, params)
+        builder = ApproxIndexBuilder(self.measure, params,
+                                     policy=self.engine.policy)
         index, provenance = builder.build(g, tracer=self.engine.tracer)
         return self.create(name, g, index=index, provenance=provenance)
 
@@ -233,6 +256,15 @@ class LiveIndexService:
         store = self.catalog.store(name)
         index, g, fp = store.load()
         provenance = store.provenance()
+        stored_profile = store.profile()
+        profile_mismatch = stored_profile != self.engine.policy.profile
+        if profile_mismatch:
+            # surfaced in status() rather than retuned: thresholds only
+            # steer lane choice, and every lane is bit-identical, so the
+            # restored index serves correctly on the policy's profile
+            logging.getLogger(__name__).warning(
+                "index %r: snapshot autotune profile differs from the "
+                "serving policy's; serving on policy thresholds", name)
         stored_measure = store.measure()
         if stored_measure is not None and stored_measure != self.measure:
             raise ValueError(
@@ -270,7 +302,9 @@ class LiveIndexService:
                              provenance=provenance)
         self._live[name] = _Live(index=index, g=g, fp=fp, seq=seq,
                                  snapshot_seq=snap_seq,
-                                 provenance=provenance)
+                                 provenance=provenance,
+                                 profile=stored_profile,
+                                 profile_mismatch=profile_mismatch)
         return fp
 
     def load_all(self) -> List[str]:
@@ -578,8 +612,14 @@ class LiveIndexService:
         and prune the covered chain prefix; → pruned delta count."""
         live = self._live[name]
         store = self.catalog.store(name)
+        profile = self.engine.policy.profile
         store.save(live.index, live.g, version=live.seq,
-                   measure=self.measure, provenance=live.provenance)
+                   measure=self.measure, provenance=live.provenance,
+                   profile=profile)
         dropped = DeltaLog(store.directory).prune_through(live.seq)
-        self._live[name] = dataclasses.replace(live, snapshot_seq=live.seq)
+        # the fresh snapshot carries the serving policy's profile, so any
+        # restored-from-an-older-profile mismatch is resolved here
+        self._live[name] = dataclasses.replace(
+            live, snapshot_seq=live.seq, profile=profile,
+            profile_mismatch=False)
         return dropped

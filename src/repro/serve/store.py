@@ -32,6 +32,7 @@ from typing import Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.backend.profile import DEFAULT_PROFILE, AutotuneProfile
 from repro.ckpt import checkpoint
 from repro.core.approx import EXACT_PROVENANCE, IndexProvenance
 from repro.core.graph import CSRGraph
@@ -58,7 +59,8 @@ def index_fingerprint(index: ScanIndex, g: CSRGraph) -> str:
 
 
 def _to_tree(index: ScanIndex, g: CSRGraph, fingerprint: str,
-             measure: str, provenance: IndexProvenance) -> dict:
+             measure: str, provenance: IndexProvenance,
+             profile: AutotuneProfile) -> dict:
     return {
         "index": {f: getattr(index, f) for f in _INDEX_FIELDS},
         "graph": {f: getattr(g, f) for f in _GRAPH_FIELDS},
@@ -72,6 +74,8 @@ def _to_tree(index: ScanIndex, g: CSRGraph, fingerprint: str,
         "measure": np.frombuffer(measure.encode(), dtype=np.uint8),
         "provenance": np.frombuffer(provenance.to_json().encode(),
                                     dtype=np.uint8),
+        "backend_profile": np.frombuffer(profile.to_json().encode(),
+                                         dtype=np.uint8),
     }
 
 
@@ -86,13 +90,16 @@ class IndexStore:
     def save(self, index: ScanIndex, g: CSRGraph, *,
              version: Optional[int] = None,
              measure: str = "cosine",
-             provenance: Optional[IndexProvenance] = None) -> str:
+             provenance: Optional[IndexProvenance] = None,
+             profile: Optional[AutotuneProfile] = None) -> str:
         """Commit a new version; returns the committed path. ``measure``
         records the similarity measure the index was built with, so a
         consumer that will *maintain* the index (incremental updates
         recompute frontier σ) can refuse a mismatched adoption.
         ``provenance`` records how the similarities were produced (exact
-        vs LSH-sketched, sketch params); default exact."""
+        vs LSH-sketched, sketch params); default exact. ``profile``
+        records the backend autotune thresholds active at save time
+        (default = the untuned constants) as a versioned manifest leaf."""
         latest = checkpoint.latest_step(self.directory)
         if version is None:
             version = 0 if latest is None else latest + 1
@@ -104,8 +111,11 @@ class IndexStore:
         fp = index_fingerprint(index, g)
         if provenance is None:
             provenance = EXACT_PROVENANCE
+        if profile is None:
+            profile = DEFAULT_PROFILE
         return checkpoint.save(self.directory, version,
-                               _to_tree(index, g, fp, measure, provenance),
+                               _to_tree(index, g, fp, measure, provenance,
+                                        profile),
                                keep=self.keep)
 
     # -- read ----------------------------------------------------------
@@ -169,6 +179,21 @@ class IndexStore:
         if raw is None:
             return EXACT_PROVENANCE
         return IndexProvenance.from_json(bytes(raw).decode())
+
+    def profile(self, version: Optional[int] = None) -> AutotuneProfile:
+        """The :class:`AutotuneProfile` recorded at save time; checkpoints
+        predating the leaf get the untuned default — bit-for-bit the
+        constants the engine ran with before autotune existed."""
+        if version is None:
+            version = self.latest_version()
+            if version is None:
+                raise FileNotFoundError(
+                    f"no committed index under {self.directory!r}")
+        by_path = checkpoint.load_leaves(self.directory, version)
+        raw = by_path.get(checkpoint.leaf_key("backend_profile"))
+        if raw is None:
+            return DEFAULT_PROFILE
+        return AutotuneProfile.from_json(bytes(raw).decode())
 
 
 class DeltaLog:
@@ -297,9 +322,11 @@ class IndexCatalog:
 
     def save(self, name: str, index: ScanIndex, g: CSRGraph, *,
              measure: str = "cosine",
-             provenance: Optional[IndexProvenance] = None) -> str:
+             provenance: Optional[IndexProvenance] = None,
+             profile: Optional[AutotuneProfile] = None) -> str:
         return self.store(name).save(index, g, measure=measure,
-                                     provenance=provenance)
+                                     provenance=provenance,
+                                     profile=profile)
 
     def load_all(self) -> Dict[str, Tuple[ScanIndex, CSRGraph]]:
         out: Dict[str, Tuple[ScanIndex, CSRGraph]] = {}

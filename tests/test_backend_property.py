@@ -1,0 +1,65 @@
+"""Hypothesis properties for the shared padding/pow2 helpers
+(``repro.backend.padding``) — the invariants every fixed-shape trick in
+the repo leans on. Deterministic unit coverage lives in
+``test_backend.py``; this module explores the input space when hypothesis
+is installed (profiles in ``conftest.py``) and skips cleanly otherwise.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.backend import padding  # noqa: E402
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 1 << 30), st.sampled_from([1, 2, 8, 64]))
+def test_pow2ceil_properties(x, floor):
+    p = padding.pow2ceil(x, floor=floor)
+    assert p >= max(x, floor)
+    assert p & (p - 1) == 0                    # a power of two
+    assert p == 1 or p // 2 < max(x, floor, 1)  # the *smallest* one
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 1 << 30), st.sampled_from([1, 64, 128]))
+def test_pow2_bucket_matches_pow2ceil(total, floor):
+    assert padding.pow2_bucket(total, floor=floor) == \
+        padding.pow2ceil(total, floor=floor)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(1, 1 << 30), min_size=1, max_size=64))
+def test_np_pow2ceil_elementwise(xs):
+    arr = np.asarray(xs, np.int64)
+    out = padding.np_pow2ceil(arr)
+    want = np.asarray([padding.pow2ceil(int(x)) for x in xs], np.int64)
+    np.testing.assert_array_equal(out, want)
+    # np_log2 is its exact inverse on power-of-two inputs (round trip)
+    np.testing.assert_array_equal(1 << padding.np_log2(out), out)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(-1000, 1000), min_size=0, max_size=64),
+       st.integers(0, 32), st.integers(-5, 5))
+def test_pad1_roundtrip(xs, pad, fill):
+    a = np.asarray(xs, np.int32)
+    out = padding.pad1(a, pad, fill)
+    assert out.shape == (len(xs) + pad,)
+    np.testing.assert_array_equal(out[:len(xs)], a)      # prefix preserved
+    assert (out[len(xs):] == fill).all()
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 50), st.integers(1, 50),
+       st.sampled_from([1, 4, 8, 32]))
+def test_pad_to_roundtrip(r, c, mult):
+    import jax.numpy as jnp
+    x = jnp.arange(r * c, dtype=jnp.float32).reshape(r, c)
+    out = padding.pad_to(x, mult, (0, 1))
+    assert out.shape[0] % mult == 0 and out.shape[1] % mult == 0
+    assert out.shape[0] - r < mult and out.shape[1] - c < mult
+    np.testing.assert_array_equal(np.asarray(out[:r, :c]),
+                                  np.asarray(x))          # slice-back exact
+    assert float(out.sum()) == float(x.sum())             # zero padding
